@@ -1,0 +1,66 @@
+"""Ablations of the Alg.-2 under-specification resolutions (DESIGN.md §2b):
+the discrete-grid step floor and the power-probe policy. Reproduces the
+numbers cited in EXPERIMENTS.md §Perf."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import jetson_like_space, tpu_pod_space
+from repro.core.baselines import oracle
+from repro.core.coral import CORAL
+from repro.device import DeviceSimulator, jetson_like_simulator, synthetic_terms
+
+
+def _run(space, dev, tau_t, p_b, seed, **kw):
+    opt = CORAL(space, tau_t, p_b, seed=seed, **kw)
+    for _ in range(10):
+        cfg = opt.propose()
+        tau, p = dev.measure(cfg)
+        opt.observe(cfg, tau, p)
+    r = opt.result()
+    return r is not None and r.tau >= tau_t and r.power <= p_b
+
+
+def _scenarios():
+    jspace = jetson_like_space("xavier_nx")
+    mk_j = lambda s: jetson_like_simulator(jspace, 1.0, seed=s)
+    om = oracle(jspace, jetson_like_simulator(jspace, 1.0, noise=0.0), 0.0)
+    tau_j = round(om.tau * 0.55)
+    pb_j = oracle(jspace, jetson_like_simulator(jspace, 1.0, noise=0.0), tau_j).power * 1.08
+
+    pspace = tpu_pod_space()
+    terms = synthetic_terms("balanced")
+    mk_p = lambda s: DeviceSimulator(pspace, terms, seed=s)
+    om2 = oracle(pspace, DeviceSimulator(pspace, terms, noise=0.0), 0.0)
+    tau_p, pb_p = om2.tau * 0.6, om2.power * 0.62
+    return (
+        ("jetson_dual", jspace, mk_j, tau_j, pb_j),
+        ("pod_dual", pspace, mk_p, tau_p, pb_p),
+    )
+
+
+def bench_ablation_step_floor():
+    for name, space, mk, tau_t, p_b in _scenarios():
+        res = {}
+        for floor in (True, False):
+            ok = sum(
+                _run(space, mk(s), tau_t, p_b, s, step_floor=floor)
+                for s in range(8)
+            )
+            res[floor] = ok
+        row(
+            f"ablation_step_floor_{name}", 0.0,
+            f"with_floor={res[True]}/8 without={res[False]}/8 "
+            "(anchor collapse freezes the search without the floor)",
+        )
+
+
+def bench_ablation_probe_policy():
+    for name, space, mk, tau_t, p_b in _scenarios():
+        parts = []
+        for policy in ("budget_aware", "oneshot", "persistent", "off"):
+            ok = sum(
+                _run(space, mk(s), tau_t, p_b, s, probe_policy=policy)
+                for s in range(8)
+            )
+            parts.append(f"{policy}={ok}/8")
+        row(f"ablation_probe_policy_{name}", 0.0, " ".join(parts))

@@ -1,0 +1,160 @@
+"""One benchmark per paper table/figure (§IV), on the Jetson-like device
+model (Fig. 1-10, Table 4) and the TPU-pod integration."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import run_coral, jetson_like_space, tpu_pod_space
+from repro.core.baselines import alert, alert_online, oracle, preset
+from repro.device import DeviceSimulator, jetson_like_simulator, synthetic_terms
+
+# model-scale analogues of the paper's detectors (20× parameter span):
+# (scale, power slack): heavier models leave less headroom (paper §IV-C)
+MODELS = {"yolo": (1.0, 1.08), "frcnn": (6.0, 1.03), "retinanet": (12.0, 1.015)}
+DEVICES = ("xavier_nx", "orin_nano")
+
+
+def _setup(device: str, scale: float, seed: int = 0, noise: float = 0.02):
+    space = jetson_like_space(device)
+    return space, (lambda s=seed, n=noise: jetson_like_simulator(space, scale, seed=s, noise=n))
+
+
+def bench_fig1_tradeoff():
+    """Fig. 1: same-throughput configs span ~2× power; same-power configs
+    span a wide throughput range."""
+    for device in DEVICES:
+        space, mk = _setup(device, 1.0)
+        dev = mk(n=0.0)
+
+        def sweep():
+            pts = [dev.exact(c) for c in list(space.all_configs())[::5]]
+            return pts
+
+        us = timeit(sweep, iters=1, warmup=0)
+        pts = sweep()
+        taus = np.array([p[0] for p in pts])
+        pows = np.array([p[1] for p in pts])
+        # iso-throughput power spread
+        bins = np.round(taus / (taus.max() * 0.05))
+        spreads = [
+            pows[bins == b].max() / pows[bins == b].min()
+            for b in np.unique(bins)
+            if (bins == b).sum() > 5
+        ]
+        # iso-power throughput spread
+        pbins = np.round(pows / (pows.max() * 0.05))
+        tspread = [
+            taus[pbins == b].max() / taus[pbins == b].min()
+            for b in np.unique(pbins)
+            if (pbins == b).sum() > 5
+        ]
+        row(
+            f"fig1_tradeoff_{device}", us,
+            f"iso_tau_power_spread={max(spreads):.2f}x "
+            f"iso_power_tau_spread={max(tspread):.2f}x (paper: ~2x / 40-75fps)",
+        )
+
+
+def _targets(space, mk, tau_frac=0.55, pb_slack=1.08):
+    om = oracle(space, mk(n=0.0), tau_target=0.0)
+    tau_t = round(om.tau * tau_frac)
+    orc_single = oracle(space, mk(n=0.0), tau_t)
+    p_budget = orc_single.power * pb_slack
+    return tau_t, p_budget, om, orc_single
+
+
+def bench_fig3_4_single_constraint():
+    """Fig. 3/4: single-constraint (throughput target, no power cap)."""
+    for device in DEVICES:
+        space, mk = _setup(device, 1.0)
+        tau_t, _, om, orc = _targets(space, mk)
+        ratios = []
+        us = timeit(
+            lambda: ratios.append(
+                run_coral(space, mk(len(ratios)), tau_t, iters=10,
+                          seed=len(ratios))[0].tau / orc.tau
+            ),
+            iters=8, warmup=0,
+        )
+        mx = preset(space, mk(1), "max_power")
+        df = preset(space, mk(2), "default")
+        al = alert(space, mk(3), tau_t)
+        row(
+            f"fig3_4_single_{device}", us,
+            f"coral/oracle_tau=[{min(ratios):.2f}..{max(ratios):.2f}] "
+            f"alert={al.tau/orc.tau:.2f} max_power={mx.tau/orc.tau:.2f} "
+            f"default={df.tau/orc.tau:.2f} (paper: CORAL 96-100%, presets 33-60%)",
+        )
+
+
+def bench_fig5_6_dual_constraint():
+    """Fig. 5/6: strict dual constraints (power limit + throughput target)."""
+    for device in DEVICES:
+        space, mk = _setup(device, 1.0)
+        tau_t, p_b, om, orc = _targets(space, mk)
+        orc_dual = oracle(space, mk(n=0.0), tau_t, p_b)
+        feas, effs = 0, []
+        for seed in range(8):
+            out, _ = run_coral(space, mk(seed), tau_t, p_b, iters=10, seed=seed)
+            feas += out.feasible(tau_t, p_b)
+            if out.feasible(tau_t, p_b):
+                effs.append(out.efficiency / orc_dual.efficiency)
+        al = alert(space, mk(9), tau_t, p_b)
+        alo = alert_online(space, mk(10), tau_t, p_b)
+        mx = preset(space, mk(11), "max_power")
+        df = preset(space, mk(12), "default")
+        row(
+            f"fig5_6_dual_{device}", 0.0,
+            f"coral_feasible={feas}/8 coral_eff/oracle={np.mean(effs):.2f} "
+            f"alert_power={al.power:.1f}W(budget={p_b:.1f}) "
+            f"alert_online_found={alo.config is not None} "
+            f"max_power_feasible={mx.feasible(tau_t,p_b)} "
+            f"default_feasible={df.feasible(tau_t,p_b)} "
+            "(paper: CORAL meets both; ALERT busts budget; others fail)",
+        )
+
+
+def bench_fig7_10_generalization():
+    """Fig. 7-10: generalization across model scales (FRCNN, RETINANET)."""
+    for device in DEVICES:
+        for model, (scale, slack) in MODELS.items():
+            if model == "yolo":
+                continue  # covered by fig5/6
+            space, mk = _setup(device, scale)
+            tau_t, p_b, om, orc = _targets(space, mk, pb_slack=slack)
+            feas = 0
+            for seed in range(6):
+                out, _ = run_coral(space, mk(seed), tau_t, p_b, iters=10, seed=seed)
+                feas += out.feasible(tau_t, p_b)
+            al = alert(space, mk(7), tau_t, p_b)
+            alo = alert_online(space, mk(8), tau_t, p_b)
+            row(
+                f"fig7_10_{model}_{device}", 0.0,
+                f"coral_feasible={feas}/6 alert_feasible={al.feasible(tau_t,p_b)} "
+                f"alert_online_found={alo.config is not None} "
+                "(paper: gap grows with model size; baselines fail)",
+            )
+
+
+def bench_table4_space_sizes():
+    """Table 4: evaluated configuration-space sizes."""
+    for device, paper_n in (("xavier_nx", 2160), ("orin_nano", 1600)):
+        n = jetson_like_space(device).size()
+        row(f"table4_space_{device}", 0.0,
+            f"grid={n} (paper_total={paper_n}; paper prunes failed configs)")
+    row("table4_space_tpu_pod", 0.0, f"grid={tpu_pod_space().size()}")
+
+
+def bench_iteration_budget():
+    """§III-B: convergence within the 10-iteration budget vs ORACLE cost."""
+    space, mk = _setup("xavier_nx", 1.0)
+    tau_t, p_b, om, orc = _targets(space, mk)
+    dev = mk(0)
+    out, _ = run_coral(space, dev, tau_t, p_b, iters=10)
+    row(
+        "iteration_budget", 0.0,
+        f"coral_measurements={dev.n_measurements} "
+        f"oracle_measurements={space.size()} "
+        f"speedup={space.size()/dev.n_measurements:.0f}x",
+    )

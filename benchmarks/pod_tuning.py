@@ -1,0 +1,39 @@
+"""Integration benchmark: CORAL tuning the TPU pod for real dry-run
+roofline artifacts (the framework's first-class feature)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import row
+from repro.core import run_coral, tpu_pod_space
+from repro.core.baselines import oracle
+from repro.device import DeviceSimulator
+
+
+def bench_pod_tuning_from_artifacts():
+    from repro.launch.tune import terms_from_artifact
+
+    pairs = [
+        ("qwen2.5-3b", "decode_32k"),
+        ("deepseek-v2-236b", "decode_32k"),
+        ("mamba2-2.7b", "train_4k"),
+    ]
+    space = tpu_pod_space()
+    for arch, shape in pairs:
+        terms = terms_from_artifact(arch, shape)
+        if terms is None:
+            row(f"pod_tune_{arch}_{shape}", 0.0, "SKIP (no dry-run artifact)")
+            continue
+        dev0 = DeviceSimulator(space, terms, noise=0.0)
+        om = oracle(space, dev0, tau_target=0.0)
+        tau_t = om.tau * 0.6
+        p_b = dev0.exact(space.preset("max_power"))[1] * 0.8
+        orc = oracle(space, dev0, tau_t, p_b)
+        out, _ = run_coral(space, DeviceSimulator(space, terms, seed=0),
+                           tau_t, p_b, iters=10)
+        row(
+            f"pod_tune_{arch}_{shape}", 0.0,
+            f"feasible={out.feasible(tau_t, p_b)} "
+            f"coral_eff/oracle={out.efficiency/max(orc.efficiency,1e-12):.2f} "
+            f"dominant={terms.dominant}",
+        )

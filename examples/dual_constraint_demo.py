@@ -1,0 +1,36 @@
+"""The paper's §IV-B dual-constraint experiment, end to end: CORAL vs
+ORACLE / ALERT / ALERT-Online / presets on the Jetson-like device across
+the three detector-scale analogues (YOLO / FRCNN / RETINANET ≈ 1×/6×/12×).
+
+    PYTHONPATH=src python examples/dual_constraint_demo.py
+"""
+from repro.core import run_coral, jetson_like_space
+from repro.core.baselines import alert, alert_online, oracle, preset
+from repro.device import jetson_like_simulator
+
+for device_name in ("xavier_nx", "orin_nano"):
+    space = jetson_like_space(device_name)
+    # heavier models leave less power headroom (paper §IV-C)
+    for model, scale, slack in (("yolo", 1.0, 1.08), ("frcnn", 6.0, 1.03),
+                                ("retinanet", 12.0, 1.015)):
+        mk = lambda s=0, n=0.02: jetson_like_simulator(space, scale, seed=s, noise=n)
+        om = oracle(space, mk(n=0.0), tau_target=0.0)
+        tau_t = round(om.tau * 0.55)
+        p_b = oracle(space, mk(n=0.0), tau_t).power * slack
+        print(f"\n=== {device_name} / {model}:  τ ≥ {tau_t} fps,  p ≤ {p_b:.2f} W ===")
+        orc = oracle(space, mk(n=0.0), tau_t, p_b)
+        print(f"  ORACLE       : {orc.tau:6.1f} fps @ {orc.power:5.2f} W "
+              f"({orc.measurements} measurements)")
+        out, _ = run_coral(space, mk(0), tau_t, p_b, iters=10)
+        print(f"  CORAL        : {out.tau:6.1f} fps @ {out.power:5.2f} W "
+              f"feasible={out.feasible(tau_t, p_b)} (10 measurements)")
+        al = alert(space, mk(1), tau_t, p_b)
+        print(f"  ALERT        : {al.tau:6.1f} fps @ {al.power:5.2f} W "
+              f"feasible={al.feasible(tau_t, p_b)}  <- exceeds power budget")
+        alo = alert_online(space, mk(2), tau_t, p_b)
+        print(f"  ALERT-Online : found={alo.config is not None} "
+              f"feasible={alo.feasible(tau_t, p_b)}")
+        for kind in ("max_power", "default"):
+            pr = preset(space, mk(3), kind)
+            print(f"  {kind:13s}: {pr.tau:6.1f} fps @ {pr.power:5.2f} W "
+                  f"feasible={pr.feasible(tau_t, p_b)}")

@@ -1,0 +1,41 @@
+"""Quickstart: CORAL in 40 lines.
+
+Finds a pod configuration that meets a throughput target within a power
+budget — online, in 10 measurements, without offline profiling — and
+compares it against exhaustive ORACLE profiling.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import run_coral, tpu_pod_space
+from repro.core.baselines import oracle
+from repro.device import DeviceSimulator, synthetic_terms
+
+# 1. The tunable knob space (Table-2 analogue for a TPU v5e pod).
+space = tpu_pod_space()
+print(f"configuration space: {space.size()} combinations of {space.names}")
+
+# 2. The device: an analytical TPU-pod model. In production the roofline
+#    terms come from the compiled multi-pod dry-run (repro.launch.tune);
+#    here we use a synthetic balanced workload.
+terms = synthetic_terms("balanced")
+device = DeviceSimulator(space, terms, seed=0)
+
+# 3. Targets: 60% of max throughput within 62% of its power draw.
+ground_truth = DeviceSimulator(space, terms, noise=0.0)
+best = oracle(space, ground_truth, tau_target=0.0)
+tau_target = best.tau * 0.6
+p_budget = best.power * 0.62
+print(f"target: ≥{tau_target:.0f} items/s at ≤{p_budget/1e3:.1f} kW")
+
+# 4. Run CORAL (10 online measurements).
+outcome, trace = run_coral(space, device, tau_target, p_budget, iters=10)
+print(f"CORAL:  {outcome.tau:.0f} items/s @ {outcome.power/1e3:.2f} kW "
+      f"feasible={outcome.feasible(tau_target, p_budget)} "
+      f"({device.n_measurements} measurements)")
+
+# 5. Compare with exhaustive ORACLE profiling.
+orc = oracle(space, ground_truth, tau_target, p_budget)
+print(f"ORACLE: {orc.tau:.0f} items/s @ {orc.power/1e3:.2f} kW "
+      f"({orc.measurements} measurements)")
+print(f"CORAL efficiency = {outcome.efficiency/orc.efficiency:.0%} of ORACLE "
+      f"at {device.n_measurements/orc.measurements:.2%} of the profiling cost")

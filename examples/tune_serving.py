@@ -1,0 +1,36 @@
+"""CORAL against a *real measured* serving engine.
+
+Boots a reduced model, serves batched requests, measures actual decode
+tokens/sec on this host, and lets CORAL tune the pod knobs against the
+WalltimeDevice (measured base rate + analytical DVFS/power scaling — this
+container has no clock control or power rail; see DESIGN.md §2).
+
+    PYTHONPATH=src python examples/tune_serving.py
+"""
+import jax
+
+from repro.configs.registry import get_config
+from repro.configs.runtime import RunConfig
+from repro.core import run_coral, tpu_pod_space
+from repro.device.measure import WalltimeDevice
+from repro.models.transformer import ApplyCtx, init_model_params
+from repro.serving import ServingEngine
+
+cfg = get_config("qwen2.5-3b").reduced()
+rcfg = RunConfig(remat="none", moe_impl="dense")
+ctx = ApplyCtx(cfg, rcfg, None)
+params = init_model_params(jax.random.PRNGKey(0), cfg, rcfg)
+engine = ServingEngine(ctx, params, batch_size=4, max_len=96)
+
+space = tpu_pod_space()
+device = WalltimeDevice(space, engine, prompt_len=16, steps=8)
+
+tau0, p0 = device.measure(space.preset("default"))
+print(f"measured default-config decode rate: {tau0:.1f} tok/s @ {p0/1e3:.2f} kW")
+
+tau_target = tau0 * 0.9
+outcome, trace = run_coral(space, device, tau_target, p_budget=p0 * 1.1, iters=10)
+print(f"CORAL found: {outcome.config}")
+print(f"  {outcome.tau:.1f} tok/s @ {outcome.power/1e3:.2f} kW "
+      f"(target ≥{tau_target:.1f}, budget ≤{p0*1.1/1e3:.2f} kW) "
+      f"feasible={outcome.feasible(tau_target, p0*1.1)}")

@@ -1,0 +1,14 @@
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig, SSMConfig  # noqa: F401
+from repro.configs.shapes import (  # noqa: F401
+    LONG_CONTEXT_WINDOW,
+    SHAPES,
+    InputShape,
+)
+
+
+def __getattr__(name):  # lazy: avoid import cycle with registry's arch imports
+    if name in ("REGISTRY", "ARCH_IDS", "get_config"):
+        from repro.configs import registry
+
+        return getattr(registry, name)
+    raise AttributeError(name)

@@ -1,0 +1,44 @@
+"""Runtime (non-architecture) configuration: dtypes, remat, block sizes,
+sharding rule set, MoE capacity — everything the perf hillclimb tunes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # attention blocking (XLA online-softmax path; also the Pallas tile hints)
+    attn_block_q: int = 1024
+    attn_block_k: int = 1024
+    # use the blocked path above this many KV positions
+    attn_blocked_threshold: int = 2048
+    # remat policy for the scanned layer body: none | full | dots
+    remat: str = "full"
+    # sharding rule set name (see repro.sharding.specs)
+    sharding_rules: str = "megatron_fsdp"
+    # MoE
+    moe_impl: str = "auto"  # dense | expert_parallel | auto
+    capacity_factor: float = 1.25
+    # decode
+    long_context_window: int = 8192
+    use_pallas: bool = False  # TPU deployment flag; CPU CI uses XLA path
+    # decode-time tensor-parallel mode: replicate the (small) activations
+    # over the data axes and let the embed-dim contraction reduce with an
+    # activation all-reduce, instead of fsdp-gathering the weights every
+    # step (§Perf hillclimb #2).
+    decode_tp_over_data: bool = False
+
+    @property
+    def pdtype(self):
+        return _DTYPES[self.param_dtype]
+
+    @property
+    def cdtype(self):
+        return _DTYPES[self.compute_dtype]

@@ -1,0 +1,214 @@
+"""The CORAL optimizer (paper §III).
+
+Per iteration:
+  Step 1 — Reward evaluation (Alg. 1): measure (τ, p) for the current
+           config; feasible → r = τ/p, infeasible → prohibited + penalty.
+  Step 2 — Correlation analysis (§III-D): distance correlations
+           α_i = dCor(τ, s_i), β_i = dCor(p, s_i) over a sliding window of
+           the W most recent observations.
+  Step 3 — Configuration search (Alg. 2): correlation-weighted step from
+           (best, second-best) toward the feasible/efficient region.
+
+The loop runs a fixed iteration budget (10 in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core import search
+from repro.core.dcov import dcor_numpy
+from repro.core.reward import reward
+from repro.core.space import Config, ConfigSpace
+
+
+@dataclasses.dataclass
+class Observation:
+    config: Config
+    tau: float
+    power: float
+    reward: float
+
+
+@dataclasses.dataclass
+class CoralState:
+    best: Optional[Observation] = None
+    second: Optional[Observation] = None
+    last: Optional[Observation] = None
+    prohibited: Set[Config] = dataclasses.field(default_factory=set)
+    history: List[Observation] = dataclasses.field(default_factory=list)
+    aside: bool = False
+    # Lines 14-17 heuristic (cores→MIN, concurrency→MAX) state. With a
+    # finite power budget the probe re-arms every time the best config
+    # changes while still power-infeasible — the coordinated cores/
+    # concurrency move is what jumps into narrow feasible bands that
+    # one-notch walks straddle. Without a budget (single-target mode) it
+    # fires once: permanent pinning would freeze two dimensions.
+    probed_for: Optional[Config] = None
+    power_probe_done: bool = False
+
+
+class CORAL:
+    """Online throughput-power co-optimizer.
+
+    Args:
+      space: discrete hardware configuration space.
+      tau_target: throughput target (τ(s*) ≥ τ_target).
+      p_budget: power limit (p(s*) ≤ p_budget).
+      p_min: power floor for the power-saving direction (paper's p_min).
+      window: sliding-window length W for the correlation analysis.
+      seed: RNG seed for tie-breaking / prohibited-escape jitter.
+    """
+
+    def __init__(
+        self,
+        space: ConfigSpace,
+        tau_target: float,
+        p_budget: float = float("inf"),
+        p_min: float = 0.0,
+        window: int = 10,
+        seed: int = 0,
+        step_floor: bool = True,
+        probe_policy: str = "budget_aware",  # budget_aware|oneshot|persistent|off
+        gamma_mode: str = "max",  # max (paper) | directional (beyond-paper)
+    ):
+        self.space = space
+        self.tau_target = tau_target
+        self.p_budget = p_budget
+        self.p_min = p_min
+        self.window = window
+        self.rng = np.random.default_rng(seed)
+        self.step_floor = step_floor
+        self.probe_policy = probe_policy
+        self.gamma_mode = gamma_mode
+        self.state = CoralState()
+
+    # ------------------------------------------------------------------
+    # Step 2: correlation analysis over the sliding window
+    # ------------------------------------------------------------------
+    def correlations(self) -> Tuple[np.ndarray, np.ndarray]:
+        hist = self.state.history[-self.window :]
+        d = len(self.space.dims)
+        if len(hist) < 3:  # not enough samples: uniform weights
+            return np.ones(d), np.ones(d)
+        taus = np.array([o.tau for o in hist], np.float32)
+        pows = np.array([o.power for o in hist], np.float32)
+        alpha = np.zeros(d, np.float32)
+        beta = np.zeros(d, np.float32)
+        for i in range(d):
+            s = np.array([o.config[i] for o in hist], np.float32)
+            alpha[i] = dcor_numpy(taus, s)
+            beta[i] = dcor_numpy(pows, s)
+        return alpha, beta
+
+    # ------------------------------------------------------------------
+    # Step 3: propose the next configuration
+    # ------------------------------------------------------------------
+    def propose(self) -> Config:
+        st = self.state
+        n = len(st.history)
+        if n == 0:
+            return self.space.midpoint()
+        if n == 1 or st.second is None:
+            # second probe: exploit correlation-free diversity — max preset
+            # if target unmet, min if power-bound.
+            if st.last is not None and st.last.tau < self.tau_target:
+                cand = self.space.preset("max_power")
+            else:
+                cand = self.space.preset("min_power")
+            return self._escape_prohibited(cand)
+        alpha, beta = self.correlations()
+        import math
+
+        if self.probe_policy == "off":
+            probe = False
+        elif self.probe_policy == "persistent":  # Alg. 2 lines 14-17 verbatim
+            probe = st.best.power > self.p_min and st.best.tau > self.tau_target
+        elif self.probe_policy == "oneshot" or not math.isfinite(self.p_budget):
+            probe = (
+                not st.power_probe_done
+                and st.best.power > self.p_min
+                and st.best.tau > self.tau_target
+            )
+        else:  # budget_aware (default): re-arm per new best while p > budget
+            probe = (
+                st.best.config != st.probed_for
+                and st.best.tau > self.tau_target
+                and st.best.power > self.p_budget
+            )
+        cand = search.next_config(
+            self.space,
+            st.best.config,
+            st.second.config,
+            alpha,
+            beta,
+            tau_last=st.last.tau,
+            p_last=st.last.power,
+            tau_target=self.tau_target,
+            p_min=self.p_min,
+            aside=st.aside,
+            tau_best=st.best.tau,
+            p_best=st.best.power,
+            power_probe=probe,
+            step_floor=self.step_floor,
+            gamma_mode=self.gamma_mode,
+        )
+        if probe:
+            st.power_probe_done = True
+            st.probed_for = st.best.config
+        return self._escape_prohibited(cand)
+
+    def _escape_prohibited(self, cand: Config) -> Config:
+        """Skip configs on the prohibited list (Alg. 1): walk to the nearest
+        unvisited neighbor; fall back to random restart."""
+        seen = self.state.prohibited | {o.config for o in self.state.history}
+        if cand not in seen:
+            return cand
+        frontier = [cand]
+        visited = {cand}
+        for _ in range(64):
+            nxt = []
+            for c in frontier:
+                for nb in self.space.neighbors(c):
+                    if nb in visited:
+                        continue
+                    if nb not in seen:
+                        return nb
+                    visited.add(nb)
+                    nxt.append(nb)
+            if not nxt:
+                break
+            frontier = nxt
+        return self.space.random(self.rng)
+
+    # ------------------------------------------------------------------
+    # Step 1: reward evaluation & state update
+    # ------------------------------------------------------------------
+    def observe(self, config: Config, tau: float, power: float) -> float:
+        st = self.state
+        r = reward(tau, power, config, st.prohibited, self.tau_target, self.p_budget)
+        obs = Observation(tuple(config), tau, power, r)
+        st.history.append(obs)
+        # aside: last probe failed to beat the current best → flip anchors
+        st.aside = st.best is not None and r <= st.best.reward
+        if st.best is None or r > st.best.reward:
+            st.second = st.best
+            st.best = obs
+        elif st.second is None or r > st.second.reward:
+            st.second = obs
+        st.last = obs
+        return r
+
+    # ------------------------------------------------------------------
+    def result(self) -> Optional[Observation]:
+        """Best feasible observation (else best by reward)."""
+        feas = [
+            o
+            for o in self.state.history
+            if o.tau >= self.tau_target and o.power <= self.p_budget
+        ]
+        if feas:
+            return max(feas, key=lambda o: o.tau / max(o.power, 1e-9))
+        return self.state.best

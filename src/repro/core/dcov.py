@@ -1,0 +1,78 @@
+"""Distance covariance / distance correlation (paper Eq. 1-4).
+
+Székely & Rizzo (2009), "Brownian Distance Covariance". Given n paired
+observations of a metric m and a hardware setting s:
+
+    a_ij = ||m_i - m_j||,  b_ij = ||s_i - s_j||              (Eq. 1)
+    A_ij = a_ij - ā_i. - ā_.j + ā_..   (double centering)    (Eq. 2)
+    dCov²(m,s) = (1/n²) Σ_ij A_ij B_ij                        (Eq. 3)
+    dCor(m,s)  = dCov(m,s) / sqrt(dCov(m,m)·dCov(s,s))        (Eq. 4)
+
+dCor ∈ [0,1]; 0 iff statistically independent. The pure-jnp version below
+is the reference; ``repro.kernels.dcov`` is the blocked Pallas TPU twin for
+ORACLE-scale n (thousands of profiled configs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pairwise_dist(x: jax.Array) -> jax.Array:
+    """x: (n,) or (n,d) -> (n,n) euclidean distance matrix."""
+    if x.ndim == 1:
+        x = x[:, None]
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.sqrt(jnp.sum(diff.astype(jnp.float32) ** 2, axis=-1) + 0.0)
+
+
+def _double_center(a: jax.Array) -> jax.Array:
+    row = a.mean(axis=1, keepdims=True)
+    col = a.mean(axis=0, keepdims=True)
+    grand = a.mean()
+    return a - row - col + grand
+
+
+def dcov2(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Squared distance covariance (Eq. 3). Non-negative up to fp error."""
+    A = _double_center(_pairwise_dist(x))
+    B = _double_center(_pairwise_dist(y))
+    return jnp.mean(A * B)
+
+
+def dcor(x: jax.Array, y: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Distance correlation (Eq. 4) in [0, 1]; 0 for degenerate inputs."""
+    A = _double_center(_pairwise_dist(x))
+    B = _double_center(_pairwise_dist(y))
+    dxy = jnp.mean(A * B)
+    dxx = jnp.mean(A * A)
+    dyy = jnp.mean(B * B)
+    denom = jnp.sqrt(jnp.maximum(dxx * dyy, 0.0))  # dVar(x)·dVar(y) = √(dxx·dyy)
+    dcor2 = jnp.maximum(dxy, 0.0) / jnp.maximum(denom, eps)
+    val = jnp.sqrt(dcor2)
+    return jnp.where(denom < eps, 0.0, jnp.clip(val, 0.0, 1.0))
+
+
+@jax.jit
+def dcor_jit(x: jax.Array, y: jax.Array) -> jax.Array:
+    return dcor(x, y)
+
+
+def dcor_matrix(settings: jax.Array, metrics: jax.Array) -> jax.Array:
+    """Correlation weights for every (setting dim, metric dim) pair.
+
+    settings: (n, D) observations of D hardware parameters
+    metrics:  (n, M) observations of M performance metrics
+    returns:  (D, M) matrix of dCor values — column 0 is α (throughput),
+              column 1 is β (power) in the CORAL formulation (Eq. 9).
+    """
+    def one_dim(s_col):
+        return jax.vmap(lambda m_col: dcor(m_col, s_col), in_axes=1)(metrics)
+
+    return jax.vmap(one_dim, in_axes=1)(settings)
+
+
+def dcor_numpy(x: np.ndarray, y: np.ndarray) -> float:
+    """Convenience wrapper for host-side (optimizer-loop) use."""
+    return float(dcor_jit(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)))

@@ -1,0 +1,49 @@
+"""The common evaluation loop (paper Fig. 2): optimizer proposes a config,
+the device applies it and runs inference, measured (τ, p) feed back."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.core.baselines import Outcome
+from repro.core.coral import CORAL
+from repro.core.space import ConfigSpace
+
+
+@dataclasses.dataclass
+class Trace:
+    configs: List[tuple]
+    taus: List[float]
+    powers: List[float]
+    rewards: List[float]
+
+
+def run_coral(
+    space: ConfigSpace,
+    device,
+    tau_target: float,
+    p_budget: float = float("inf"),
+    p_min: float = 0.0,
+    iters: int = 10,
+    window: int = 10,
+    seed: int = 0,
+    mode: str = "dual",  # dual | throughput (single-target §IV-B)
+) -> tuple[Outcome, Trace]:
+    target = float("inf") if mode == "throughput" else tau_target
+    opt = CORAL(space, target, p_budget, p_min=p_min, window=window, seed=seed)
+    tr = Trace([], [], [], [])
+    for _ in range(iters):
+        cfg = opt.propose()
+        tau, p = device.measure(cfg)
+        r = opt.observe(cfg, tau, p)
+        tr.configs.append(cfg)
+        tr.taus.append(tau)
+        tr.powers.append(p)
+        tr.rewards.append(r)
+    if mode == "throughput":
+        best = max(opt.state.history, key=lambda o: o.tau)
+        return Outcome(best.config, best.tau, best.power, iters), tr
+    res = opt.result()
+    if res is None:
+        return Outcome(None, 0.0, 0.0, iters), tr
+    return Outcome(res.config, res.tau, res.power, iters), tr

@@ -1,0 +1,26 @@
+"""Scalar Kalman filter, as used by the ALERT baseline (Wan et al., ATC'20).
+
+ALERT models the runtime deviation between offline-profiled and currently
+observed performance as a global multiplicative slowdown factor ξ tracked
+by a Kalman filter: observed = ξ · profiled + noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class ScalarKalman:
+    x: float = 1.0  # state estimate (slowdown factor)
+    p: float = 1.0  # estimate covariance
+    q: float = 1e-3  # process noise
+    r: float = 1e-2  # measurement noise
+
+    def update(self, measured_ratio: float) -> float:
+        # predict
+        self.p += self.q
+        # update
+        k = self.p / (self.p + self.r)
+        self.x += k * (measured_ratio - self.x)
+        self.p *= 1.0 - k
+        return self.x

@@ -1,0 +1,24 @@
+"""Reward calculation — paper Algorithm 1, verbatim.
+
+Feasible  (τ ≥ τ_target and p ≤ p_budget):  r = τ/p      (efficiency, Eq. 7)
+Infeasible:  appended to the prohibited set, r = -(p/τ)   (penalty,   Eq. 8)
+"""
+from __future__ import annotations
+
+from typing import Set, Tuple
+
+Config = Tuple[float, ...]
+
+
+def reward(
+    tau: float,
+    p: float,
+    x: Config,
+    prohibited: Set[Config],
+    tau_target: float,
+    p_budget: float,
+) -> float:
+    if tau < tau_target or p > p_budget:  # Alg. 1 line 3
+        prohibited.add(tuple(x))  # line 4
+        return -(p / max(tau, 1e-9))  # line 5
+    return tau / max(p, 1e-9)  # line 7

@@ -1,0 +1,94 @@
+"""Configuration search — paper Algorithm 2.
+
+For each dimension i:
+    γ_i = max(α_i, β_i)                       (line 3)
+    Δ_i = ½ |x_i − y_i| · γ_i                 (line 4, Eq. 10)
+    (l, h) = (y_i, x_i) if aside else (x_i, y_i)   (line 5)
+    if τ_last > τ_target and p_last ≥ p_min:  v_i = l − Δ_i   (power-saving)
+    else:                                      v_i = h + Δ_i   (throughput)
+    z_i = MINMAX(ROUND(v_i), ranges_i)        (line 11 — snap to grid)
+
+Power-optimization heuristic (lines 14–17): when the best config already
+meets the throughput target but its power is still above the floor, pin
+CPU cores to MIN and concurrency to MAX (CPU is a dominant power consumer;
+concurrency compensates for the reduced host throughput).
+
+The paper leaves ``aside`` informally specified ("aside flag"). We set it
+when the *last* probe failed to improve on the best reward — flipping the
+(l, h) anchors makes the next step explore from the second-best side
+instead of re-extrapolating past the best. This interpretation is recorded
+in DESIGN.md and exercised by tests.
+
+Discrete-grid adaptation (documented deviation): the paper's MHz ranges are
+effectively continuous (100 MHz steps), so Δ_i > 0 whenever x_i ≠ y_i. On a
+coarse grid the best/second-best anchors can collapse to x_i == y_i in most
+dimensions, making Δ_i = 0 and freezing the search. We therefore floor the
+raw step at one grid notch *before* scaling by γ_i:
+
+    Δ_i = max(½|x_i − y_i|, notch_i) · γ_i
+
+so after ROUND, dimensions with strong correlation (γ_i ≳ 0.5) always move
+at least one level while weakly-correlated dimensions still "change
+minimally" (round back to their current value) — preserving the paper's
+stated semantics on a discrete grid.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core.space import (
+    CONCURRENCY_DIM,
+    CORES_DIM_CANDIDATES,
+    ConfigSpace,
+    Config,
+)
+
+
+def next_config(
+    space: ConfigSpace,
+    x: Config,  # best setting
+    y: Config,  # second-best setting
+    alpha: Sequence[float],  # dCor(τ, s_i)
+    beta: Sequence[float],  # dCor(p, s_i)
+    tau_last: float,
+    p_last: float,
+    tau_target: float,
+    p_min: float,
+    aside: bool,
+    tau_best: float,
+    p_best: float,
+    power_probe: bool = True,
+    step_floor: bool = True,
+    gamma_mode: str = "max",  # max (paper Alg.2 line 3) | directional
+) -> Config:
+    z = []
+    down = tau_last > tau_target and p_last >= p_min  # line 6
+    for i, dim in enumerate(space.dims):
+        if gamma_mode == "directional":
+            # beyond-paper: weight the step by the correlation that matches
+            # the direction's objective — β (power) when descending to save
+            # power, α (throughput) when climbing toward the target
+            gamma = beta[i] if down else alpha[i]
+        else:
+            gamma = max(alpha[i], beta[i])  # line 3
+        notch = min(
+            (abs(b - a) for a, b in zip(dim.values, dim.values[1:])),
+            default=0.0,
+        ) if step_floor else 0.0
+        delta = max(0.5 * abs(x[i] - y[i]), notch) * gamma  # line 4 + floor
+        lo, hi = (y[i], x[i]) if aside else (x[i], y[i])  # line 5
+        v = (lo - delta) if down else (hi + delta)  # lines 7/9
+        z.append(v)
+    z = list(space.clamp_round(z))  # line 11
+
+    if power_probe and p_best > p_min and tau_best > tau_target:  # lines 14-17
+        for cand in CORES_DIM_CANDIDATES:
+            if cand in space.names:
+                z[space.index(cand)] = space.dims[space.index(cand)].lo
+        if CONCURRENCY_DIM in space.names:
+            z[space.index(CONCURRENCY_DIM)] = space.dims[
+                space.index(CONCURRENCY_DIM)
+            ].hi
+    return tuple(z)

@@ -1,0 +1,8 @@
+from repro.device.hw import DEFAULT_HW, TPUv5eSpec  # noqa: F401
+from repro.device.perfmodel import PerfModel, RooflineTerms  # noqa: F401
+from repro.device.power import PowerModel  # noqa: F401
+from repro.device.simulator import (  # noqa: F401
+    DeviceSimulator,
+    jetson_like_simulator,
+    synthetic_terms,
+)

@@ -1,0 +1,30 @@
+"""Hardware constants for the target platform (TPU v5e pod) and the
+DVFS-style scaling model. These are the same constants the roofline
+analysis uses (system prompt / EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUv5eSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12  # per chip, at nominal clock
+    hbm_bw: float = 819e9  # B/s per chip, at nominal HBM clock
+    ici_bw: float = 50e9  # B/s per link
+    hbm_per_chip: float = 16e9  # bytes
+    nominal_tpu_freq: float = 940.0  # MHz — knob reference point
+    nominal_hbm_freq: float = 2665.0  # MHz — knob reference point
+    # power model (per chip) — plausible v5e-class numbers; the *structure*
+    # (static + dynamic·f³ + HBM term) is what CORAL exploits, as on Jetson.
+    p_idle_chip: float = 60.0  # W
+    p_dyn_chip: float = 120.0  # W at nominal clock, full utilization
+    p_hbm_chip: float = 30.0  # W at nominal HBM clock, fully streaming
+    # host (per pod-slice host, 1 host per 8 chips on v5e)
+    chips_per_host: int = 8
+    p_host_idle: float = 90.0  # W
+    p_host_core: float = 9.0  # W per active core at nominal host clock
+    nominal_host_freq: float = 2600.0  # MHz
+
+
+DEFAULT_HW = TPUv5eSpec()

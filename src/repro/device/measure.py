@@ -1,0 +1,68 @@
+"""WalltimeDevice: CORAL against *measured* throughput.
+
+Runs a reduced model's decode loop on the actual host (jitted XLA, real
+wall-clock tokens/sec) instead of the analytical simulator. Clock knobs
+modulate the measured base rate (this container has no DVFS control or
+power rail — the scaling and the power model are analytical, the base
+throughput and the concurrency/batching effects are real). Used by
+examples/tune_serving.py and integration tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.space import Config, ConfigSpace
+from repro.device.hw import DEFAULT_HW, TPUv5eSpec
+from repro.device.perfmodel import canon
+from repro.device.power import PowerModel
+from repro.device.perfmodel import PerfModel, RooflineTerms
+
+
+class WalltimeDevice:
+    def __init__(
+        self,
+        space: ConfigSpace,
+        engine,  # repro.serving.ServingEngine over a reduced model
+        prompt_len: int = 32,
+        steps: int = 8,
+        hw: TPUv5eSpec = DEFAULT_HW,
+        seed: int = 0,
+    ):
+        self.space = space
+        self.engine = engine
+        self.prompt_len = prompt_len
+        self.steps = steps
+        self.hw = hw
+        self.rng = np.random.default_rng(seed)
+        self.n_measurements = 0
+        self._base_rate = None  # measured once; decode rate is stable
+
+    def _measure_base(self) -> float:
+        if self._base_rate is None:
+            self._base_rate = self.engine.measure_decode_throughput(
+                self.prompt_len, self.steps
+            )
+        return self._base_rate
+
+    def exact(self, config: Config) -> Tuple[float, float]:
+        d = canon(dict(zip(self.space.names, config)))
+        base = self._measure_base()
+        # clock scaling is analytical (no DVFS control in this container)
+        f_rel = d["tpu_freq"] / self.hw.nominal_tpu_freq
+        m_rel = d["hbm_freq"] / self.hw.nominal_hbm_freq
+        c = d["concurrency"]
+        dev_rel = min(f_rel, m_rel * 1.25)
+        util = min(c * 0.45, 1.0)
+        tau = base * dev_rel * (0.55 + 0.45 * util)
+        # power: reuse the analytical pod model at n_chips=1 scale
+        terms = RooflineTerms(1e-3 / max(f_rel, 1e-3), 8e-4 / max(m_rel, 1e-3),
+                              0.0, 1e-3, 1.0, n_chips=1)
+        pm = PowerModel(PerfModel(terms, self.hw), self.hw)
+        return tau, pm.power(d)
+
+    def measure(self, config: Config) -> Tuple[float, float]:
+        self.n_measurements += 1
+        tau, p = self.exact(config)
+        return tau * (1 + self.rng.normal(0, 0.01)), p

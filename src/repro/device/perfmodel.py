@@ -1,0 +1,113 @@
+"""Analytical throughput model of a TPU pod under DVFS + concurrency.
+
+The base times come from the *compiled dry-run* of the selected
+(arch × shape × mesh): compute seconds, memory seconds and collective
+seconds at nominal clocks (EXPERIMENTS.md §Roofline). The knobs rescale
+them:
+
+    t_comp(f)   = t_comp0 · f0/f          (MXU clock)
+    t_mem(m)    = t_mem0  · m0/m          (HBM clock)
+    t_coll      = t_coll0                 (ICI links are not DVFS-scaled)
+    device step = max(t_comp, t_mem, t_coll) · contention(c)
+    host step   = t_host0 · (f_cpu0/f_cpu) · (cores0/cores)^0.7
+
+Concurrency pipelines host work against device work (classic two-stage
+pipeline): with c in-flight streams the steady-state throughput is
+
+    τ(s) = min( c / (t_host + t_dev),  1 / t_dev_contended ) · batch_rate
+
+which saturates once the device is busy — reproducing the non-linear
+knee the paper exploits (Fig. 1). Contention grows mildly with c
+(shared HBM): t_dev · (1 + κ·(c−1)).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.device.hw import DEFAULT_HW, TPUv5eSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Per-step base times at nominal clocks (seconds) + workload meta."""
+
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    t_host: float = 2.0e-3  # host-side dispatch/preprocess per step
+    items_per_step: float = 1.0  # inferences (or sequences) per device step
+    n_chips: int = 256
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+
+# knob-name aliases: TPU-pod space vs the paper's original Jetson grids
+_ALIASES = {
+    "tpu_freq": ("tpu_freq", "gpu_freq"),
+    "hbm_freq": ("hbm_freq", "mem_freq"),
+    "host_cpu_freq": ("host_cpu_freq", "cpu_freq"),
+    "host_cores": ("host_cores", "cpu_cores"),
+    "concurrency": ("concurrency",),
+}
+
+
+def canon(config: dict) -> dict:
+    out = {}
+    for canon_name, names in _ALIASES.items():
+        for n in names:
+            if n in config:
+                out[canon_name] = config[n]
+                break
+        else:
+            raise KeyError(f"missing knob {canon_name} in {sorted(config)}")
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfModel:
+    terms: RooflineTerms
+    hw: TPUv5eSpec = DEFAULT_HW
+    contention_kappa: float = 0.06  # HBM contention per extra stream
+
+    def device_time(self, tpu_freq: float, hbm_freq: float, concurrency: float) -> float:
+        t_c = self.terms.t_compute * (self.hw.nominal_tpu_freq / tpu_freq)
+        t_m = self.terms.t_memory * (self.hw.nominal_hbm_freq / hbm_freq)
+        t_l = self.terms.t_collective
+        base = max(t_c, t_m, t_l)
+        return base * (1.0 + self.contention_kappa * (concurrency - 1.0))
+
+    def host_time(self, cpu_freq: float, cores: float) -> float:
+        return (
+            self.terms.t_host
+            * (self.hw.nominal_host_freq / cpu_freq)
+            * (6.0 / cores) ** 0.7
+        )
+
+    def throughput(self, config: dict) -> float:
+        """items/sec for a knob dict (see repro.core.space.tpu_pod_space)."""
+        c = config["concurrency"]
+        t_dev = self.device_time(config["tpu_freq"], config["hbm_freq"], c)
+        t_host = self.host_time(config["host_cpu_freq"], config["host_cores"])
+        rate = min(c / (t_host + t_dev), 1.0 / t_dev)
+        return rate * self.terms.items_per_step
+
+    def utilization(self, config: dict) -> float:
+        c = config["concurrency"]
+        t_dev = self.device_time(config["tpu_freq"], config["hbm_freq"], c)
+        t_host = self.host_time(config["host_cpu_freq"], config["host_cores"])
+        rate = min(c / (t_host + t_dev), 1.0 / t_dev)
+        return min(rate * t_dev, 1.0)
+
+    def memory_boundedness(self, config: dict) -> float:
+        """Fraction of device time attributable to HBM streaming (for the
+        HBM power term)."""
+        t_c = self.terms.t_compute * (self.hw.nominal_tpu_freq / config["tpu_freq"])
+        t_m = self.terms.t_memory * (self.hw.nominal_hbm_freq / config["hbm_freq"])
+        return t_m / max(t_c + t_m, 1e-12)

@@ -1,0 +1,106 @@
+"""The tunable "device" that CORAL optimizes — the pod-level analogue of
+the paper's Jetson + tegrastats measurement loop (Fig. 2).
+
+``measure`` applies a configuration and returns noisy (throughput, power),
+like a real 1-second tegrastats sample; ``exact`` is the noise-free ground
+truth used only by ORACLE (exhaustive offline profiling).
+
+The simulator is parameterized by RooflineTerms extracted from the
+compiled multi-pod dry-run of a real (arch × shape × mesh) — see
+``repro.launch.tune`` — or by synthetic terms in unit tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.space import Config, ConfigSpace
+from repro.device.hw import DEFAULT_HW, TPUv5eSpec
+from repro.device.perfmodel import PerfModel, RooflineTerms
+from repro.device.power import PowerModel
+
+
+class DeviceSimulator:
+    def __init__(
+        self,
+        space: ConfigSpace,
+        terms: RooflineTerms,
+        hw: TPUv5eSpec = DEFAULT_HW,
+        noise: float = 0.02,
+        seed: int = 0,
+        contention_kappa: float = 0.06,
+    ):
+        self.space = space
+        self.perf = PerfModel(terms, hw, contention_kappa)
+        self.power_model = PowerModel(self.perf, hw)
+        self.noise = noise
+        self.rng = np.random.default_rng(seed)
+        self.n_measurements = 0
+
+    def _to_dict(self, config: Config) -> Dict[str, float]:
+        from repro.device.perfmodel import canon
+
+        return canon(dict(zip(self.space.names, config)))
+
+    def exact(self, config: Config) -> Tuple[float, float]:
+        d = self._to_dict(config)
+        return self.perf.throughput(d), self.power_model.power(d)
+
+    def measure(self, config: Config) -> Tuple[float, float]:
+        tau, p = self.exact(config)
+        self.n_measurements += 1
+        if self.noise:
+            tau *= 1.0 + self.rng.normal(0.0, self.noise)
+            p *= 1.0 + self.rng.normal(0.0, self.noise)
+        return max(tau, 1e-9), max(p, 1e-9)
+
+
+def synthetic_terms(kind: str = "balanced", n_chips: int = 256) -> RooflineTerms:
+    """Workload stand-ins for tests/examples before a dry-run exists."""
+    kinds = {
+        # t_compute, t_memory, t_collective, t_host, items_per_step
+        "balanced": (8e-3, 6e-3, 2e-3, 2.5e-3, 256.0),
+        "compute_bound": (20e-3, 5e-3, 2e-3, 2.0e-3, 256.0),
+        "memory_bound": (2e-3, 18e-3, 1e-3, 2.0e-3, 128.0),
+        "collective_bound": (3e-3, 4e-3, 12e-3, 2.0e-3, 32.0),
+        "host_bound": (2e-3, 2e-3, 1e-3, 12e-3, 64.0),
+    }
+    t = kinds[kind]
+    return RooflineTerms(*t[:4], items_per_step=t[4], n_chips=n_chips)
+
+
+def jetson_like_simulator(
+    space: ConfigSpace, model_scale: float = 1.0, seed: int = 0, noise: float = 0.02
+) -> "DeviceSimulator":
+    """A single-device (n_chips=1) simulator with Jetson-like magnitudes for
+    the paper-figure benchmarks: throughput in fps, power in watts.
+
+    ``model_scale`` scales compute/memory time (YOLO≈1, FRCNN≈6, RETINANET≈12
+    — the paper's 20× parameter span maps to roughly this step-time span).
+    """
+    from repro.device.hw import TPUv5eSpec
+
+    hw = TPUv5eSpec(
+        name="jetson-like",
+        nominal_tpu_freq=space.dims[2].hi,
+        nominal_hbm_freq=space.dims[3].hi,
+        nominal_host_freq=space.dims[0].hi,
+        p_idle_chip=2.2,
+        p_dyn_chip=4.5,
+        p_hbm_chip=1.2,
+        chips_per_host=1,
+        p_host_idle=1.0,
+        p_host_core=0.35,
+    )
+    terms = RooflineTerms(
+        t_compute=12e-3 * model_scale,
+        t_memory=7e-3 * model_scale,
+        t_collective=0.0,
+        t_host=16e-3,  # CPU preprocessing dominates on Jetson-class hosts
+        items_per_step=1.0,
+        n_chips=1,
+    )
+    return DeviceSimulator(space, terms, hw, noise=noise, seed=seed,
+                           contention_kappa=0.05)

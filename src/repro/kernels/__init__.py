@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot-spots (validated in interpret
+# mode on CPU against ref.py oracles):
+#   dcov            — the paper's distance-covariance computation (Eq. 1-3)
+#   flash_attention — causal/SWA/GQA online-softmax attention (prefill)
+#   ssd_scan        — Mamba2 SSD chunked scan with VMEM-carried state

@@ -1,0 +1,2 @@
+from repro.kernels.dcov.ops import dcor_pallas  # noqa: F401
+from repro.kernels.dcov.ref import dcor_ref, dcov_sums_ref  # noqa: F401

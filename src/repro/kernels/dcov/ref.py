@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the dcov kernel: materialized distance matrices."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dcov import _double_center, _pairwise_dist
+
+
+def dcov_sums_ref(x: jax.Array, y: jax.Array):
+    """(Σ A·B, Σ A², Σ B²) with full n×n materialization."""
+    A = _double_center(_pairwise_dist(x.astype(jnp.float32)))
+    B = _double_center(_pairwise_dist(y.astype(jnp.float32)))
+    return jnp.sum(A * B), jnp.sum(A * A), jnp.sum(B * B)
+
+
+def dcor_ref(x: jax.Array, y: jax.Array, eps: float = 1e-12) -> jax.Array:
+    sab, saa, sbb = dcov_sums_ref(x, y)
+    denom = jnp.sqrt(jnp.maximum(saa * sbb, 0.0))
+    val = jnp.sqrt(jnp.maximum(sab, 0.0) / jnp.maximum(denom, eps))
+    return jnp.where(denom < eps, 0.0, jnp.clip(val, 0.0, 1.0))

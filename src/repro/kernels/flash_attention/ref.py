@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) / (d**0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, v.shape[-1]).astype(v.dtype)

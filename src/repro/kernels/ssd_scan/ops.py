@@ -1,0 +1,7 @@
+"""Jit'd public wrapper for the SSD Pallas kernel."""
+from repro.kernels.ssd_scan.ssd_scan import ssd_pallas
+
+
+def ssd(x, dt, A, Bm, Cm, chunk=256, initial_state=None, interpret=True):
+    return ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                      initial_state=initial_state, interpret=interpret)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle: the chunked SSD implementation from the model zoo."""
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk=256, initial_state=None):
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk, initial_state)

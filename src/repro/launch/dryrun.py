@@ -1,0 +1,201 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax import)
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) pair on the
+production meshes, print memory/cost analysis, and write the roofline
+artifact that §Roofline and the CORAL tuner consume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --multi-pod
+"""
+import argparse
+import json
+import math
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import REGISTRY, get_config
+from repro.configs.runtime import RunConfig
+from repro.configs.shapes import SHAPES
+from repro.launch.hlo_analysis import roofline_from_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models.layers import abstract_params
+from repro.models.transformer import ApplyCtx, param_specs
+from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.sharding.specs import (
+    activation_sharding,
+    cache_shardings,
+    data_axes,
+    param_shardings,
+)
+from repro.training import AdamWConfig, make_train_step
+from repro.training.adamw import init as adamw_init
+
+
+def _batch_shardings(mesh, batch_specs, global_batch):
+    out = {}
+    for k, v in batch_specs.items():
+        out[k] = activation_sharding(mesh, global_batch, len(v.shape) - 1)
+    return out
+
+
+def lower_one(arch: str, shape_name: str, mesh, rcfg: RunConfig):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ctx = ApplyCtx(cfg, rcfg, mesh)
+    specs = param_specs(cfg)
+    params = abstract_params(specs, rcfg.pdtype)
+    p_shard = param_shardings(mesh, specs, rcfg.sharding_rules)
+    kwargs = input_specs(cfg, shape, rcfg)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        step = make_train_step(ctx, opt_cfg)
+        opt_state = jax.eval_shape(adamw_init, params)
+        opt_shard = {
+            "m": p_shard,
+            "v": p_shard,
+            "step": NamedSharding(mesh, P()),
+        }
+        b_shard = _batch_shardings(mesh, kwargs["batch"], shape.global_batch)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, opt_shard, b_shard),
+            donate_argnums=(0, 1),
+        )
+        args = (params, opt_state, kwargs["batch"])
+    elif shape.kind == "prefill":
+        step = make_prefill_step(ctx)
+        b_shard = _batch_shardings(mesh, kwargs["batch"], shape.global_batch)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        args = (params, kwargs["batch"])
+    else:  # decode
+        step = make_serve_step(ctx)
+        c_shard = cache_shardings(mesh, cfg, kwargs["cache"], shape.global_batch)
+        if rcfg.decode_tp_over_data:
+            # TP decode: tokens replicated over data; contraction over the
+            # data-sharded embed dim reduces activations instead of
+            # gathering weights.
+            t_shard = NamedSharding(mesh, P(None, None))
+        else:
+            t_shard = activation_sharding(mesh, shape.global_batch, 1)
+        jitted = jax.jit(
+            step, in_shardings=(p_shard, c_shard, t_shard), donate_argnums=(1,)
+        )
+        args = (params, kwargs["cache"], kwargs["tokens"])
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, rcfg: RunConfig,
+             out_dir: str) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.shape.values())
+    t0 = time.time()
+    lowered, compiled = lower_one(arch, shape_name, mesh, rcfg)
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    roof = roofline_from_compiled(compiled, n_chips)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "compile_seconds": round(compile_s, 1),
+        "sharding_rules": rcfg.sharding_rules,
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(
+                getattr(mem, "peak_memory_in_bytes",
+                        getattr(mem, "temp_size_in_bytes", 0))
+            ),
+        },
+        "roofline": roof.as_dict(),
+    }
+    cfg = get_config(arch)
+    rec["model_params"] = cfg.n_params()
+    rec["model_params_active"] = cfg.n_active_params()
+    rec["global_batch"] = SHAPES[shape_name].global_batch
+    rec["seq_len"] = SHAPES[shape_name].seq_len
+    # useful-compute ratio: 6·N·D (dense) / 6·N_active·D (MoE) vs HLO flops
+    shp = SHAPES[shape_name]
+    if shp.kind == "train":
+        model_flops = 6.0 * cfg.n_active_params() * shp.global_batch * shp.seq_len
+    elif shp.kind == "prefill":
+        model_flops = 2.0 * cfg.n_active_params() * shp.global_batch * shp.seq_len
+    else:
+        model_flops = 2.0 * cfg.n_active_params() * shp.global_batch
+    rec["model_flops"] = model_flops
+    hlo_global = rec["roofline"]["flops_per_chip"] * n_chips
+    rec["model_flops_ratio"] = model_flops / hlo_global if hlo_global else 0.0
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{rec['mesh']}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default=None, help="sharding rule set override")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(REGISTRY) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    rcfg = RunConfig()
+    if args.rules:
+        import dataclasses
+
+        rcfg = dataclasses.replace(rcfg, sharding_rules=args.rules)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch} × {shape} × {'2x16x16' if args.multi_pod else '16x16'}"
+            try:
+                rec = run_pair(arch, shape, args.multi_pod, rcfg, args.out)
+                r = rec["roofline"]
+                print(
+                    f"[OK] {tag}: compile={rec['compile_seconds']}s "
+                    f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB/dev "
+                    f"t_comp={r['t_compute']*1e3:.2f}ms t_mem={r['t_memory']*1e3:.2f}ms "
+                    f"t_coll={r['t_collective']*1e3:.2f}ms dominant={r['dominant']}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures.append(tag)
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+                if not args.continue_on_error:
+                    traceback.print_exc()
+                    sys.exit(1)
+    if failures:
+        print(f"{len(failures)} failures: {failures}")
+        sys.exit(1)
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

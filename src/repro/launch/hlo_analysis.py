@@ -1,0 +1,397 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+``compiled.cost_analysis()`` reports the per-device program but counts each
+``while`` body (lax.scan over layers, blocked-attention KV loops) exactly
+ONCE, which understates a 94-layer model by ~94×. We therefore implement a
+mini cost model over ``compiled.as_text()``:
+
+  * computations are parsed into instruction tables (name → shape),
+  * dot FLOPs = 2 · |result| · Π(contracting dims of lhs),
+  * op bytes  = |result| + Σ|operands| at kernel granularity (fusion
+    internals excluded — fused intermediates never touch HBM),
+  * collective operand bytes are tallied per kind,
+  * ``while`` ops multiply their body+condition costs by the trip count
+    (largest integer bound in the condition computation), recursively, so
+    nested scans (layers × attention KV blocks) compose.
+
+All quantities are per-chip (the compiled module is the per-device SPMD
+program). Validated against hand-counted matmul FLOPs and the analytic
+6·N·D in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[\w]+\[[\d,]*\](?:\{[\d,]*\})?)\s+([\w\-]+)"
+)
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_info(shape_str: str) -> Tuple[int, List[int]]:
+    """'bf16[16,4096]{1,0}' or tuple '(f32[2], s32[])' -> (bytes, dims of
+    first array component)."""
+    total = 0
+    first_dims: Optional[List[int]] = None
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        if first_dims is None:
+            first_dims = dims
+    return total, (first_dims or [])
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    op: str
+    line: str
+
+    @property
+    def bytes(self) -> int:
+        return _shape_info(self.shape_str)[0]
+
+    @property
+    def dims(self) -> List[int]:
+        return _shape_info(self.shape_str)[1]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES}
+    )
+
+    def __iadd__(self, o: "Costs"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k in self.collectives:
+            self.collectives[k] += o.collectives[k]
+        return self
+
+    def scaled(self, f: float) -> "Costs":
+        return Costs(
+            self.flops * f,
+            self.bytes * f,
+            {k: v * f for k, v in self.collectives.items()},
+        )
+
+
+class HloCostModel:
+    # ops whose operands/results we do not charge to HBM traffic
+    _FREE = {
+        "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+        "after-all", "iota", "partition-id", "replica-id",
+    }
+    # ops charged for HBM traffic (kernel granularity). Pure elementwise ops
+    # (add/multiply/convert/broadcast/...) are excluded: on the TPU backend
+    # they fuse into neighbours; the CPU-compiled module we parse fuses far
+    # less, and counting them would inflate the memory term ~10×.
+    _MEMORY_OPS = {
+        "dot", "fusion", "convolution", "copy", "transpose",
+        "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+        "reduce", "reduce-window", "sort", "select-and-scatter", "reverse",
+        "concatenate", "pad", "slice",
+    }
+
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._cost_cache: Dict[str, Costs] = {}
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{", s)
+            if m and not s.startswith("//"):
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if s == "}":
+                # stay robust to nested braces on one-liners
+                cur = cur if s != "}" else None
+                continue
+            if cur is None:
+                continue
+            im = _INSTR_RE.match(s)
+            if im:
+                self.computations[cur].append(
+                    Instr(im.group(1), im.group(2), im.group(3), s)
+                )
+        if self.entry is None and self.computations:
+            # fall back: last computation is usually main
+            self.entry = list(self.computations)[-1]
+
+    # ---------------------------------------------------------- trip count
+    def _trip_count(self, cond_name: str) -> int:
+        instrs = self.computations.get(cond_name, [])
+        best = 1
+        for i in instrs:
+            if i.op == "constant" and i.shape_str.startswith(("s32[]", "u32[]", "s64[]")):
+                cm = re.search(r"constant\((-?\d+)\)", i.line)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+        return best
+
+    # ------------------------------------------------------------- costing
+    def _dot_flops(self, instr: Instr, table: Dict[str, Instr]) -> float:
+        _, rdims = _shape_info(instr.shape_str)
+        out_elems = 1
+        for d in rdims:
+            out_elems *= d
+        lhs_m = re.search(r"dot\(\s*%?([\w.\-]+)", instr.line)
+        cdims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+        k = 1
+        if lhs_m and cdims_m and lhs_m.group(1) in table:
+            ldims = table[lhs_m.group(1)].dims
+            for ci in cdims_m.group(1).split(","):
+                if ci and int(ci) < len(ldims):
+                    k *= ldims[int(ci)]
+        return 2.0 * out_elems * k
+
+    def _op_bytes(self, instr: Instr, table: Dict[str, Instr]) -> float:
+        # slicing ops touch only the sliced region, not the whole operand
+        if instr.op in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * instr.bytes  # read region + write result
+        if instr.op in ("dynamic-update-slice", "scatter"):
+            # read+write of the updated region (≈ the update operand, which
+            # is the smallest operand); buffer itself is aliased in place
+            upd = instr.bytes
+            paren = instr.line.find("(")
+            ops = []
+            if paren >= 0:
+                for om in _OPERANDS_RE.finditer(instr.line[paren:]):
+                    if om.group(1) in table:
+                        ops.append(table[om.group(1)].bytes)
+            if len(ops) >= 2:
+                upd = min(ops[1:]) if len(ops) > 1 else instr.bytes
+            return 2.0 * upd
+        if instr.op == "fusion":
+            called = re.search(r"calls=%?([\w.\-]+)", instr.line)
+            if called and self._is_inplace_update(called.group(1), instr):
+                # in-place cache-update fusion: the big buffer is aliased;
+                # charge only the non-buffer operands (the update slice)
+                paren = instr.line.find("(")
+                ops = []
+                if paren >= 0:
+                    for om in _OPERANDS_RE.finditer(instr.line[paren:]):
+                        if om.group(1) in table:
+                            ops.append(table[om.group(1)].bytes)
+                if ops:
+                    return 2.0 * (sum(ops) - max(ops))
+        total = float(instr.bytes)
+        # fusions slicing a loop-invariant buffer (e.g. one layer of the
+        # stacked KV cache) would otherwise be charged the full buffer per
+        # trip; cap each operand at 4× the result (reductions still count).
+        cap = 4.0 * total if instr.op == "fusion" and total > 0 else float("inf")
+        paren = instr.line.find("(")
+        if paren >= 0:
+            # first parenthesized group holds the operands
+            depth = 0
+            end = paren
+            for j, ch in enumerate(instr.line[paren:], start=paren):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = j
+                        break
+            for om in _OPERANDS_RE.finditer(instr.line[paren : end + 1]):
+                op_name = om.group(1)
+                if op_name in table:
+                    total += min(float(table[op_name].bytes), cap)
+        return total
+
+    @staticmethod
+    def _dims_of(shape_str: str) -> str:
+        m = re.search(r"\[[\d,]*\]", shape_str)
+        return m.group(0) if m else ""
+
+    def _is_inplace_update(self, comp_name: str, fusion: Instr) -> bool:
+        """True if the fused computation is a dynamic-update-slice into a
+        buffer with the fusion's own result dims (aliased in place by XLA —
+        no full-buffer HBM round-trip). Dims-only compare: converts inside
+        the fusion may change the dtype."""
+        want = self._dims_of(fusion.shape_str)
+        for i in self.computations.get(comp_name, []):
+            if i.op == "dynamic-update-slice" and self._dims_of(i.shape_str) == want:
+                return True
+        return False
+
+    def _collective(self, instr: Instr) -> Optional[Tuple[str, float]]:
+        for k in _COLLECTIVES:
+            if instr.op == k or instr.op.startswith(k + "-start"):
+                rb = float(instr.bytes)
+                gm = re.search(r"replica_groups=\{?\{([\d,]+)\}", instr.line)
+                group = len(gm.group(1).split(",")) if gm else 1
+                if instr.op.endswith("-start"):
+                    rb /= 2.0  # async start result = (operand, result) tuple
+                if k == "all-gather":
+                    return k, rb / max(group, 1)
+                if k == "reduce-scatter":
+                    return k, rb * max(group, 1)
+                return k, rb
+            if instr.op == k + "-done":
+                return k, 0.0
+        return None
+
+    def cost_of(self, comp_name: str) -> Costs:
+        if comp_name in self._cost_cache:
+            return self._cost_cache[comp_name]
+        total = Costs()
+        instrs = self.computations.get(comp_name, [])
+        table = {i.name: i for i in instrs}
+        for i in instrs:
+            if i.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", i.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", i.line)
+                if bm and cm:
+                    trips = self._trip_count(cm.group(1))
+                    body = self.cost_of(bm.group(1))
+                    cond = self.cost_of(cm.group(1))
+                    inner = Costs()
+                    inner += body
+                    inner += cond
+                    total += inner.scaled(trips)
+                continue
+            if i.op in ("call", "conditional", "async-start"):
+                for cm in re.finditer(
+                    r"(?:to_apply|called_computation|branch_computations)=\{?%?([\w.\-]+)",
+                    i.line,
+                ):
+                    total += self.cost_of(cm.group(1))
+                continue
+            coll = self._collective(i)
+            if coll is not None:
+                kind, operand_bytes = coll
+                total.collectives[kind] += operand_bytes
+                total.bytes += operand_bytes
+                continue
+            if i.op == "dot":
+                total.flops += self._dot_flops(i, table)
+                total.bytes += self._op_bytes(i, table)
+                continue
+            if i.op == "convolution":
+                # approximate: 2 · |result| · (window elems · in_features)
+                _, rdims = _shape_info(i.shape_str)
+                out_elems = 1
+                for d in rdims:
+                    out_elems *= d
+                total.flops += 2.0 * out_elems  # conservative lower bound
+                total.bytes += self._op_bytes(i, table)
+                continue
+            if i.op in self._MEMORY_OPS:
+                total.bytes += self._op_bytes(i, table)
+        self._cost_cache[comp_name] = total
+        return total
+
+    def total(self) -> Costs:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_per_chip: Dict[str, float]
+    n_chips: int
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    link_bw: float = 50e9
+    xla_flops_per_chip: float = 0.0  # raw cost_analysis (loop bodies once)
+    xla_bytes_per_chip: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return sum(self.collective_per_chip.values()) / self.link_bw
+
+    @property
+    def dominant(self) -> str:
+        t = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(t, key=t.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "collective_per_chip": dict(self.collective_per_chip),
+            "n_chips": self.n_chips,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "dominant": self.dominant,
+            "xla_flops_per_chip": self.xla_flops_per_chip,
+            "xla_bytes_per_chip": self.xla_bytes_per_chip,
+        }
+
+
+def roofline_from_compiled(compiled, n_chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    model = HloCostModel(compiled.as_text())
+    c = model.total()
+    return Roofline(
+        flops_per_chip=c.flops,
+        bytes_per_chip=c.bytes,
+        collective_per_chip=c.collectives,
+        n_chips=n_chips,
+        xla_flops_per_chip=float(cost.get("flops", 0.0)),
+        xla_bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+    )
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware collective operand bytes (per chip)."""
+    return HloCostModel(hlo_text).total().collectives

@@ -1,0 +1,62 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(arch × input-shape) pair — weak-type-correct, shardable, no allocation."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.runtime import RunConfig
+from repro.configs.shapes import LONG_CONTEXT_WINDOW, InputShape
+from repro.models.transformer import abstract_cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _modality_extras(cfg: ModelConfig, b: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {}
+    if cfg.n_vision_tokens:
+        out["vision_embeds"] = sds((b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        out["enc_feats"] = sds((b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def cache_capacity(cfg: ModelConfig, shape: InputShape, rcfg: RunConfig) -> int:
+    """Decode cache capacity: full seq_len up to 32k; beyond that the
+    sub-quadratic sliding-window variant (DESIGN.md §5)."""
+    if shape.seq_len > 32_768:
+        return rcfg.long_context_window
+    return shape.seq_len
+
+
+def input_specs(
+    cfg: ModelConfig, shape: InputShape, rcfg: RunConfig = RunConfig()
+) -> Dict[str, object]:
+    """Returns the kwargs pytree for the step function of this shape.
+
+    train   -> {batch: {tokens, labels [, extras]}}
+    prefill -> {batch: {tokens [, extras]}}
+    decode  -> {cache: <abstract cache>, tokens: (B,1)}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+        batch.update(_modality_extras(cfg, b))
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), jnp.int32)}
+        batch.update(_modality_extras(cfg, b))
+        return {"batch": batch}
+    if shape.kind == "decode":
+        w = cache_capacity(cfg, shape, rcfg)
+        cache = abstract_cache(cfg, b, w)
+        return {"cache": cache, "tokens": sds((b, 1), jnp.int32)}
+    raise ValueError(shape.kind)

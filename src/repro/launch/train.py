@@ -1,0 +1,94 @@
+"""Training launcher: runs real steps on the available devices (reduced
+configs on CPU; full configs on a real pod via the same code path).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --reduced \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.configs.runtime import RunConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import ApplyCtx, init_model_params
+from repro.training import AdamWConfig, SyntheticLM, make_train_step, multimodal_extras
+from repro.training import checkpoint as ckpt
+from repro.training.adamw import init as adamw_init
+
+
+def train(
+    arch: str,
+    steps: int = 20,
+    batch: int = 8,
+    seq: int = 128,
+    reduced: bool = True,
+    lr: float = 3e-4,
+    seed: int = 0,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 0,
+    log_every: int = 5,
+):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    rcfg = RunConfig(remat="none", moe_impl="dense", param_dtype="float32")
+    ctx = ApplyCtx(cfg, rcfg, None)
+    params = init_model_params(jax.random.PRNGKey(seed), cfg, rcfg)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 1), total_steps=steps)
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(ctx, opt_cfg), donate_argnums=(0, 1))
+
+    data = SyntheticLM(cfg.vocab, seq, batch, seed=seed)
+    extras = multimodal_extras(cfg, batch, seed)
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        b.update({k: jnp.asarray(v) for k, v in extras.items()})
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(
+                f"step {i:4d}  loss={loss:.4f}  xent={float(metrics['xent']):.4f}"
+                f"  gnorm={float(metrics['grad_norm']):.3f}"
+                f"  lr={float(metrics['lr']):.2e}",
+                flush=True,
+            )
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, params, opt_state, step=i + 1, meta={"arch": arch})
+    wall = time.time() - t0
+    print(f"{steps} steps in {wall:.1f}s  ({steps * batch * seq / wall:.0f} tok/s)")
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, params, opt_state, step=steps, meta={"arch": arch})
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+    _, losses = train(
+        args.arch, args.steps, args.batch, args.seq, args.reduced, args.lr,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    first, last = np.mean(losses[:3]), np.mean(losses[-3:])
+    print(f"loss {first:.3f} -> {last:.3f} ({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.models.transformer import (  # noqa: F401
+    ApplyCtx,
+    abstract_cache,
+    abstract_model_params,
+    decode_step,
+    forward_train,
+    init_model_params,
+    model_param_axes,
+    param_specs,
+    prefill,
+)

@@ -1,0 +1,135 @@
+"""DeepSeek-V2 Multi-head Latent Attention (arXiv:2405.04434).
+
+Prefill/train: latent is expanded to per-head K/V and runs through the
+shared blocked attention. Decode: production **matrix-absorption** form —
+scores are computed directly against the cached latent (plus the shared
+RoPE key), so per-token decode cost is O(W·r) instead of O(W·H·d).
+The KV cache stores only (latent, k_rope): 512+64 floats/token.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.runtime import RunConfig
+from repro.models.attention import NEG_INF, _mask, attention
+from repro.models.layers import ParamSpec, apply_rope, rms_norm
+
+
+def mla_param_specs(cfg: ModelConfig, n_layers: int) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    L = (n_layers,)
+    lx = ("layers",)
+    return {
+        "wq_a": ParamSpec(L + (d, m.q_lora_rank), lx + ("embed", None)),
+        "q_norm": ParamSpec(L + (m.q_lora_rank,), lx + (None,), init="ones"),
+        "wq_b": ParamSpec(
+            L + (m.q_lora_rank, h * (m.qk_nope_head_dim + m.qk_rope_head_dim)),
+            lx + (None, "heads_flat"),
+        ),
+        "wkv_a": ParamSpec(
+            L + (d, m.kv_lora_rank + m.qk_rope_head_dim), lx + ("embed", None)
+        ),
+        "kv_norm": ParamSpec(L + (m.kv_lora_rank,), lx + (None,), init="ones"),
+        "wkv_b": ParamSpec(
+            L + (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)),
+            lx + (None, "heads_flat"),
+        ),
+        "wo": ParamSpec(L + (h * m.v_head_dim, d), lx + ("heads_flat", "embed")),
+    }
+
+
+def _queries(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    h = cfg.n_heads
+    b, s, _ = x.shape
+    ql = rms_norm(
+        jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
+        p["q_norm"], cfg.norm_eps,
+    )
+    q = jnp.einsum("bsr,re->bse", ql, p["wq_b"].astype(x.dtype))
+    q = q.reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    latent, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    latent = rms_norm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return latent, k_rope  # (B,S,r), (B,S,dr)
+
+
+def mla_full(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    rcfg: RunConfig,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence MLA (train / prefill). Returns (out, (latent, k_rope))."""
+    m = cfg.mla
+    h = cfg.n_heads
+    b, s, _ = x.shape
+    q_nope, q_rope = _queries(cfg, p, x, positions)
+    latent, k_rope = _latent(cfg, p, x, positions)
+    kvb = p["wkv_b"].astype(x.dtype).reshape(
+        m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    kv = jnp.einsum("bsr,rhe->bshe", latent, kvb)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope_h = jnp.broadcast_to(
+        k_rope[:, :, None, :], (b, s, h, m.qk_rope_head_dim)
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = attention(q, k, v, positions, positions, causal=True, rcfg=rcfg)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    return out, (latent, k_rope)
+
+
+def mla_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (B,1,d)
+    positions: jax.Array,  # (B,1)
+    latent_cache: jax.Array,  # (B,W,r)  — includes the just-written token
+    krope_cache: jax.Array,  # (B,W,dr)
+    kv_pos: jax.Array,  # (B,W) slot positions (negative = invalid)
+) -> jax.Array:
+    """Absorbed single-token decode."""
+    m = cfg.mla
+    h = cfg.n_heads
+    b = x.shape[0]
+    q_nope, q_rope = _queries(cfg, p, x, positions)  # (B,1,H,dn),(B,1,H,dr)
+    kvb = p["wkv_b"].astype(x.dtype).reshape(
+        m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    wk = kvb[:, :, : m.qk_nope_head_dim]  # (r,H,dn)
+    wv = kvb[:, :, m.qk_nope_head_dim :]  # (r,H,dv)
+    q_eff = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))  # (B,1,H,r)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (
+        jnp.einsum("bshr,bwr->bhsw", q_eff, latent_cache.astype(jnp.float32))
+        + jnp.einsum(
+            "bshd,bwd->bhsw",
+            q_rope.astype(jnp.float32),
+            krope_cache.astype(jnp.float32),
+        )
+    ) * scale
+    msk = _mask(positions, kv_pos, True, None)  # (B,1,W)
+    scores = jnp.where(msk[:, None, :, :], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhsw,bwr->bshr", pr, latent_cache.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", out_lat, wv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, h * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))

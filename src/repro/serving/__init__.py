@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingEngine, make_prefill_step, make_serve_step  # noqa: F401
+from repro.serving.scheduler import Request, Scheduler  # noqa: F401

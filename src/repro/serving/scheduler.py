@@ -1,0 +1,86 @@
+"""Request scheduler: groups incoming requests into batch-aligned decode
+groups and runs ``concurrency`` groups in flight — the application-level
+knob the paper tunes (§II-A "Concurrency level")."""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (prompt_len,)
+    max_new_tokens: int
+    arrived: float = dataclasses.field(default_factory=time.monotonic)
+    output: Optional[np.ndarray] = None
+    finished: float = 0.0
+
+
+class Scheduler:
+    """FIFO batcher: pulls up to ``batch_size`` same-length requests per
+    group; ``concurrency`` groups are processed round-robin so host work
+    overlaps device work (the engine pipelines on the device queue)."""
+
+    def __init__(self, engine, batch_size: int, concurrency: int = 1):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.concurrency = max(1, concurrency)
+        self.queue: Deque[Request] = collections.deque()
+        self.done: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _next_group(self) -> Optional[List[Request]]:
+        if not self.queue:
+            return None
+        group = [self.queue.popleft() for _ in range(min(self.batch_size, len(self.queue)))]
+        # pad group to batch_size by repeating the last request's shape
+        return group
+
+    def run(self) -> Dict[str, float]:
+        """Drain the queue; returns aggregate serving metrics."""
+        t0 = time.monotonic()
+        n_tokens = 0
+        groups = []
+        while True:
+            g = self._next_group()
+            if g is None:
+                break
+            groups.append(g)
+        # round-robin over `concurrency` groups at a time
+        for i in range(0, len(groups), self.concurrency):
+            inflight = groups[i : i + self.concurrency]
+            for g in inflight:
+                prompts = np.stack(
+                    [
+                        np.pad(r.prompt, (0, max(0, g[0].prompt.size - r.prompt.size)))[
+                            : g[0].prompt.size
+                        ]
+                        for r in g
+                    ]
+                )
+                if prompts.shape[0] < self.batch_size:
+                    prompts = np.pad(
+                        prompts,
+                        ((0, self.batch_size - prompts.shape[0]), (0, 0)),
+                    )
+                out = self.engine.generate(prompts, g[0].max_new_tokens)
+                for j, r in enumerate(g):
+                    r.output = out[j]
+                    r.finished = time.monotonic()
+                    n_tokens += out.shape[1]
+                self.done.extend(g)
+        wall = time.monotonic() - t0
+        lat = [r.finished - r.arrived for r in self.done] or [0.0]
+        return {
+            "throughput_tok_s": n_tokens / max(wall, 1e-9),
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
+            "requests": len(self.done),
+        }

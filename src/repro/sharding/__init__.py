@@ -1,0 +1,9 @@
+from repro.sharding.specs import (  # noqa: F401
+    RULE_SETS,
+    activation_sharding,
+    batch_spec,
+    cache_shardings,
+    data_axes,
+    param_shardings,
+    spec_for_axes,
+)

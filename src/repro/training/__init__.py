@@ -1,0 +1,8 @@
+from repro.training.adamw import AdamWConfig  # noqa: F401
+from repro.training.data import SyntheticLM, multimodal_extras  # noqa: F401
+from repro.training.train_step import (  # noqa: F401
+    cross_entropy,
+    loss_fn,
+    make_eval_step,
+    make_train_step,
+)

@@ -1,0 +1,54 @@
+"""Flat-file checkpointing (npz + JSON manifest), no external deps."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params, opt_state=None, step: int = 0, meta: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "meta": meta or {}}, f, indent=2)
+
+
+def restore(path: str, params_template, opt_template=None) -> Tuple[Any, Any, int]:
+    """Restore into the structure of the given templates."""
+
+    def unflatten(npz, template):
+        flat = dict(npz)
+        leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
+        treedef = jax.tree_util.tree_structure(template)
+        leaves = []
+        for path, leaf in leaves_paths:
+            key = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+            )
+            arr = flat[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = unflatten(np.load(os.path.join(path, "params.npz")), params_template)
+    opt = None
+    if opt_template is not None:
+        opt = unflatten(np.load(os.path.join(path, "opt_state.npz")), opt_template)
+    with open(os.path.join(path, "manifest.json")) as f:
+        step = json.load(f)["step"]
+    return params, opt, step

@@ -1,0 +1,60 @@
+"""Synthetic data pipeline.
+
+A deterministic, shardable token stream: each (step, shard) pair derives
+its batch from a counter-based PRNG, so multi-host pipelines produce
+disjoint, reproducible data without a filesystem dataset. Structure (a
+Zipf-ish unigram mixture + short-range copy structure) gives a non-trivial,
+learnable distribution so loss curves actually move in the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    copy_prob: float = 0.35  # P(token t = token t-k) — learnable structure
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        b, s = self.global_batch, self.seq_len
+        # Zipf-like unigram distribution over vocab
+        base = rng.zipf(1.3, size=(b, s + 1)) % self.vocab
+        # overlay copy structure: with prob copy_prob, token = token[t-3]
+        copy = rng.random((b, s + 1)) < self.copy_prob
+        tok = base.copy()
+        tok[:, 3:] = np.where(copy[:, 3:], tok[:, :-3], tok[:, 3:])
+        tokens = tok[:, :-1].astype(np.int32)
+        labels = tok[:, 1:].astype(np.int32)
+        return {"tokens": tokens, "labels": labels}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def multimodal_extras(
+    cfg, global_batch: int, seed: int = 0
+) -> Dict[str, np.ndarray]:
+    """Stub modality frontends (DESIGN.md carve-out): precomputed patch /
+    frame embeddings with the right shape."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    if cfg.n_vision_tokens:
+        out["vision_embeds"] = rng.normal(
+            0, 0.02, (global_batch, cfg.n_vision_tokens, cfg.d_model)
+        ).astype(np.float32)
+    if cfg.is_encoder_decoder:
+        out["enc_feats"] = rng.normal(
+            0, 0.02, (global_batch, cfg.encoder_seq_len, cfg.d_model)
+        ).astype(np.float32)
+    return out

@@ -1,0 +1,49 @@
+"""Loss + train step (pure functions, jit/pjit-ready)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ApplyCtx, forward_train
+from repro.training import adamw
+
+AUX_LOSS_COEF = 1e-2
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy in fp32. logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(ctx: ApplyCtx, params, batch) -> Tuple[jax.Array, dict]:
+    logits, aux = forward_train(ctx, params, batch)
+    xent = cross_entropy(logits, batch["labels"])
+    loss = xent + AUX_LOSS_COEF * aux
+    return loss, {"loss": loss, "xent": xent, "moe_aux": aux}
+
+
+def make_train_step(ctx: ApplyCtx, opt_cfg: adamw.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(ctx, p, batch), has_aux=True
+        )(params)
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics = dict(metrics, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(ctx: ApplyCtx):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(ctx, params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,142 @@
+"""Attention implementation tests: blocked == direct, windows, ring cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.runtime import RunConfig
+from repro.models.attention import attention
+from repro.models.transformer import _ring_kv_pos
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(b=2, sq=64, skv=64, hq=4, hkv=2, d=16):
+    q = jnp.asarray(RNG.normal(size=(b, sq, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, skv, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, skv, hkv, d)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    kp = jnp.broadcast_to(jnp.arange(skv), (b, skv))
+    return q, k, v, qp, kp
+
+
+def test_blocked_equals_direct():
+    q, k, v, qp, kp = _mk()
+    direct = attention(q, k, v, qp, kp, causal=True,
+                       rcfg=RunConfig(attn_blocked_threshold=1 << 20))
+    blocked = attention(
+        q, k, v, qp, kp, causal=True,
+        rcfg=RunConfig(attn_blocked_threshold=1, attn_block_q=16, attn_block_k=16),
+    )
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(blocked), atol=2e-5)
+
+
+def test_blocked_equals_direct_window():
+    q, k, v, qp, kp = _mk()
+    kw = dict(causal=True, window=12)
+    direct = attention(q, k, v, qp, kp,
+                       rcfg=RunConfig(attn_blocked_threshold=1 << 20), **kw)
+    blocked = attention(
+        q, k, v, qp, kp,
+        rcfg=RunConfig(attn_blocked_threshold=1, attn_block_q=16, attn_block_k=16),
+        **kw,
+    )
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(blocked), atol=2e-5)
+
+
+def test_window_masks_old_tokens():
+    """With window=1 each position attends only to itself: output = v row."""
+    b, s, h, d = 1, 8, 1, 4
+    q = jnp.ones((b, s, h, d))
+    k = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    out = attention(q, k, v, pos, pos, causal=True, window=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), atol=1e-5)
+
+
+def test_negative_kv_pos_invalid():
+    """Slots with negative positions (unwritten ring slots) are masked."""
+    q, k, v, qp, kp = _mk(sq=1, skv=8)
+    kp_valid = kp
+    kp_partial = jnp.where(kp < 4, kp, -1)  # only first 4 slots valid
+    qp1 = jnp.full((2, 1), 100)
+    out_partial = attention(q, k, v, qp1, kp_partial, causal=True)
+    out_trunc = attention(q, k[:, :4], v[:, :4], qp1, kp_valid[:, :4], causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out_partial), np.asarray(out_trunc), atol=1e-5
+    )
+
+
+def test_ring_kv_pos_semantics():
+    w = 8
+    # before wrap: slots 0..t hold 0..t; rest negative
+    p = np.asarray(_ring_kv_pos(jnp.asarray(5), w))
+    assert list(p[:6]) == [0, 1, 2, 3, 4, 5]
+    assert all(x < 0 for x in p[6:])
+    # after wrap at t=10 (w=8): slot s holds the latest p≡s (mod 8), p<=10
+    p = np.asarray(_ring_kv_pos(jnp.asarray(10), w))
+    for s, val in enumerate(p):
+        assert val % w == s and 10 - w < val <= 10
+
+
+def test_gqa_equals_repeated_heads():
+    """GQA must equal MHA with explicitly repeated KV heads."""
+    q, k, v, qp, kp = _mk(hq=4, hkv=2)
+    out_gqa = attention(q, k, v, qp, kp, causal=True)
+    k_rep = jnp.repeat(k, 2, axis=2)
+    v_rep = jnp.repeat(v, 2, axis=2)
+    # interleave to match grouped layout: group g of kv-head h is q-head h*g
+    out_mha = attention(q, k_rep, v_rep, qp, kp, causal=True)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha), atol=2e-5)
+
+
+def test_mla_decode_equals_full_attention():
+    """Absorbed MLA decode == expanded MLA attention at the last position."""
+    from repro.configs.registry import REGISTRY
+    from repro.models import mla as mla_lib
+    from repro.models.layers import abstract_params, init_params, ParamSpec
+    import jax
+
+    cfg = REGISTRY["deepseek-v2-236b"].reduced()
+    specs = mla_lib.mla_param_specs(cfg, 1)
+    params = init_params(jax.random.PRNGKey(0), specs, jnp.float32)
+    lp = jax.tree.map(lambda a: a[0], params)
+    b, s = 2, 9
+    x = jnp.asarray(RNG.normal(size=(b, s, cfg.d_model)) * 0.3, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    out_full, (latent, krope) = mla_lib.mla_full(cfg, lp, x, pos, RunConfig())
+    out_dec = mla_lib.mla_decode(
+        cfg, lp, x[:, -1:], pos[:, -1:], latent, krope, pos
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_dec[:, 0]), np.asarray(out_full[:, -1]), atol=2e-3, rtol=1e-2
+    )
+
+
+def test_swa_sliced_path_equals_direct():
+    """Static-window KV-sliced blocked attention == direct masked attention."""
+    b, s, hq, hkv, d, w = 2, 256, 4, 2, 16, 48
+    q = jnp.asarray(RNG.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    direct = attention(q, k, v, pos, pos, causal=True, window=w,
+                       rcfg=RunConfig(attn_blocked_threshold=1 << 20))
+    swa = attention(
+        q, k, v, pos, pos, causal=True, window=w,
+        rcfg=RunConfig(attn_blocked_threshold=1, attn_block_q=32, attn_block_k=32),
+    )
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(swa), atol=2e-5)
+
+
+def test_window_segments():
+    from repro.models.transformer import window_segments
+
+    assert window_segments([None, 8, 8, None]) == [
+        (0, 1, None), (1, 3, 8), (3, 4, None)
+    ]
+    assert window_segments([None, None]) == [(0, 2, None)]
+    assert window_segments([]) == []

@@ -1,0 +1,114 @@
+"""CORAL optimizer behaviour + the paper's headline claims on the device
+simulator (§IV-B semantics)."""
+import pytest
+
+from repro.core import CORAL, run_coral, tpu_pod_space, jetson_like_space
+from repro.core.baselines import alert, alert_online, oracle, preset
+from repro.device import DeviceSimulator, jetson_like_simulator, synthetic_terms
+
+
+@pytest.fixture(scope="module")
+def jspace():
+    return jetson_like_space("xavier_nx")
+
+
+def _jdev(jspace, seed=0, noise=0.02):
+    return jetson_like_simulator(jspace, 1.0, seed=seed, noise=noise)
+
+
+def test_prohibited_configs_not_reproposed(jspace):
+    opt = CORAL(jspace, tau_target=1e9, p_budget=0.0)  # everything infeasible
+    seen = set()
+    for _ in range(8):
+        cfg = opt.propose()
+        assert cfg not in seen, "re-proposed a prohibited/visited config"
+        seen.add(cfg)
+        opt.observe(cfg, tau=1.0, power=100.0)
+
+
+def test_best_second_ordering(jspace):
+    opt = CORAL(jspace, tau_target=10, p_budget=100)
+    c1, c2, c3 = list(jspace.all_configs())[:3]
+    opt.observe(c1, 20, 10)  # r=2
+    opt.observe(c2, 30, 10)  # r=3 -> best
+    opt.observe(c3, 25, 10)  # r=2.5 -> second
+    assert opt.state.best.config == c2
+    assert opt.state.second.config == c3
+
+
+def test_single_constraint_matches_oracle(jspace):
+    """Paper: CORAL achieves 96-100% of ORACLE in single-target scenarios."""
+    orc_max = oracle(jspace, _jdev(jspace, noise=0.0), tau_target=0.0)
+    tau_t = round(orc_max.tau * 0.55)
+    orc = oracle(jspace, _jdev(jspace, noise=0.0), tau_t)
+    ratios = []
+    for seed in range(5):
+        out, _ = run_coral(jspace, _jdev(jspace, seed), tau_t, iters=10, seed=seed)
+        assert out.feasible(tau_t, float("inf"))
+        ratios.append(out.tau / orc.tau)
+    assert min(ratios) >= 0.96, ratios
+
+
+def test_dual_constraint_feasible_within_budget(jspace):
+    """Paper: CORAL consistently finds valid configs in dual-constraint
+    scenarios within the 10-iteration budget."""
+    orc_max = oracle(jspace, _jdev(jspace, noise=0.0), tau_target=0.0)
+    tau_t = round(orc_max.tau * 0.55)
+    p_budget = oracle(jspace, _jdev(jspace, noise=0.0), tau_t).power * 1.08
+    ok = 0
+    for seed in range(5):
+        out, _ = run_coral(jspace, _jdev(jspace, seed), tau_t, p_budget,
+                           iters=10, seed=seed)
+        ok += out.feasible(tau_t, p_budget)
+    assert ok >= 4, f"only {ok}/5 runs feasible"
+
+
+def test_alert_exceeds_power_budget_dual(jspace):
+    """Paper: ALERT prioritizes throughput and busts strict power caps."""
+    orc_max = oracle(jspace, _jdev(jspace, noise=0.0), tau_target=0.0)
+    tau_t = round(orc_max.tau * 0.55)
+    p_budget = oracle(jspace, _jdev(jspace, noise=0.0), tau_t).power * 1.08
+    al = alert(jspace, _jdev(jspace, 3), tau_t, p_budget)
+    assert al.power > p_budget
+
+
+def test_alert_online_fails_narrow_region(jspace):
+    orc_max = oracle(jspace, _jdev(jspace, noise=0.0), tau_target=0.0)
+    tau_t = round(orc_max.tau * 0.55)
+    p_budget = oracle(jspace, _jdev(jspace, noise=0.0), tau_t).power * 1.08
+    fails = 0
+    for seed in range(5):
+        alo = alert_online(jspace, _jdev(jspace, seed), tau_t, p_budget, seed=seed)
+        fails += not alo.feasible(tau_t, p_budget)
+    assert fails >= 3, "random exploration should mostly miss the narrow region"
+
+
+def test_presets_straddle_the_tradeoff(jspace):
+    """max-power over-consumes; default under-delivers (paper Fig. 3)."""
+    mx = preset(jspace, _jdev(jspace, 1), "max_power")
+    df = preset(jspace, _jdev(jspace, 2), "default")
+    assert mx.power > 2 * df.power
+    assert mx.tau > 2 * df.tau
+
+
+def test_coral_measurement_budget(jspace):
+    """CORAL must use orders of magnitude fewer measurements than ORACLE."""
+    dev = _jdev(jspace, 0)
+    run_coral(jspace, dev, 30, iters=10)
+    assert dev.n_measurements == 10
+    assert jspace.size() > 100 * dev.n_measurements
+
+
+def test_tpu_pod_space_scenario():
+    space = tpu_pod_space()
+    terms = synthetic_terms("balanced")
+    dev0 = DeviceSimulator(space, terms, noise=0.0)
+    orc = oracle(space, dev0, tau_target=0.0)
+    tau_t = orc.tau * 0.6
+    p_b = orc.power * 0.62
+    ok = 0
+    for seed in range(5):
+        out, _ = run_coral(space, DeviceSimulator(space, terms, seed=seed),
+                           tau_t, p_b, iters=10, seed=seed)
+        ok += out.feasible(tau_t, p_b)
+    assert ok >= 3

@@ -1,0 +1,91 @@
+"""Unit + property tests for distance covariance (paper Eq. 1-4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dcov import dcor, dcor_matrix, dcov2
+
+
+def test_paper_worked_example():
+    """§III-D: α_cpu = 0.94, β_cpu = 0.99 for the given window."""
+    tau = jnp.array([15.2, 16.1, 15.8, 14.9, 15.5])
+    p = jnp.array([9800.0, 10100.0, 10050.0, 9500.0, 9750.0])
+    s = jnp.array([1200.0, 1400.0, 1400.0, 1000.0, 1200.0])
+    assert float(dcor(tau, s)) == pytest.approx(0.94, abs=0.01)
+    assert float(dcor(p, s)) == pytest.approx(0.99, abs=0.01)
+
+
+def test_perfect_linear_dependence_is_one():
+    x = jnp.arange(50.0)
+    assert float(dcor(x, 3 * x + 2)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_nonlinear_dependence_detected():
+    """Pearson(x, x²) ≈ 0 for symmetric x, but dCor must be clearly > 0."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=500)
+    y = x**2
+    pearson = abs(np.corrcoef(x, y)[0, 1])
+    d = float(dcor(jnp.asarray(x), jnp.asarray(y)))
+    assert pearson < 0.2  # linear correlation barely sees it...
+    assert d > 0.4  # ...distance correlation clearly does
+
+
+def test_independence_near_zero():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=800)
+    y = rng.normal(size=800)
+    assert float(dcor(jnp.asarray(x), jnp.asarray(y))) < 0.15
+
+
+def test_constant_input_is_zero():
+    x = jnp.arange(20.0)
+    assert float(dcor(x, jnp.zeros(20))) == 0.0
+    assert float(dcor(jnp.zeros(20), x)) == 0.0
+
+
+def test_dcov2_nonnegative_and_symmetric():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=64))
+    y = jnp.asarray(rng.normal(size=64))
+    assert float(dcov2(x, y)) >= -1e-6
+    assert float(dcov2(x, y)) == pytest.approx(float(dcov2(y, x)), rel=1e-5)
+
+
+def test_dcor_matrix_shape_and_consistency():
+    rng = np.random.default_rng(3)
+    s = jnp.asarray(rng.normal(size=(30, 5)))
+    m = jnp.asarray(rng.normal(size=(30, 2)))
+    M = dcor_matrix(s, m)
+    assert M.shape == (5, 2)
+    assert float(M[0, 0]) == pytest.approx(float(dcor(m[:, 0], s[:, 0])), abs=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(-1e3, 1e3), min_size=4, max_size=40),
+    st.lists(st.floats(-1e3, 1e3), min_size=4, max_size=40),
+)
+def test_property_dcor_in_unit_interval(xs, ys):
+    n = min(len(xs), len(ys))
+    v = float(dcor(jnp.asarray(xs[:n]), jnp.asarray(ys[:n])))
+    assert 0.0 <= v <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(
+        st.floats(-100, 100).filter(lambda v: abs(v) > 1e-3),
+        min_size=5, max_size=30, unique=True,
+    ),
+    st.floats(0.1, 10.0),
+    st.floats(-5.0, 5.0),
+)
+def test_property_scale_invariance(xs, a, b):
+    """dCor is invariant to positive affine transforms of either argument."""
+    x = jnp.asarray(xs)
+    y = x**2  # deterministic dependence
+    d1 = float(dcor(x, y))
+    d2 = float(dcor(a * x + b, y))
+    assert d1 == pytest.approx(d2, abs=5e-3)

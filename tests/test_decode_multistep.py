@@ -1,0 +1,102 @@
+"""Multi-step decode consistency: N successive decode_step calls must
+reproduce the teacher-forced forward logits at every position — across the
+attention (ring cache), MLA (latent cache), SSM (recurrent state) and
+hybrid (both) families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import REGISTRY
+from repro.configs.runtime import RunConfig
+from repro.models import (
+    ApplyCtx,
+    decode_step,
+    forward_train,
+    init_model_params,
+    prefill,
+)
+
+RCFG = RunConfig(remat="none", moe_impl="dense")
+B, S, N_DEC = 2, 24, 4  # prefill S-N_DEC tokens, decode the last N_DEC
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["qwen2.5-3b", "deepseek-v2-236b", "mamba2-2.7b", "hymba-1.5b",
+     "whisper-medium", "qwen2-vl-72b"],
+)
+def test_multistep_decode_matches_forward(name):
+    cfg = REGISTRY[name].reduced()
+    ctx = ApplyCtx(cfg, RCFG, None)
+    params = init_model_params(jax.random.PRNGKey(0), cfg, RCFG)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jnp.ones(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16) * 0.02
+    if cfg.is_encoder_decoder:
+        batch["enc_feats"] = jnp.ones(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16) * 0.02
+
+    full_logits, _ = jax.jit(lambda p, b: forward_train(ctx, p, b))(params, batch)
+
+    pre = dict(batch)
+    pre["tokens"] = tokens[:, : S - N_DEC]
+    cache, _ = jax.jit(lambda p, b: prefill(ctx, p, b, capacity=S))(params, pre)
+    dec = jax.jit(lambda p, c, t: decode_step(ctx, p, c, t))
+    for i in range(S - N_DEC, S):
+        cache, logits = dec(params, cache, tokens[:, i : i + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full_logits[:, i], np.float32),
+            atol=0.15, rtol=0.08,
+            err_msg=f"{name}: decode step at position {i} diverged",
+        )
+    assert int(cache["length"]) == S
+
+
+# ---------------------------------------------------------------------------
+# CORAL state-machine invariants under arbitrary observation sequences
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.floats(0.1, 100.0), st.floats(0.1, 100.0)),
+        min_size=1, max_size=12,
+    ),
+    st.floats(1.0, 50.0),
+    st.floats(5.0, 80.0),
+)
+def test_property_coral_invariants(measurements, tau_target, p_budget):
+    from repro.core import tpu_pod_space
+    from repro.core.coral import CORAL
+
+    space = tpu_pod_space()
+    opt = CORAL(space, tau_target, p_budget, seed=0)
+    for tau, p in measurements:
+        cfg = opt.propose()
+        assert cfg not in opt.state.prohibited, "proposed a prohibited config"
+        for v, d in zip(cfg, space.dims):
+            assert v in d.values, "proposal off the grid"
+        opt.observe(cfg, tau, p)
+        st_ = opt.state
+        # best has the max reward seen; second is <= best
+        assert st_.best.reward == max(o.reward for o in st_.history)
+        if st_.second is not None:
+            assert st_.second.reward <= st_.best.reward
+        # prohibited configs are exactly the infeasible observations
+        for o in st_.history:
+            infeasible = o.tau < tau_target or o.power > p_budget
+            assert (o.config in st_.prohibited) == any(
+                (h.config == o.config and (h.tau < tau_target or h.power > p_budget))
+                for h in st_.history
+            ) or not infeasible
+    res = opt.result()
+    feas = [o for o in opt.state.history
+            if o.tau >= tau_target and o.power <= p_budget]
+    if feas:
+        assert res.tau >= tau_target and res.power <= p_budget

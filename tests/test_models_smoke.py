@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: REDUCED same-family variants (≤2 layers,
+d_model ≤ 512, ≤4 experts) — one forward/train step on CPU, shape + NaN
+checks, and prefill→decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, REGISTRY
+from repro.configs.runtime import RunConfig
+from repro.models import (
+    ApplyCtx,
+    decode_step,
+    forward_train,
+    init_model_params,
+    prefill,
+)
+from repro.training import AdamWConfig, make_train_step
+from repro.training.adamw import init as adamw_init
+
+RCFG = RunConfig(remat="none", moe_impl="dense")
+B, S = 2, 32
+
+
+def _setup(name):
+    cfg = REGISTRY[name].reduced()
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    ctx = ApplyCtx(cfg, RCFG, None)
+    params = init_model_params(jax.random.PRNGKey(0), cfg, RCFG)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab),
+    }
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jnp.ones(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16
+        ) * 0.02
+    if cfg.is_encoder_decoder:
+        batch["enc_feats"] = jnp.ones(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        ) * 0.02
+    return cfg, ctx, params, batch
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_forward_shapes_and_no_nans(name):
+    cfg, ctx, params, batch = _setup(name)
+    logits, aux = jax.jit(lambda p, b: forward_train(ctx, p, b))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any()), f"{name}: NaN in logits"
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_one_train_step(name):
+    cfg, ctx, params, batch = _setup(name)
+    step = jax.jit(make_train_step(ctx, AdamWConfig(lr=1e-3, warmup_steps=1,
+                                                    total_steps=10)))
+    opt = adamw_init(params)
+    new_params, _, metrics = step(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"]), f"{name}: non-finite loss"
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()), params, new_params),
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_prefill_decode_consistency(name):
+    """decode(prefill(t_0..t_{n-1}), t_n) logits must match
+    forward(t_0..t_n) at position n."""
+    cfg, ctx, params, batch = _setup(name)
+    full_logits, _ = jax.jit(lambda p, b: forward_train(ctx, p, b))(params, batch)
+    pre_batch = dict(batch)
+    pre_batch.pop("labels", None)
+    pre_batch["tokens"] = batch["tokens"][:, : S - 1]
+    cache, pl_logits = jax.jit(lambda p, b: prefill(ctx, p, b, capacity=S))(params, pre_batch)
+    # prefill last-logit == forward logit at S-2
+    np.testing.assert_allclose(
+        np.asarray(pl_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, S - 2], np.float32),
+        atol=0.1, rtol=0.05,
+    )
+    new_cache, dec_logits = jax.jit(lambda p, c, t: decode_step(ctx, p, c, t))(
+        params, cache, batch["tokens"][:, S - 1 :]
+    )
+    assert int(new_cache["length"]) == S
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, S - 1], np.float32),
+        atol=0.1, rtol=0.05,
+    )
+
+
+def test_param_counts_match_assignment():
+    """Analytic parameter counts of the FULL configs match the assigned
+    model sizes (±10% where the assignment's own numbers allow)."""
+    expect = {
+        "granite-8b": 8.2e9,
+        "qwen2-vl-72b": 72.7e9,
+        "mamba2-2.7b": 2.8e9,
+        "deepseek-v2-236b": 236e9,
+        "internlm2-20b": 19.9e9,
+        "whisper-medium": 1.0e9,
+        "qwen3-moe-235b-a22b": 235e9,
+        "qwen2.5-3b": 3.4e9,
+        "hymba-1.5b": 1.6e9,
+    }
+    for name, n in expect.items():
+        got = REGISTRY[name].n_params()
+        assert abs(got - n) / n < 0.1, (name, got, n)
+    assert REGISTRY["deepseek-v2-236b"].n_active_params() == pytest.approx(
+        21.4e9, rel=0.1
+    )
+    assert REGISTRY["qwen3-moe-235b-a22b"].n_active_params() == pytest.approx(
+        22e9, rel=0.1
+    )

@@ -1,0 +1,120 @@
+"""Algorithm 1 (reward) and Algorithm 2 (search) unit tests."""
+import pytest
+
+from repro.core.reward import reward
+from repro.core.search import next_config
+from repro.core.space import tpu_pod_space
+
+
+def test_reward_feasible_is_efficiency():
+    ps = set()
+    r = reward(tau=40.0, p=8.0, x=(1,), prohibited=ps, tau_target=30, p_budget=10)
+    assert r == pytest.approx(5.0)
+    assert not ps
+
+
+def test_reward_infeasible_penalty_and_prohibited():
+    ps = set()
+    r = reward(tau=20.0, p=8.0, x=(1, 2), prohibited=ps, tau_target=30, p_budget=10)
+    assert r == pytest.approx(-0.4)
+    assert (1, 2) in ps
+
+
+def test_reward_power_violation():
+    ps = set()
+    r = reward(tau=40.0, p=12.0, x=(3,), prohibited=ps, tau_target=30, p_budget=10)
+    assert r < 0 and (3,) in ps
+
+
+def test_infeasible_always_ranks_below_feasible():
+    ps = set()
+    r_feas = reward(1.0, 1000.0, (0,), ps, tau_target=0.5, p_budget=2000)
+    r_infeas = reward(1000.0, 1.0, (1,), ps, tau_target=2000, p_budget=2000)
+    assert r_feas > r_infeas
+
+
+def _uniform(space, v=1.0):
+    return [v] * len(space.dims)
+
+
+def test_search_moves_down_when_target_met():
+    space = tpu_pod_space()
+    x = space.preset("max_power")
+    y = space.preset("default")
+    z = next_config(
+        space, x, y, _uniform(space), _uniform(space),
+        tau_last=100, p_last=50, tau_target=10, p_min=0, aside=False,
+        tau_best=100, p_best=50, power_probe=False,
+    )
+    # τ met and power above floor -> every dim moves toward lower values
+    for zi, xi in zip(z, x):
+        assert zi <= xi
+
+
+def test_search_moves_up_when_target_unmet():
+    space = tpu_pod_space()
+    x = space.preset("default")
+    y = space.preset("min_power")
+    z = next_config(
+        space, x, y, _uniform(space), _uniform(space),
+        tau_last=5, p_last=50, tau_target=10, p_min=0, aside=False,
+        tau_best=5, p_best=50, power_probe=False,
+    )
+    for zi, yi in zip(z, y):
+        assert zi >= yi
+
+
+def test_search_result_on_grid():
+    space = tpu_pod_space()
+    z = next_config(
+        space, space.preset("max_power"), space.preset("default"),
+        _uniform(space, 0.7), _uniform(space, 0.3),
+        tau_last=100, p_last=50, tau_target=10, p_min=0, aside=False,
+        tau_best=100, p_best=50, power_probe=False,
+    )
+    for zi, dim in zip(z, space.dims):
+        assert zi in dim.values
+
+
+def test_weak_correlation_dims_change_minimally():
+    """γ_i ≈ 0 dims must stay put even when anchors differ."""
+    space = tpu_pod_space()
+    x = space.preset("max_power")
+    y = space.preset("default")
+    alpha = [0.0] * len(space.dims)
+    beta = [0.0] * len(space.dims)
+    z = next_config(
+        space, x, y, alpha, beta,
+        tau_last=100, p_last=50, tau_target=10, p_min=0, aside=False,
+        tau_best=100, p_best=50, power_probe=False,
+    )
+    assert tuple(z) == tuple(x)
+
+
+def test_power_probe_pins_cores_min_concurrency_max():
+    space = tpu_pod_space()
+    z = next_config(
+        space, space.preset("max_power"), space.preset("default"),
+        _uniform(space), _uniform(space),
+        tau_last=100, p_last=50, tau_target=10, p_min=0, aside=False,
+        tau_best=100, p_best=50, power_probe=True,
+    )
+    i_cores = space.index("host_cores")
+    i_conc = space.index("concurrency")
+    assert z[i_cores] == space.dims[i_cores].lo
+    assert z[i_conc] == space.dims[i_conc].hi
+
+
+def test_aside_flips_anchors():
+    space = tpu_pod_space()
+    x = space.preset("max_power")
+    y = space.preset("min_power")
+    kw = dict(
+        tau_last=100, p_last=50, tau_target=10, p_min=0,
+        tau_best=100, p_best=50, power_probe=False,
+    )
+    g = _uniform(space)
+    z_no = next_config(space, x, y, g, g, aside=False, **kw)
+    z_yes = next_config(space, x, y, g, g, aside=True, **kw)
+    # down-direction from l: l is x when aside=False, y when aside=True
+    assert z_no != z_yes

@@ -1,0 +1,228 @@
+"""Sharding rules + HLO cost-model tests (multi-device paths exercised in
+a subprocess with forced host devices — conftest keeps this process at 1)."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import HloCostModel, _shape_info
+from repro.models.layers import ParamSpec
+from repro.sharding.specs import RULE_SETS, spec_for_axes
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_spec_for_axes_divisible():
+    p = spec_for_axes(
+        _FakeMesh(), ("embed", "ff"), (4096, 14336), RULE_SETS["megatron_fsdp"]
+    )
+    assert tuple(p) == ("data", "model")
+
+
+def test_spec_for_axes_indivisible_replicates():
+    # a 24-wide kv projection cannot shard over a 16-way model axis
+    p = spec_for_axes(
+        _FakeMesh(), ("embed", "kv_heads_flat"), (2048, 24),
+        RULE_SETS["megatron_fsdp"],
+    )
+    assert tuple(p) == ("data", None)
+
+
+def test_spec_no_axis_reuse():
+    p = spec_for_axes(
+        _FakeMesh(), ("ff", "experts"), (1536, 160), RULE_SETS["megatron_fsdp"]
+    )
+    # both map to "model" but an axis may be used once
+    assert tuple(p).count("model") == 1
+
+
+def test_shape_info():
+    b, dims = _shape_info("bf16[16,4096,2048]{2,1,0}")
+    assert b == 16 * 4096 * 2048 * 2
+    assert dims == [16, 4096, 2048]
+    b2, _ = _shape_info("(f32[8,8], s32[])")
+    assert b2 == 8 * 8 * 4 + 4
+
+
+HLO_FIXTURE = textwrap.dedent(
+    """
+    HloModule test
+
+    %body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+      %p = (s32[], f32[4,4]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      %y = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[4,4]{1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%sum
+      ROOT %t = (s32[], f32[4,4]) tuple(%ni, %ar)
+    }
+
+    %cond (p: (s32[], f32[4,4])) -> pred[] {
+      %p = (s32[], f32[4,4]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+      %a = f32[4,4]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[4,4]) tuple(%zero, %a)
+      %w = (s32[], f32[4,4]) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+    }
+    """
+)
+
+
+def test_cost_model_loop_multiplication():
+    m = HloCostModel(HLO_FIXTURE)
+    c = m.total()
+    # dot: 2*4*4*4 = 128 flops, ×10 trips
+    assert c.flops == pytest.approx(128 * 10)
+    # all-reduce operand = result bytes = 64 floats? (4x4 f32 = 64B), ×10
+    assert c.collectives["all-reduce"] == pytest.approx(64 * 10)
+
+
+def test_cost_model_on_real_scan():
+    """Compiled lax.scan of matmuls: flops must scale with trip count."""
+    import jax
+    import jax.numpy as jnp
+
+    n, trips = 64, 7
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.dot(c, w, preferred_element_type=jnp.float32), None
+
+        y, _ = jax.lax.scan(body, x, None, length=trips)
+        return y
+
+    compiled = (
+        jax.jit(f)
+        .lower(
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+        )
+        .compile()
+    )
+    c = HloCostModel(compiled.as_text()).total()
+    expect = 2 * n**3 * trips
+    assert c.flops == pytest.approx(expect, rel=0.05), (c.flops, expect)
+
+
+SUBPROC_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.registry import REGISTRY
+from repro.configs.runtime import RunConfig
+from repro.models import moe as moe_lib
+from repro.models.layers import init_params
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = REGISTRY["qwen3-moe-235b-a22b"].reduced()
+rcfg = RunConfig(capacity_factor=8.0)  # high cf: no dropping -> exact match
+specs = moe_lib.moe_param_specs(cfg, 1)
+params = init_params(jax.random.PRNGKey(0), specs, jnp.float32)
+lp = jax.tree.map(lambda a: a[0], params)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model), jnp.float32)
+y_dense, aux_d = moe_lib.moe_ffn_dense(cfg, lp, x)
+with mesh:
+    y_ep, aux_e = jax.jit(lambda xx: moe_lib.moe_ffn_ep(cfg, rcfg, mesh, lp, xx))(x)
+err = float(jnp.max(jnp.abs(y_dense - y_ep)))
+aerr = abs(float(aux_d) - float(aux_e))
+assert err < 2e-4, f"EP vs dense mismatch: {err}"
+# aux is estimated per model-shard token slice (pmean'd): a small-sample
+# estimator of the dense global aux, not bit-identical
+assert aerr < 0.5, f"aux mismatch: {aerr}"
+print("EP_OK", err)
+"""
+
+
+def test_expert_parallel_matches_dense_subprocess():
+    """The shard_map expert-parallel MoE must equal the dense reference
+    (run with 8 forced host devices in a subprocess)."""
+    r = subprocess.run(
+        [sys.executable, "-c", SUBPROC_SNIPPET],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "EP_OK" in r.stdout
+
+
+SUBPROC_2D = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs.registry import REGISTRY
+from repro.configs.runtime import RunConfig
+from repro.models import moe as moe_lib
+from repro.models.layers import init_params
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rcfg = RunConfig(capacity_factor=8.0)
+for arch in ("qwen3-moe-235b-a22b", "deepseek-v2-236b"):
+    cfg = REGISTRY[arch].reduced()
+    specs = moe_lib.moe_param_specs(cfg, 1)
+    params = init_params(jax.random.PRNGKey(0), specs, jnp.float32)
+    lp = jax.tree.map(lambda a: a[0], params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 2, cfg.d_model), jnp.float32)
+    y_dense, _ = moe_lib.moe_ffn_dense(cfg, lp, x)
+    with mesh:
+        y_2d, _ = jax.jit(lambda xx: moe_lib.moe_ffn_ep2d(cfg, rcfg, mesh, lp, xx))(x)
+    err = float(jnp.max(jnp.abs(y_dense - y_2d)))
+    assert err < 2e-4, (arch, err)
+print("EP2D_OK")
+"""
+
+
+def test_expert_parallel_2d_matches_dense_subprocess():
+    """The serving 2-D expert sharding (experts x d_ff) must equal dense."""
+    r = subprocess.run(
+        [sys.executable, "-c", SUBPROC_2D],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "EP2D_OK" in r.stdout
+
+
+HLO_INPLACE_FIXTURE = textwrap.dedent(
+    """
+    HloModule inplace
+
+    %fused_computation (p0: f32[8,128], p1: f32[1,128], p2: s32[]) -> f32[8,128] {
+      %p0 = f32[8,128]{1,0} parameter(0)
+      %p1 = f32[1,128]{1,0} parameter(1)
+      %p2 = s32[] parameter(2)
+      %z = s32[] constant(0)
+      ROOT %dus = f32[8,128]{1,0} dynamic-update-slice(%p0, %p1, %p2, %z)
+    }
+
+    ENTRY %main (a: f32[8,128], u: f32[1,128], i: s32[]) -> f32[8,128] {
+      %a = f32[8,128]{1,0} parameter(0)
+      %u = f32[1,128]{1,0} parameter(1)
+      %i = s32[] parameter(2)
+      ROOT %f = f32[8,128]{1,0} fusion(%a, %u, %i), kind=kLoop, calls=%fused_computation
+    }
+    """
+)
+
+
+def test_cost_model_inplace_dus_fusion():
+    """In-place cache-update fusions charge only the update slice."""
+    m = HloCostModel(HLO_INPLACE_FIXTURE)
+    c = m.total()
+    # 2 × (update 1×128×4B + index 4B) — NOT the 8×128 buffer
+    assert c.bytes <= 2 * (128 * 4 + 8), c.bytes

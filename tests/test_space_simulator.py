@@ -1,0 +1,115 @@
+"""Config space + device simulator tests (incl. hypothesis properties)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.space import jetson_like_space, tpu_pod_space
+from repro.device import DeviceSimulator, synthetic_terms
+from repro.device.perfmodel import canon
+
+
+def test_space_sizes_match_table2_structure():
+    assert tpu_pod_space().size() == 8 * 5 * 6 * 3 * 5
+    assert jetson_like_space("xavier_nx").size() == 8 * 5 * 6 * 3 * 3
+    assert jetson_like_space("orin_nano").size() == 8 * 5 * 4 * 2 * 5
+
+
+def test_snap_to_grid():
+    sp = tpu_pod_space()
+    cfg = sp.snap([1234, 3.7, 700, 2000, 2.2])
+    for v, d in zip(cfg, sp.dims):
+        assert v in d.values
+
+
+def test_presets():
+    sp = tpu_pod_space()
+    assert sp.preset("max_power") == tuple(d.hi for d in sp.dims)
+    default = sp.preset("default")
+    assert default[sp.index("concurrency")] == sp.dims[sp.index("concurrency")].lo
+
+
+def test_neighbors_differ_in_one_dim():
+    sp = tpu_pod_space()
+    c = sp.preset("default")
+    for nb in sp.neighbors(c):
+        diffs = sum(a != b for a, b in zip(c, nb))
+        assert diffs == 1
+
+
+def test_canon_aliases():
+    d = canon({"cpu_freq": 1, "cpu_cores": 2, "gpu_freq": 3, "mem_freq": 4,
+               "concurrency": 5})
+    assert d == {"host_cpu_freq": 1, "host_cores": 2, "tpu_freq": 3,
+                 "hbm_freq": 4, "concurrency": 5}
+
+
+@pytest.fixture(scope="module")
+def dev():
+    return DeviceSimulator(tpu_pod_space(), synthetic_terms("balanced"), noise=0.0)
+
+
+def test_power_monotone_in_tpu_freq(dev):
+    sp = dev.space
+    base = list(sp.preset("default"))
+    i = sp.index("tpu_freq")
+    powers = []
+    for f in sp.dims[i].values:
+        c = list(base)
+        c[i] = f
+        powers.append(dev.exact(tuple(c))[1])
+    assert all(a <= b + 1e-6 for a, b in zip(powers, powers[1:]))
+
+
+def test_throughput_monotone_in_tpu_freq_when_compute_bound():
+    sp = tpu_pod_space()
+    d = DeviceSimulator(sp, synthetic_terms("compute_bound"), noise=0.0)
+    base = list(sp.preset("max_power"))
+    i = sp.index("tpu_freq")
+    taus = []
+    for f in sp.dims[i].values:
+        c = list(base)
+        c[i] = f
+        taus.append(d.exact(tuple(c))[0])
+    assert all(a <= b + 1e-6 for a, b in zip(taus, taus[1:]))
+
+
+def test_hbm_freq_irrelevant_when_compute_bound():
+    sp = tpu_pod_space()
+    d = DeviceSimulator(sp, synthetic_terms("compute_bound"), noise=0.0)
+    base = list(sp.preset("max_power"))
+    i = sp.index("hbm_freq")
+    taus = set()
+    for f in sp.dims[i].values:
+        c = list(base)
+        c[i] = f
+        taus.add(round(d.exact(tuple(c))[0], 6))
+    assert len(taus) == 1  # memory clock can't move a compute-bound workload
+
+
+def test_same_throughput_different_power_exists(dev):
+    """The paper's Fig.-1 motivation: ~equal τ at ≥1.3× power spread."""
+    taus = {}
+    for c in list(dev.space.all_configs())[::7]:
+        t, p = dev.exact(c)
+        taus.setdefault(round(t / 500), []).append(p)
+    spreads = [max(v) / min(v) for v in taus.values() if len(v) > 3]
+    assert max(spreads) > 1.3
+
+
+def test_measure_noise_and_counting():
+    d = DeviceSimulator(tpu_pod_space(), synthetic_terms("balanced"),
+                        noise=0.05, seed=0)
+    c = d.space.preset("default")
+    vals = {d.measure(c)[0] for _ in range(5)}
+    assert len(vals) > 1  # noisy
+    assert d.n_measurements == 5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 3599))
+def test_property_simulator_outputs_positive(idx):
+    sp = tpu_pod_space()
+    dev = DeviceSimulator(sp, synthetic_terms("balanced"), noise=0.0)
+    cfgs = list(sp.all_configs())
+    tau, p = dev.exact(cfgs[idx % len(cfgs)])
+    assert tau > 0 and p > 0
