@@ -1,7 +1,9 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Callable
 
 
@@ -17,3 +19,9 @@ def timeit(fn: Callable, iters: int = 3, warmup: int = 1) -> float:
 
 def row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def emit_json(path: Path, payload: dict) -> None:
+    """Write a machine-readable benchmark record (sorted keys, trailing
+    newline) so successive PRs can diff the perf trajectory."""
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")

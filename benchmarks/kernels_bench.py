@@ -1,15 +1,23 @@
 """Micro-benchmarks for the Pallas kernels (interpret mode on CPU — the
-derived column reports correctness vs oracle, not TPU speed)."""
+derived column reports correctness vs oracle, not TPU speed) plus the
+vectorized-analytics suite that records BENCH_analytics.json."""
 from __future__ import annotations
+
+import os
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, timeit
-from repro.core.dcov import dcor
-from repro.kernels.dcov import dcor_pallas, dcor_ref
+from benchmarks.common import emit_json, row, timeit
+from repro.core.dcov import dcor, dcor_all, dcor_numpy
+from repro.kernels.dcov import dcor_all_pallas, dcor_pallas, dcor_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention_bhsd
 from repro.kernels.ssd_scan import ssd, ssd_ref
+
+ANALYTICS_JSON = Path(__file__).resolve().parent.parent / "BENCH_analytics.json"
+# CI smoke: fewer timing iterations (QUICK=0/false/empty means full run)
+QUICK = os.environ.get("QUICK", "").lower() not in ("", "0", "false")
 
 
 def bench_dcov_kernel():
@@ -80,3 +88,135 @@ def bench_coral_iteration_overhead():
     row("coral_correlation_step", us, "5 dims × 2 metrics, window=10")
     us2 = timeit(lambda: opt.propose(), iters=5)
     row("coral_propose_step", us2, "Alg-2 + prohibited-set escape")
+
+
+# ---------------------------------------------------------------------------
+# Vectorized-analytics suite — loop-vs-batched timings, recorded to
+# BENCH_analytics.json so later PRs can track the perf trajectory.
+# ---------------------------------------------------------------------------
+
+
+def bench_batched_dcor(record: dict | None = None):
+    """CORAL's correlation step: 2×D per-pair dcor calls vs one dcor_all."""
+    w, d, m = 10, 5, 2
+    rng = np.random.default_rng(0)
+    settings = rng.normal(size=(w, d)).astype(np.float32)
+    metrics = rng.normal(size=(w, m)).astype(np.float32)
+
+    def loop():
+        out = np.zeros((d, m), np.float32)
+        for i in range(d):
+            for j in range(m):
+                out[i, j] = dcor_numpy(metrics[:, j], settings[:, i])
+        return out
+
+    def batched():
+        return np.asarray(
+            dcor_all(jnp.asarray(settings), jnp.asarray(metrics), np.int32(w))
+        )
+
+    iters = 3 if QUICK else 20
+    us_loop = timeit(loop, iters=iters)
+    us_batched = timeit(batched, iters=iters)
+    err = float(np.abs(loop() - batched()).max())
+    speedup = us_loop / max(us_batched, 1e-9)
+    row(
+        f"dcor_window_W{w}_D{d}",
+        us_batched,
+        f"loop={us_loop:.0f}us speedup={speedup:.1f}x err={err:.1e}",
+    )
+    if record is not None:
+        record[f"dcor_window_W{w}_D{d}"] = {
+            "loop_us": us_loop,
+            "batched_us": us_batched,
+            "speedup": speedup,
+            "max_abs_err": err,
+        }
+
+
+def bench_batched_dcor_pallas(record: dict | None = None):
+    """ORACLE-scale batched Gram kernel vs C·(C−1)/2 + C pairwise launches."""
+    n, d, m = 512, 5, 2
+    rng = np.random.default_rng(1)
+    settings = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    metrics = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+
+    def pairwise():
+        return np.array(
+            [
+                [float(dcor_pallas(metrics[:, j], settings[:, i], block=128))
+                 for j in range(m)]
+                for i in range(d)
+            ]
+        )
+
+    def batched():
+        return np.asarray(dcor_all_pallas(settings, metrics, block=128))
+
+    iters = 1 if QUICK else 3
+    us_pair = timeit(pairwise, iters=iters)
+    us_batched = timeit(batched, iters=iters)
+    err = float(np.abs(pairwise() - batched()).max())
+    speedup = us_pair / max(us_batched, 1e-9)
+    row(
+        f"dcor_all_pallas_n{n}",
+        us_batched,
+        f"pairwise={us_pair:.0f}us speedup={speedup:.1f}x err={err:.1e} "
+        "(interpret mode)",
+    )
+    if record is not None:
+        record[f"dcor_all_pallas_n{n}_D{d}_M{m}"] = {
+            "pairwise_us": us_pair,
+            "batched_us": us_batched,
+            "speedup": speedup,
+            "max_abs_err": err,
+        }
+
+
+def bench_oracle_vectorized(record: dict | None = None):
+    """Exhaustive search on the 2160-config Xavier-NX space: scalar Python
+    sweep vs one array-based evaluation."""
+    from repro.core import jetson_like_space
+    from repro.core.baselines import oracle, oracle_scalar
+    from repro.device import jetson_like_simulator
+
+    space = jetson_like_space("xavier_nx")
+    dev = jetson_like_simulator(space, 1.0, noise=0.0)
+    tau_t = 30.0
+
+    iters = 1 if QUICK else 3
+    us_scalar = timeit(lambda: oracle_scalar(space, dev, tau_t), iters=iters)
+    us_vec = timeit(lambda: oracle(space, dev, tau_t), iters=iters)
+    same = oracle(space, dev, tau_t).config == oracle_scalar(space, dev, tau_t).config
+    speedup = us_scalar / max(us_vec, 1e-9)
+    row(
+        f"oracle_xavier_nx_{space.size()}",
+        us_vec,
+        f"scalar={us_scalar:.0f}us speedup={speedup:.1f}x same_config={same}",
+    )
+    if record is not None:
+        record[f"oracle_xavier_nx_{space.size()}"] = {
+            "scalar_us": us_scalar,
+            "vectorized_us": us_vec,
+            "speedup": speedup,
+            "same_config": bool(same),
+        }
+
+
+def bench_analytics_suite():
+    """Run the analytics benches and emit BENCH_analytics.json."""
+    record: dict = {}
+    bench_batched_dcor(record)
+    bench_batched_dcor_pallas(record)
+    bench_oracle_vectorized(record)
+    payload = {
+        "regenerate": "PYTHONPATH=src python -m benchmarks.kernels_bench",
+        "results": record,
+    }
+    emit_json(ANALYTICS_JSON, payload)
+    row("analytics_json", 0.0, f"wrote {ANALYTICS_JSON.name}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    bench_analytics_suite()

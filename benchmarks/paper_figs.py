@@ -26,15 +26,13 @@ def bench_fig1_tradeoff():
     for device in DEVICES:
         space, mk = _setup(device, 1.0)
         dev = mk(n=0.0)
+        subgrid = space.grid()[::5]
 
         def sweep():
-            pts = [dev.exact(c) for c in list(space.all_configs())[::5]]
-            return pts
+            return dev.exact_all(subgrid)
 
         us = timeit(sweep, iters=1, warmup=0)
-        pts = sweep()
-        taus = np.array([p[0] for p in pts])
-        pows = np.array([p[1] for p in pts])
+        taus, pows = sweep()
         # iso-throughput power spread
         bins = np.round(taus / (taus.max() * 0.05))
         spreads = [

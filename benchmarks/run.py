@@ -16,6 +16,7 @@ def main() -> None:
         kernels_bench.bench_flash_attention_kernel,
         kernels_bench.bench_ssd_kernel,
         kernels_bench.bench_coral_iteration_overhead,
+        kernels_bench.bench_analytics_suite,
         pod_tuning.bench_pod_tuning_from_artifacts,
         ablations.bench_ablation_step_floor,
         ablations.bench_ablation_probe_policy,

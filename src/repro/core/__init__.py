@@ -1,7 +1,7 @@
 # The paper's primary contribution: CORAL — covariance-guided online
 # hardware configuration search with throughput-power co-optimization.
 from repro.core.coral import CORAL, CoralState, Observation  # noqa: F401
-from repro.core.dcov import dcor, dcor_matrix, dcov2  # noqa: F401
+from repro.core.dcov import dcor, dcor_all, dcov2  # noqa: F401
 from repro.core.evaluate import run_coral  # noqa: F401
 from repro.core.reward import reward  # noqa: F401
 from repro.core.search import next_config  # noqa: F401

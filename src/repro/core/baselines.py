@@ -14,7 +14,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -41,20 +41,51 @@ class Outcome:
         )
 
 
-def _measure_all(space: ConfigSpace, device, exact: bool) -> Dict[Config, Tuple[float, float]]:
-    out = {}
-    for cfg in space.all_configs():
-        tau, p = (device.exact(cfg) if exact else device.measure(cfg))
-        out[cfg] = (tau, p)
-    return out
+def _sweep(space: ConfigSpace, device, exact: bool) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(grid (N,D), tau (N,), p (N,)) for the full space — one vectorized
+    evaluation when the device supports batched sweeps, else a Python loop
+    (any object with only scalar ``exact``/``measure``)."""
+    grid = space.grid()
+    if exact and hasattr(device, "exact_all"):
+        tau, p = device.exact_all(grid)
+    elif not exact and hasattr(device, "measure_all"):
+        tau, p = device.measure_all(grid)
+    else:
+        pairs = [
+            (device.exact(tuple(row)) if exact else device.measure(tuple(row)))
+            for row in grid
+        ]
+        tau = np.array([t for t, _ in pairs])
+        p = np.array([q for _, q in pairs])
+    return grid, np.asarray(tau, np.float64), np.asarray(p, np.float64)
 
 
 def oracle(
     space: ConfigSpace, device, tau_target: float, p_budget: float = float("inf")
 ) -> Outcome:
     """Exhaustive search; best feasible config by efficiency (single-target:
-    pass p_budget=inf and tau_target=0 → max throughput)."""
-    table = _measure_all(space, device, exact=True)
+    pass p_budget=inf and tau_target=0 → max throughput). Runs as one
+    array-based sweep over ``space.grid()``."""
+    grid, tau, p = _sweep(space, device, exact=True)
+    n = grid.shape[0]
+    feas = (tau >= tau_target) & (p <= p_budget)
+    if not feas.any():
+        return Outcome(None, 0.0, 0.0, n)
+    score = tau if tau_target <= 0 else tau / np.maximum(p, 1e-9)
+    best = int(np.argmax(np.where(feas, score, -np.inf)))
+    return Outcome(
+        tuple(float(v) for v in grid[best]), float(tau[best]), float(p[best]), n
+    )
+
+
+def oracle_scalar(
+    space: ConfigSpace, device, tau_target: float, p_budget: float = float("inf")
+) -> Outcome:
+    """The original one-config-at-a-time sweep. Kept as the equivalence
+    oracle for the vectorized ``oracle`` (and its benchmark baseline)."""
+    table = {}
+    for cfg in space.all_configs():
+        table[cfg] = device.exact(cfg)
     feas = {
         c: tp
         for c, tp in table.items()
@@ -89,24 +120,23 @@ def alert(
     power budget is a soft preference only — reproducing the paper's
     observation that ALERT exceeds strict power caps.
     """
-    profile = _measure_all(space, device, exact=False)  # offline, noisy
+    grid, tau_prof, p_prof = _sweep(space, device, exact=False)  # offline, noisy
     kf = ScalarKalman()
     chosen = None
     tau = p = 0.0
-    n = len(profile)
+    n = grid.shape[0]
     for _ in range(online_iters):
-        xi = kf.x
-
-        def pred_tau(c):
-            return profile[c][0] * xi
-
-        meets = [c for c in profile if pred_tau(c) >= tau_target]
-        pool = meets or list(profile)
-        # throughput first; power only as a tie-breaking preference
-        chosen = max(pool, key=lambda c: (pred_tau(c), -profile[c][1]))
+        pred = tau_prof * kf.x
+        meets = pred >= tau_target
+        pool = meets if meets.any() else np.ones_like(meets)
+        # throughput first; power only as a tie-breaking preference:
+        # lexsort's primary key is pred descending, secondary power
+        # ascending, stable — the first row is the scalar max()'s pick.
+        idx = int(np.lexsort((p_prof, -np.where(pool, pred, -np.inf)))[0])
+        chosen = tuple(float(v) for v in grid[idx])
         tau, p = device.measure(chosen)
         n += 1
-        kf.update(tau / max(profile[chosen][0], 1e-9))
+        kf.update(tau / max(tau_prof[idx], 1e-9))
     return Outcome(chosen, tau, p, n)
 
 

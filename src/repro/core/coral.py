@@ -14,12 +14,14 @@ The loop runs a fixed iteration budget (10 in the paper).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Set, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import search
-from repro.core.dcov import dcor_numpy
+from repro.core.dcov import dcor_all
 from repro.core.reward import reward
 from repro.core.space import Config, ConfigSpace
 
@@ -91,17 +93,21 @@ class CORAL:
     def correlations(self) -> Tuple[np.ndarray, np.ndarray]:
         hist = self.state.history[-self.window :]
         d = len(self.space.dims)
-        if len(hist) < 3:  # not enough samples: uniform weights
+        n = len(hist)
+        if n < 3:  # not enough samples: uniform weights
             return np.ones(d), np.ones(d)
-        taus = np.array([o.tau for o in hist], np.float32)
-        pows = np.array([o.power for o in hist], np.float32)
-        alpha = np.zeros(d, np.float32)
-        beta = np.zeros(d, np.float32)
-        for i in range(d):
-            s = np.array([o.config[i] for o in hist], np.float32)
-            alpha[i] = dcor_numpy(taus, s)
-            beta[i] = dcor_numpy(pows, s)
-        return alpha, beta
+        # Pad the window to a fixed W so one jitted shape serves every fill
+        # level; n_valid is traced, so partial windows don't recompile.
+        settings = np.zeros((self.window, d), np.float32)
+        metrics = np.zeros((self.window, 2), np.float32)
+        for k, o in enumerate(hist):
+            settings[k] = o.config
+            metrics[k, 0] = o.tau
+            metrics[k, 1] = o.power
+        corr = np.asarray(
+            dcor_all(jnp.asarray(settings), jnp.asarray(metrics), np.int32(n))
+        )
+        return corr[:, 0], corr[:, 1]
 
     # ------------------------------------------------------------------
     # Step 3: propose the next configuration
@@ -120,8 +126,6 @@ class CORAL:
                 cand = self.space.preset("min_power")
             return self._escape_prohibited(cand)
         alpha, beta = self.correlations()
-        import math
-
         if self.probe_policy == "off":
             probe = False
         elif self.probe_policy == "persistent":  # Alg. 2 lines 14-17 verbatim

@@ -45,13 +45,7 @@ def dcor(x: jax.Array, y: jax.Array, eps: float = 1e-12) -> jax.Array:
     """Distance correlation (Eq. 4) in [0, 1]; 0 for degenerate inputs."""
     A = _double_center(_pairwise_dist(x))
     B = _double_center(_pairwise_dist(y))
-    dxy = jnp.mean(A * B)
-    dxx = jnp.mean(A * A)
-    dyy = jnp.mean(B * B)
-    denom = jnp.sqrt(jnp.maximum(dxx * dyy, 0.0))  # dVar(x)·dVar(y) = √(dxx·dyy)
-    dcor2 = jnp.maximum(dxy, 0.0) / jnp.maximum(denom, eps)
-    val = jnp.sqrt(dcor2)
-    return jnp.where(denom < eps, 0.0, jnp.clip(val, 0.0, 1.0))
+    return dcor_from_sums(jnp.mean(A * B), jnp.mean(A * A), jnp.mean(B * B), eps)
 
 
 @jax.jit
@@ -59,18 +53,62 @@ def dcor_jit(x: jax.Array, y: jax.Array) -> jax.Array:
     return dcor(x, y)
 
 
-def dcor_matrix(settings: jax.Array, metrics: jax.Array) -> jax.Array:
-    """Correlation weights for every (setting dim, metric dim) pair.
+def centered_distance_stack(cols: jax.Array, n_valid: jax.Array) -> jax.Array:
+    """Double-centered distance matrices for every column at once.
 
-    settings: (n, D) observations of D hardware parameters
-    metrics:  (n, M) observations of M performance metrics
-    returns:  (D, M) matrix of dCor values — column 0 is α (throughput),
-              column 1 is β (power) in the CORAL formulation (Eq. 9).
+    cols: (W, C) — C independent 1-d samples stacked column-wise; rows at
+          index >= n_valid are padding and are masked out of every mean.
+    returns: (W, W, C) stack of A matrices (Eq. 2), zero outside the valid
+          n_valid × n_valid block, so any contraction over (i, j) equals the
+          unpadded computation exactly.
     """
-    def one_dim(s_col):
-        return jax.vmap(lambda m_col: dcor(m_col, s_col), in_axes=1)(metrics)
+    w = cols.shape[0]
+    valid = jnp.arange(w) < n_valid
+    mask = (valid[:, None] & valid[None, :]).astype(jnp.float32)
+    d = jnp.abs(cols.astype(jnp.float32)[:, None, :] - cols[None, :, :])
+    d = d * mask[:, :, None]
+    inv_n = 1.0 / n_valid.astype(jnp.float32)
+    row = d.sum(axis=1, keepdims=True) * inv_n
+    col = d.sum(axis=0, keepdims=True) * inv_n
+    grand = d.sum(axis=(0, 1)) * inv_n * inv_n
+    return (d - row - col + grand[None, None, :]) * mask[:, :, None]
 
-    return jax.vmap(one_dim, in_axes=1)(settings)
+
+def dcor_from_sums(
+    sab: jax.Array, saa: jax.Array, sbb: jax.Array, eps: float = 1e-12
+) -> jax.Array:
+    """dCor (Eq. 4) from ⟨A,B⟩ / ⟨A,A⟩ / ⟨B,B⟩ sums (broadcasting)."""
+    denom = jnp.sqrt(jnp.maximum(saa * sbb, 0.0))
+    val = jnp.sqrt(jnp.maximum(sab, 0.0) / jnp.maximum(denom, eps))
+    return jnp.where(denom < eps, 0.0, jnp.clip(val, 0.0, 1.0))
+
+
+@jax.jit
+def dcor_all(
+    settings: jax.Array, metrics: jax.Array, n_valid: jax.Array
+) -> jax.Array:
+    """All (setting dim, metric dim) correlation weights in one device call.
+
+    Each column's double-centered distance matrix is computed once and all
+    D×M pairs are contracted via einsum — replacing the per-pair loop that
+    re-centered every column 2×D times per optimizer iteration.
+
+    settings: (W, D) sliding window of D hardware parameters (padded to a
+              fixed W so JIT compiles one shape; n_valid rows are real).
+    metrics:  (W, M) matching window of M performance metrics.
+    returns:  (D, M) dCor matrix — column 0 is α (throughput), column 1 is
+              β (power) in the CORAL formulation (Eq. 9).
+    """
+    d = settings.shape[1]
+    cols = jnp.concatenate(
+        [settings.astype(jnp.float32), metrics.astype(jnp.float32)], axis=1
+    )
+    A = centered_distance_stack(cols, jnp.asarray(n_valid))
+    S, T = A[:, :, :d], A[:, :, d:]
+    sab = jnp.einsum("ijd,ijm->dm", S, T)
+    saa = jnp.einsum("ijd,ijd->d", S, S)
+    sbb = jnp.einsum("ijm,ijm->m", T, T)
+    return dcor_from_sums(sab, saa[:, None], sbb[None, :])
 
 
 def dcor_numpy(x: np.ndarray, y: np.ndarray) -> float:

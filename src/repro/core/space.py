@@ -65,6 +65,14 @@ class ConfigSpace:
     def all_configs(self) -> Iterable[Config]:
         return itertools.product(*(d.values for d in self.dims))
 
+    def grid(self) -> np.ndarray:
+        """(N, D) array of every config, rows in ``all_configs`` order —
+        the array-native enumeration the batched device model sweeps."""
+        mesh = np.meshgrid(
+            *(np.asarray(d.values, np.float64) for d in self.dims), indexing="ij"
+        )
+        return np.stack([m.reshape(-1) for m in mesh], axis=1)
+
     def random(self, rng: np.random.Generator) -> Config:
         return tuple(float(rng.choice(d.values)) for d in self.dims)
 

@@ -23,6 +23,9 @@ knee the paper exploits (Fig. 1). Contention grows mildly with c
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
 
 from repro.device.hw import DEFAULT_HW, TPUv5eSpec
 
@@ -70,6 +73,16 @@ def canon(config: dict) -> dict:
     return out
 
 
+def canon_columns(names: Sequence[str], grid: np.ndarray) -> Dict[str, np.ndarray]:
+    """Split an (N, D) config matrix into canonical knob columns.
+
+    ``names`` are the space's dimension names (either alias family); the
+    result maps every canonical knob to its (N,) column — the batched
+    analogue of ``canon`` for the array-based sweeps."""
+    cols = {n: grid[:, i] for i, n in enumerate(names)}
+    return canon(cols)
+
+
 @dataclasses.dataclass(frozen=True)
 class PerfModel:
     terms: RooflineTerms
@@ -111,3 +124,45 @@ class PerfModel:
         t_c = self.terms.t_compute * (self.hw.nominal_tpu_freq / config["tpu_freq"])
         t_m = self.terms.t_memory * (self.hw.nominal_hbm_freq / config["hbm_freq"])
         return t_m / max(t_c + t_m, 1e-12)
+
+    # ------------------------------------------------------------------
+    # Batched twins: identical formulas, numpy broadcasting over (N,)
+    # knob columns (see ``canon_columns``) — one sweep call instead of N
+    # Python evaluations for ORACLE / ALERT / figure-level exhaustive
+    # searches.
+    # ------------------------------------------------------------------
+    def device_time_batch(
+        self, tpu_freq: np.ndarray, hbm_freq: np.ndarray, concurrency: np.ndarray
+    ) -> np.ndarray:
+        t_c = self.terms.t_compute * (self.hw.nominal_tpu_freq / tpu_freq)
+        t_m = self.terms.t_memory * (self.hw.nominal_hbm_freq / hbm_freq)
+        base = np.maximum(np.maximum(t_c, t_m), self.terms.t_collective)
+        return base * (1.0 + self.contention_kappa * (concurrency - 1.0))
+
+    def host_time_batch(self, cpu_freq: np.ndarray, cores: np.ndarray) -> np.ndarray:
+        return (
+            self.terms.t_host
+            * (self.hw.nominal_host_freq / cpu_freq)
+            * (6.0 / cores) ** 0.7
+        )
+
+    def stats_batch(
+        self, cols: Dict[str, np.ndarray]
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(throughput, utilization, memory_boundedness) in one pass —
+        the pipeline terms are computed once and shared (the power model
+        needs util and mem_frac on top of τ)."""
+        c = cols["concurrency"]
+        t_dev = self.device_time_batch(cols["tpu_freq"], cols["hbm_freq"], c)
+        t_host = self.host_time_batch(cols["host_cpu_freq"], cols["host_cores"])
+        rate = np.minimum(c / (t_host + t_dev), 1.0 / t_dev)
+        tau = rate * self.terms.items_per_step
+        util = np.minimum(rate * t_dev, 1.0)
+        t_c = self.terms.t_compute * (self.hw.nominal_tpu_freq / cols["tpu_freq"])
+        t_m = self.terms.t_memory * (self.hw.nominal_hbm_freq / cols["hbm_freq"])
+        mem_frac = t_m / np.maximum(t_c + t_m, 1e-12)
+        return tau, util, mem_frac
+
+    def throughput_batch(self, cols: Dict[str, np.ndarray]) -> np.ndarray:
+        """items/sec for canonical knob columns (N,) → (N,)."""
+        return self.stats_batch(cols)[0]

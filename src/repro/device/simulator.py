@@ -12,13 +12,13 @@ compiled multi-pod dry-run of a real (arch × shape × mesh) — see
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.space import Config, ConfigSpace
 from repro.device.hw import DEFAULT_HW, TPUv5eSpec
-from repro.device.perfmodel import PerfModel, RooflineTerms
+from repro.device.perfmodel import PerfModel, RooflineTerms, canon_columns
 from repro.device.power import PowerModel
 
 
@@ -55,6 +55,39 @@ class DeviceSimulator:
             tau *= 1.0 + self.rng.normal(0.0, self.noise)
             p *= 1.0 + self.rng.normal(0.0, self.noise)
         return max(tau, 1e-9), max(p, 1e-9)
+
+    # ------------------------------------------------------------------
+    # Batched sweeps: one numpy evaluation over an (N, D) config matrix
+    # instead of N Python calls — what ORACLE / ALERT profiling / the
+    # Pareto figures run on.
+    # ------------------------------------------------------------------
+    def exact_all(
+        self, configs: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Noise-free (τ, p) arrays for an (N, D) config matrix (defaults
+        to the full ``space.grid()``)."""
+        if configs is None:
+            configs = self.space.grid()
+        cols = canon_columns(self.space.names, np.asarray(configs, np.float64))
+        tau, util, mem_frac = self.perf.stats_batch(cols)
+        return tau, self.power_model.power_batch(cols, util, mem_frac)
+
+    def measure_all(
+        self, configs: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Noisy batched measurement. Draws the noise as an (N, 2) block in
+        config-major order, so the RNG stream — and therefore every
+        downstream selection — matches N sequential ``measure`` calls
+        exactly."""
+        if configs is None:
+            configs = self.space.grid()
+        tau, p = self.exact_all(configs)
+        self.n_measurements += tau.size
+        if self.noise:
+            z = self.rng.normal(0.0, self.noise, size=(tau.size, 2))
+            tau = tau * (1.0 + z[:, 0])
+            p = p * (1.0 + z[:, 1])
+        return np.maximum(tau, 1e-9), np.maximum(p, 1e-9)
 
 
 def synthetic_terms(kind: str = "balanced", n_chips: int = 256) -> RooflineTerms:

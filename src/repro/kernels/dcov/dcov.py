@@ -1,134 +1,143 @@
-"""Blocked Pallas TPU kernel for distance covariance (paper Eq. 1-3).
+"""Blocked Pallas TPU kernels for distance covariance (paper Eq. 1-3).
 
 The O(n²) pairwise-distance computation is the paper's core compute. For
 ORACLE-scale analyses (n = thousands of profiled configs) the n×n distance
-matrices must not materialize in HBM. Two passes over (block_i × block_j)
-VMEM tiles:
+matrices must not materialize in HBM. The kernel is batched over a column
+set: given C 1-d samples stacked as (n, C), two passes over
+(block_i × block_j) VMEM tiles shared across all columns:
 
-  pass 1 (row sums):   r_a[i] = Σ_j |x_i − x_j|, r_b likewise
-  pass 2 (contraction): Σ_ij A_ij·B_ij, Σ A², Σ B² where
-                        A_ij = a_ij − ā_i − ā_j + ā
+  pass 1 (row sums):   r_c[i] = Σ_j |x_ci − x_cj| for every column c
+  pass 2 (Gram):       G[c,c'] = Σ_ij A_c,ij · A_c',ij where
+                       A_c,ij = a_c,ij − ā_c,i − ā_c,j + ā_c
+
+The full C×C Gram matrix of ⟨A_c, A_c'⟩ sums falls out of one contraction
+per tile (an MXU matmul over the flattened tile), so D settings × M metrics
+correlation analyses cost one kernel launch instead of D·M pairwise ones.
 
 Grid iteration on TPU is sequential over the minor axis, so accumulating
-into the same output block across j-steps is the standard reduction
-pattern (init at j==0).
+into the same output block across grid steps is the standard reduction
+pattern (init at the first step).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Columns are padded to a multiple of the lane-friendly width; padded
+# columns are all-zero → zero distance matrices → zero Gram rows, sliced
+# away by the wrapper.
+_COL_PAD = 8
 
-def _row_sum_kernel(xi_ref, xj_ref, yi_ref, yj_ref, ra_ref, rb_ref, *, n, bi, bj):
+
+def default_interpret() -> bool:
+    """Interpret mode unless running on an actual TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _row_sum_batch_kernel(ci_ref, cj_ref, rs_ref, *, n, b):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
-        ra_ref[...] = jnp.zeros_like(ra_ref)
-        rb_ref[...] = jnp.zeros_like(rb_ref)
+        rs_ref[...] = jnp.zeros_like(rs_ref)
 
-    gi = i * bi + jax.lax.broadcasted_iota(jnp.int32, (bi, 1), 0)
-    gj = j * bj + jax.lax.broadcasted_iota(jnp.int32, (1, bj), 1)
-    mask = ((gi < n) & (gj < n)).astype(jnp.float32)
-    a = jnp.abs(xi_ref[...] - xj_ref[...].T) * mask  # (bi, bj)
-    b = jnp.abs(yi_ref[...] - yj_ref[...].T) * mask
-    ra_ref[...] += a.sum(axis=1, keepdims=True)
-    rb_ref[...] += b.sum(axis=1, keepdims=True)
+    gi = i * b + jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    gj = j * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    mask = ((gi < n) & (gj < n)).astype(jnp.float32)  # (b, b)
+    a = jnp.abs(ci_ref[...][:, None, :] - cj_ref[...][None, :, :])
+    rs_ref[...] += (a * mask[:, :, None]).sum(axis=1)
 
 
-def _center_kernel(
-    xi_ref, xj_ref, yi_ref, yj_ref, rai_ref, raj_ref, rbi_ref, rbj_ref,
-    ga_ref, gb_ref, sab_ref, saa_ref, sbb_ref, *, n, bi, bj,
+def _gram_batch_kernel(
+    ci_ref, cj_ref, rsi_ref, rsj_ref, g_ref, gram_ref, *, n, b
 ):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
     @pl.when((i == 0) & (j == 0))
     def _init():
-        sab_ref[...] = jnp.zeros_like(sab_ref)
-        saa_ref[...] = jnp.zeros_like(saa_ref)
-        sbb_ref[...] = jnp.zeros_like(sbb_ref)
+        gram_ref[...] = jnp.zeros_like(gram_ref)
 
-    gi = i * bi + jax.lax.broadcasted_iota(jnp.int32, (bi, 1), 0)
-    gj = j * bj + jax.lax.broadcasted_iota(jnp.int32, (1, bj), 1)
+    gi = i * b + jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    gj = j * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
     mask = ((gi < n) & (gj < n)).astype(jnp.float32)
     inv_n = 1.0 / n
-    ga = ga_ref[0, 0] * inv_n * inv_n  # grand mean
-    gb = gb_ref[0, 0] * inv_n * inv_n
-    a = jnp.abs(xi_ref[...] - xj_ref[...].T)
-    b = jnp.abs(yi_ref[...] - yj_ref[...].T)
-    A = a - rai_ref[...] * inv_n - raj_ref[...].T * inv_n + ga
-    B = b - rbi_ref[...] * inv_n - rbj_ref[...].T * inv_n + gb
-    A = A * mask
-    B = B * mask
-    sab_ref[0, 0] += jnp.sum(A * B)
-    saa_ref[0, 0] += jnp.sum(A * A)
-    sbb_ref[0, 0] += jnp.sum(B * B)
+    grand = g_ref[...][0] * inv_n * inv_n  # (C,) per-column grand mean
+    a = jnp.abs(ci_ref[...][:, None, :] - cj_ref[...][None, :, :])
+    A = (
+        a
+        - rsi_ref[...][:, None, :] * inv_n
+        - rsj_ref[...][None, :, :] * inv_n
+        + grand[None, None, :]
+    ) * mask[:, :, None]
+    Af = A.reshape(b * b, A.shape[-1])
+    gram_ref[...] += jnp.dot(Af.T, Af, preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def dcov_sums_pallas(x, y, block: int = 256, interpret: bool = True):
-    """Returns (Σ A·B, Σ A², Σ B²) for double-centered distance matrices.
+def dcov_gram_pallas(
+    cols, block: int = 256, interpret: Optional[bool] = None
+):
+    """Gram matrix of double-centered distance matrices for a column batch.
 
-    x, y: (n,) float32. Padded internally to a block multiple.
+    cols: (n, C) float32 — C independent 1-d samples.
+    returns: (C, C) where [c, c'] = Σ_ij A_c,ij · A_c',ij. Diagonal entries
+    are the dVar sums; off-diagonals the dCov sums (both unnormalized — the
+    caller divides by n² or cancels it in the dCor ratio).
     """
-    n = x.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    n, c = cols.shape
     nb = pl.cdiv(n, block)
     npad = nb * block
-    xp = jnp.pad(x.astype(jnp.float32), (0, npad - n)).reshape(npad, 1)
-    yp = jnp.pad(y.astype(jnp.float32), (0, npad - n)).reshape(npad, 1)
+    cpad = pl.cdiv(c, _COL_PAD) * _COL_PAD
+    cp = jnp.pad(cols.astype(jnp.float32), ((0, npad - n), (0, cpad - c)))
 
     col = lambda i, j: (i, 0)
     row = lambda i, j: (j, 0)
-    ra, rb = pl.pallas_call(
-        functools.partial(_row_sum_kernel, n=n, bi=block, bj=block),
+    rs = pl.pallas_call(
+        functools.partial(_row_sum_batch_kernel, n=n, b=block),
         grid=(nb, nb),
         in_specs=[
-            pl.BlockSpec((block, 1), col),
-            pl.BlockSpec((block, 1), row),
-            pl.BlockSpec((block, 1), col),
-            pl.BlockSpec((block, 1), row),
+            pl.BlockSpec((block, cpad), col),
+            pl.BlockSpec((block, cpad), row),
         ],
-        out_specs=[
-            pl.BlockSpec((block, 1), col),
-            pl.BlockSpec((block, 1), col),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((npad, 1), jnp.float32),
-            jax.ShapeDtypeStruct((npad, 1), jnp.float32),
-        ],
+        out_specs=pl.BlockSpec((block, cpad), col),
+        out_shape=jax.ShapeDtypeStruct((npad, cpad), jnp.float32),
         interpret=interpret,
-    )(xp, xp, yp, yp)
+    )(cp, cp)
 
-    ga = ra.sum().reshape(1, 1)  # Σ_ij a_ij (grand sum)
-    gb = rb.sum().reshape(1, 1)
+    g = rs.sum(axis=0, keepdims=True)  # (1, C) per-column grand sums
 
     scalar = lambda i, j: (0, 0)
-    sab, saa, sbb = pl.pallas_call(
-        functools.partial(_center_kernel, n=n, bi=block, bj=block),
+    gram = pl.pallas_call(
+        functools.partial(_gram_batch_kernel, n=n, b=block),
         grid=(nb, nb),
         in_specs=[
-            pl.BlockSpec((block, 1), col),
-            pl.BlockSpec((block, 1), row),
-            pl.BlockSpec((block, 1), col),
-            pl.BlockSpec((block, 1), row),
-            pl.BlockSpec((block, 1), col),
-            pl.BlockSpec((block, 1), row),
-            pl.BlockSpec((block, 1), col),
-            pl.BlockSpec((block, 1), row),
-            pl.BlockSpec((1, 1), scalar),
-            pl.BlockSpec((1, 1), scalar),
+            pl.BlockSpec((block, cpad), col),
+            pl.BlockSpec((block, cpad), row),
+            pl.BlockSpec((block, cpad), col),
+            pl.BlockSpec((block, cpad), row),
+            pl.BlockSpec((1, cpad), scalar),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1), scalar),
-            pl.BlockSpec((1, 1), scalar),
-            pl.BlockSpec((1, 1), scalar),
-        ],
-        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32)] * 3,
+        out_specs=pl.BlockSpec((cpad, cpad), scalar),
+        out_shape=jax.ShapeDtypeStruct((cpad, cpad), jnp.float32),
         interpret=interpret,
-    )(xp, xp, yp, yp, ra, ra, rb, rb, ga, gb)
-    return sab[0, 0], saa[0, 0], sbb[0, 0]
+    )(cp, cp, rs, rs, g)
+    return gram[:c, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dcov_sums_pallas(x, y, block: int = 256, interpret: Optional[bool] = None):
+    """Returns (Σ A·B, Σ A², Σ B²) for double-centered distance matrices.
+
+    x, y: (n,) float32. Thin two-column wrapper over ``dcov_gram_pallas``.
+    """
+    cols = jnp.stack([x.astype(jnp.float32), y.astype(jnp.float32)], axis=1)
+    gram = dcov_gram_pallas(cols, block=block, interpret=interpret)
+    return gram[0, 1], gram[0, 0], gram[1, 1]

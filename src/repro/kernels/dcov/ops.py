@@ -1,25 +1,57 @@
-"""Jit'd public wrapper: distance correlation via the blocked Pallas kernel.
+"""Jit'd public wrappers: distance correlation via the blocked Pallas
+kernels.
 
-On CPU CI we run interpret=True (kernel body executed in Python); on TPU
-set interpret=False for the Mosaic-compiled path.
+``interpret`` defaults to the backend: interpret=True off-TPU (kernel body
+executed in Python — CPU CI), Mosaic-compiled on TPU. Pass an explicit
+``interpret``/``block`` to override.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dcov.dcov import dcov_sums_pallas
+from repro.core.dcov import dcor_from_sums
+from repro.kernels.dcov.dcov import (
+    dcov_gram_pallas,
+    dcov_sums_pallas,
+    default_interpret,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def dcor_pallas(
-    x: jax.Array, y: jax.Array, block: int = 256, interpret: bool = True,
+    x: jax.Array,
+    y: jax.Array,
+    block: int = 256,
+    interpret: Optional[bool] = None,
     eps: float = 1e-12,
 ) -> jax.Array:
     """Distance correlation (Eq. 4) without materializing n×n matrices."""
     sab, saa, sbb = dcov_sums_pallas(x, y, block=block, interpret=interpret)
-    denom = jnp.sqrt(jnp.maximum(saa * sbb, 0.0))
-    val = jnp.sqrt(jnp.maximum(sab, 0.0) / jnp.maximum(denom, eps))
-    return jnp.where(denom < eps, 0.0, jnp.clip(val, 0.0, 1.0))
+    return dcor_from_sums(sab, saa, sbb, eps)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dcor_all_pallas(
+    settings: jax.Array,
+    metrics: jax.Array,
+    block: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """TPU twin of ``repro.core.dcov.dcor_all`` (full windows only).
+
+    settings: (n, D), metrics: (n, M) → (D, M) dCor matrix from one batched
+    Gram kernel launch; every column's distance structure is computed once
+    and shared across all D×M pairs.
+    """
+    d = settings.shape[1]
+    cols = jnp.concatenate(
+        [settings.astype(jnp.float32), metrics.astype(jnp.float32)], axis=1
+    )
+    gram = dcov_gram_pallas(cols, block=block, interpret=interpret)
+    diag = jnp.diagonal(gram)
+    sab = gram[:d, d:]
+    return dcor_from_sums(sab, diag[:d, None], diag[None, d:])

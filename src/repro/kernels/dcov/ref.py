@@ -1,10 +1,15 @@
-"""Pure-jnp oracle for the dcov kernel: materialized distance matrices."""
+"""Pure-jnp oracle for the dcov kernels: materialized distance matrices."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dcov import _double_center, _pairwise_dist
+from repro.core.dcov import (
+    _double_center,
+    _pairwise_dist,
+    centered_distance_stack,
+    dcor_from_sums,
+)
 
 
 def dcov_sums_ref(x: jax.Array, y: jax.Array):
@@ -15,7 +20,12 @@ def dcov_sums_ref(x: jax.Array, y: jax.Array):
 
 
 def dcor_ref(x: jax.Array, y: jax.Array, eps: float = 1e-12) -> jax.Array:
-    sab, saa, sbb = dcov_sums_ref(x, y)
-    denom = jnp.sqrt(jnp.maximum(saa * sbb, 0.0))
-    val = jnp.sqrt(jnp.maximum(sab, 0.0) / jnp.maximum(denom, eps))
-    return jnp.where(denom < eps, 0.0, jnp.clip(val, 0.0, 1.0))
+    return dcor_from_sums(*dcov_sums_ref(x, y), eps)
+
+
+def dcov_gram_ref(cols: jax.Array) -> jax.Array:
+    """(C, C) Gram of ⟨A_c, A_c'⟩ sums with full n×n×C materialization."""
+    A = centered_distance_stack(
+        cols.astype(jnp.float32), jnp.asarray(cols.shape[0])
+    )
+    return jnp.einsum("ijc,ijd->cd", A, A)

@@ -176,7 +176,9 @@ class HloCostModel:
         out_elems = 1
         for d in rdims:
             out_elems *= d
-        lhs_m = re.search(r"dot\(\s*%?([\w.\-]+)", instr.line)
+        # lhs operand = first %name after "dot(" (operands may be printed
+        # with their full shapes: "dot(f32[64,64]{1,0} %gte.4, ...)")
+        lhs_m = re.search(r"dot\([^%)]*%([\w.\-]+)", instr.line)
         cdims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
         k = 1
         if lhs_m and cdims_m and lhs_m.group(1) in table:

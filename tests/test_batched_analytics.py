@@ -1,0 +1,165 @@
+"""Equivalence tests for the vectorized analytics hot path: batched dCor
+(core + Pallas twin), batched perf/power model, and the array-based oracle
+sweep must match their scalar counterparts."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dcov import dcor, dcor_all
+from repro.core.space import jetson_like_space, tpu_pod_space
+from repro.core.baselines import alert, oracle, oracle_scalar
+from repro.device import DeviceSimulator, jetson_like_simulator, synthetic_terms
+from repro.device.perfmodel import canon, canon_columns
+from repro.kernels.dcov import dcor_all_pallas, dcov_gram_pallas, dcov_gram_ref
+
+
+# ----------------------------------------------------------- batched dCor
+def test_dcor_all_matches_per_pair_loop():
+    rng = np.random.default_rng(0)
+    w, d, m = 10, 5, 2
+    s = rng.normal(size=(w, d)).astype(np.float32)
+    mm = rng.normal(size=(w, m)).astype(np.float32)
+    batched = np.asarray(dcor_all(jnp.asarray(s), jnp.asarray(mm), np.int32(w)))
+    for i in range(d):
+        for j in range(m):
+            ref = float(dcor(jnp.asarray(mm[:, j]), jnp.asarray(s[:, i])))
+            assert batched[i, j] == pytest.approx(ref, abs=1e-5)
+
+
+def test_coral_correlations_match_legacy_loop():
+    """The rewired single-call correlations() equals the per-dim loop."""
+    from repro.core import CORAL
+    from repro.core.dcov import dcor_numpy
+
+    space = tpu_pod_space()
+    opt = CORAL(space, tau_target=10.0, p_budget=100.0, window=10)
+    rng = np.random.default_rng(0)
+    for _ in range(7):  # partial window on purpose
+        cfg = space.random(rng)
+        opt.observe(cfg, 10 + rng.random() * 5, 50 + rng.random() * 10)
+    alpha, beta = opt.correlations()
+    hist = opt.state.history[-opt.window:]
+    taus = np.array([o.tau for o in hist], np.float32)
+    pows = np.array([o.power for o in hist], np.float32)
+    for i in range(len(space.dims)):
+        s = np.array([o.config[i] for o in hist], np.float32)
+        assert alpha[i] == pytest.approx(dcor_numpy(taus, s), abs=1e-5)
+        assert beta[i] == pytest.approx(dcor_numpy(pows, s), abs=1e-5)
+
+
+@pytest.mark.parametrize("n,block", [(30, 64), (200, 128)])
+def test_dcor_all_pallas_matches_core(n, block):
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)
+    m = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    a = np.asarray(dcor_all_pallas(s, m, block=block))
+    b = np.asarray(dcor_all(s, m, np.int32(n)))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_dcov_gram_pallas_matches_ref():
+    rng = np.random.default_rng(2)
+    cols = jnp.asarray(rng.normal(size=(100, 7)), jnp.float32)
+    g_kernel = np.asarray(dcov_gram_pallas(cols, block=64))
+    g_ref = np.asarray(dcov_gram_ref(cols))
+    np.testing.assert_allclose(g_kernel, g_ref, rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------------ batched perf model
+@pytest.fixture(scope="module")
+def pod_dev():
+    return DeviceSimulator(tpu_pod_space(), synthetic_terms("balanced"), noise=0.0)
+
+
+def test_throughput_power_batch_match_scalar_full_grid(pod_dev):
+    grid = pod_dev.space.grid()
+    cols = canon_columns(pod_dev.space.names, grid)
+    tau_b = pod_dev.perf.throughput_batch(cols)
+    p_b = pod_dev.power_model.power_batch(cols)
+    for k in range(0, grid.shape[0], 97):  # stride through all dims' levels
+        d = canon(dict(zip(pod_dev.space.names, grid[k])))
+        assert tau_b[k] == pytest.approx(pod_dev.perf.throughput(d), rel=1e-12)
+        assert p_b[k] == pytest.approx(pod_dev.power_model.power(d), rel=1e-12)
+
+
+def test_exact_all_matches_exact(pod_dev):
+    grid = pod_dev.space.grid()[::53]
+    tau_b, p_b = pod_dev.exact_all(grid)
+    scalar = [pod_dev.exact(tuple(r)) for r in grid]
+    np.testing.assert_allclose(tau_b, [t for t, _ in scalar], rtol=1e-12)
+    np.testing.assert_allclose(p_b, [p for _, p in scalar], rtol=1e-12)
+
+
+def test_measure_all_matches_scalar_noise_stream():
+    sp = jetson_like_space("xavier_nx")
+    grid = sp.grid()[:40]
+    d_batch = jetson_like_simulator(sp, 1.0, seed=5, noise=0.03)
+    d_scalar = jetson_like_simulator(sp, 1.0, seed=5, noise=0.03)
+    tau_b, p_b = d_batch.measure_all(grid)
+    scalar = [d_scalar.measure(tuple(r)) for r in grid]
+    np.testing.assert_allclose(tau_b, [t for t, _ in scalar], rtol=1e-12)
+    np.testing.assert_allclose(p_b, [p for _, p in scalar], rtol=1e-12)
+    assert d_batch.n_measurements == d_scalar.n_measurements == 40
+
+
+# ------------------------------------------------------- vectorized oracle
+@pytest.mark.parametrize("tau_target,p_budget", [
+    (0.0, float("inf")),        # single-target: max throughput
+    (30.0, float("inf")),       # throughput-constrained efficiency
+    (30.0, 25.0),               # dual constraint
+    (1e9, float("inf")),        # infeasible everywhere
+])
+def test_vectorized_oracle_identical_to_scalar(tau_target, p_budget):
+    sp = jetson_like_space("xavier_nx")
+    dev = jetson_like_simulator(sp, 1.0, seed=0, noise=0.0)
+    vec = oracle(sp, dev, tau_target, p_budget)
+    ref = oracle_scalar(sp, dev, tau_target, p_budget)
+    assert vec.config == ref.config
+    assert vec.tau == pytest.approx(ref.tau, rel=1e-12)
+    assert vec.power == pytest.approx(ref.power, rel=1e-12)
+    assert vec.measurements == ref.measurements
+
+
+def test_oracle_scalar_device_fallback():
+    """A device exposing only scalar exact() still works (loop fallback)."""
+    sp = jetson_like_space("xavier_nx")
+    inner = jetson_like_simulator(sp, 1.0, noise=0.0)
+
+    class ScalarOnly:
+        def exact(self, cfg):
+            return inner.exact(cfg)
+
+    vec = oracle(sp, inner, 30.0)
+    fall = oracle(sp, ScalarOnly(), 30.0)
+    assert vec.config == fall.config
+
+
+def test_alert_lexsort_selection_matches_scalar_max():
+    """The lexsort pick must equal the original max(key=(pred, -power))
+    over the profile dict, at every Kalman gain (incl. tie-heavy targets)."""
+    sp = jetson_like_space("xavier_nx")
+    dev = jetson_like_simulator(sp, 1.0, seed=2, noise=0.02)
+    grid = sp.grid()
+    tau_prof, p_prof = dev.measure_all(grid)
+    configs = [tuple(float(v) for v in row) for row in grid]
+    for tau_target in (0.0, 30.0, 1e9):
+        for xi in (0.5, 1.0, 1.7):
+            pred = tau_prof * xi
+            meets = pred >= tau_target
+            pool = meets if meets.any() else np.ones_like(meets)
+            idx = int(np.lexsort((p_prof, -np.where(pool, pred, -np.inf)))[0])
+            # scalar reference: first max over the profile in grid order
+            cand = [k for k in range(len(configs)) if pool[k]]
+            ref = max(cand, key=lambda k: (pred[k], -p_prof[k]))
+            assert configs[idx] == configs[ref]
+
+
+def test_alert_profiles_in_one_batched_sweep():
+    """ALERT's offline profiling counts the full grid in one sweep and the
+    online loop still measures once per iteration."""
+    sp = jetson_like_space("xavier_nx")
+    dev = jetson_like_simulator(sp, 1.0, seed=1, noise=0.02)
+    out = alert(sp, dev, tau_target=30.0, online_iters=10)
+    assert out.config is not None
+    assert out.measurements == sp.size() + 10
+    assert dev.n_measurements == sp.size() + 10

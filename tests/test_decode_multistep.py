@@ -1,12 +1,12 @@
 """Multi-step decode consistency: N successive decode_step calls must
 reproduce the teacher-forced forward logits at every position — across the
 attention (ring cache), MLA (latent cache), SSM (recurrent state) and
-hybrid (both) families."""
+hybrid (both) families. Hypothesis-based property tests live in
+test_properties.py (optional dependency)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import REGISTRY
 from repro.configs.runtime import RunConfig
@@ -55,48 +55,3 @@ def test_multistep_decode_matches_forward(name):
             err_msg=f"{name}: decode step at position {i} diverged",
         )
     assert int(cache["length"]) == S
-
-
-# ---------------------------------------------------------------------------
-# CORAL state-machine invariants under arbitrary observation sequences
-# ---------------------------------------------------------------------------
-
-
-@settings(max_examples=25, deadline=None)
-@given(
-    st.lists(
-        st.tuples(st.floats(0.1, 100.0), st.floats(0.1, 100.0)),
-        min_size=1, max_size=12,
-    ),
-    st.floats(1.0, 50.0),
-    st.floats(5.0, 80.0),
-)
-def test_property_coral_invariants(measurements, tau_target, p_budget):
-    from repro.core import tpu_pod_space
-    from repro.core.coral import CORAL
-
-    space = tpu_pod_space()
-    opt = CORAL(space, tau_target, p_budget, seed=0)
-    for tau, p in measurements:
-        cfg = opt.propose()
-        assert cfg not in opt.state.prohibited, "proposed a prohibited config"
-        for v, d in zip(cfg, space.dims):
-            assert v in d.values, "proposal off the grid"
-        opt.observe(cfg, tau, p)
-        st_ = opt.state
-        # best has the max reward seen; second is <= best
-        assert st_.best.reward == max(o.reward for o in st_.history)
-        if st_.second is not None:
-            assert st_.second.reward <= st_.best.reward
-        # prohibited configs are exactly the infeasible observations
-        for o in st_.history:
-            infeasible = o.tau < tau_target or o.power > p_budget
-            assert (o.config in st_.prohibited) == any(
-                (h.config == o.config and (h.tau < tau_target or h.power > p_budget))
-                for h in st_.history
-            ) or not infeasible
-    res = opt.result()
-    feas = [o for o in opt.state.history
-            if o.tau >= tau_target and o.power <= p_budget]
-    if feas:
-        assert res.tau >= tau_target and res.power <= p_budget

@@ -1,0 +1,116 @@
+"""Hypothesis property tests (collected from test_dcov, test_space_simulator
+and test_decode_multistep). The whole module is skipped when ``hypothesis``
+is not installed, so tier-1 collection never hard-fails on the optional
+dependency."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.dcov import dcor, dcor_all  # noqa: E402
+from repro.core.space import tpu_pod_space  # noqa: E402
+from repro.device import DeviceSimulator, synthetic_terms  # noqa: E402
+
+
+# ------------------------------------------------------------------- dcov
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(-1e3, 1e3), min_size=4, max_size=40),
+    st.lists(st.floats(-1e3, 1e3), min_size=4, max_size=40),
+)
+def test_property_dcor_in_unit_interval(xs, ys):
+    n = min(len(xs), len(ys))
+    v = float(dcor(jnp.asarray(xs[:n]), jnp.asarray(ys[:n])))
+    assert 0.0 <= v <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(
+        st.floats(-100, 100).filter(lambda v: abs(v) > 1e-3),
+        min_size=5, max_size=30, unique=True,
+    ),
+    st.floats(0.1, 10.0),
+    st.floats(-5.0, 5.0),
+)
+def test_property_scale_invariance(xs, a, b):
+    """dCor is invariant to positive affine transforms of either argument."""
+    x = jnp.asarray(xs)
+    y = x**2  # deterministic dependence
+    d1 = float(dcor(x, y))
+    d2 = float(dcor(a * x + b, y))
+    assert d1 == pytest.approx(d2, abs=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 10), st.integers(0, 2**31 - 1))
+def test_property_dcor_all_matches_per_pair(n, seed):
+    """The batched engine equals the per-pair loop at every window fill."""
+    rng = np.random.default_rng(seed)
+    w, d, m = 10, 3, 2
+    s = np.zeros((w, d), np.float32)
+    mm = np.zeros((w, m), np.float32)
+    s[:n] = rng.normal(size=(n, d))
+    mm[:n] = rng.normal(size=(n, m))
+    batched = np.asarray(dcor_all(jnp.asarray(s), jnp.asarray(mm), np.int32(n)))
+    for i in range(d):
+        for j in range(m):
+            ref = float(dcor(jnp.asarray(mm[:n, j]), jnp.asarray(s[:n, i])))
+            assert batched[i, j] == pytest.approx(ref, abs=1e-5)
+
+
+# -------------------------------------------------------------- simulator
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 3599))
+def test_property_simulator_outputs_positive(idx):
+    sp = tpu_pod_space()
+    dev = DeviceSimulator(sp, synthetic_terms("balanced"), noise=0.0)
+    cfgs = list(sp.all_configs())
+    tau, p = dev.exact(cfgs[idx % len(cfgs)])
+    assert tau > 0 and p > 0
+
+
+# ---------------------------------------------------------------------------
+# CORAL state-machine invariants under arbitrary observation sequences
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.floats(0.1, 100.0), st.floats(0.1, 100.0)),
+        min_size=1, max_size=12,
+    ),
+    st.floats(1.0, 50.0),
+    st.floats(5.0, 80.0),
+)
+def test_property_coral_invariants(measurements, tau_target, p_budget):
+    from repro.core.coral import CORAL
+
+    space = tpu_pod_space()
+    opt = CORAL(space, tau_target, p_budget, seed=0)
+    for tau, p in measurements:
+        cfg = opt.propose()
+        assert cfg not in opt.state.prohibited, "proposed a prohibited config"
+        for v, d in zip(cfg, space.dims):
+            assert v in d.values, "proposal off the grid"
+        opt.observe(cfg, tau, p)
+        st_ = opt.state
+        # best has the max reward seen; second is <= best
+        assert st_.best.reward == max(o.reward for o in st_.history)
+        if st_.second is not None:
+            assert st_.second.reward <= st_.best.reward
+        # prohibited configs are exactly the infeasible observations
+        for o in st_.history:
+            infeasible = o.tau < tau_target or o.power > p_budget
+            assert (o.config in st_.prohibited) == any(
+                (h.config == o.config and (h.tau < tau_target or h.power > p_budget))
+                for h in st_.history
+            ) or not infeasible
+    res = opt.result()
+    feas = [o for o in opt.state.history
+            if o.tau >= tau_target and o.power <= p_budget]
+    if feas:
+        assert res.tau >= tau_target and res.power <= p_budget
