@@ -3,7 +3,7 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import ablations, kernels_bench, paper_figs, pod_tuning
+    from benchmarks import ablations, kernels_bench, paper_figs, pod_tuning, serving_bench
 
     benches = [
         paper_figs.bench_fig1_tradeoff,
@@ -18,6 +18,7 @@ def main() -> None:
         kernels_bench.bench_coral_iteration_overhead,
         kernels_bench.bench_analytics_suite,
         pod_tuning.bench_pod_tuning_from_artifacts,
+        serving_bench.bench_serving_suite,
         ablations.bench_ablation_step_floor,
         ablations.bench_ablation_probe_policy,
     ]

@@ -62,6 +62,9 @@ class CORAL:
       p_min: power floor for the power-saving direction (paper's p_min).
       window: sliding-window length W for the correlation analysis.
       seed: RNG seed for tie-breaking / prohibited-escape jitter.
+      mode: "dual" (Alg. 1 reward, τ target + power budget) or "throughput"
+        (single-target §IV-B: maximize τ, optionally under p_budget; the
+        τ target is ignored and the reward is τ itself, not efficiency).
     """
 
     def __init__(
@@ -75,8 +78,15 @@ class CORAL:
         step_floor: bool = True,
         probe_policy: str = "budget_aware",  # budget_aware|oneshot|persistent|off
         gamma_mode: str = "max",  # max (paper) | directional (beyond-paper)
+        mode: str = "dual",  # dual | throughput (single-target §IV-B)
     ):
         self.space = space
+        self.mode = mode
+        # Throughput mode has no τ target: an unreachable target keeps
+        # Alg. 2 in its climb direction (the reward path is mode-aware and
+        # never prohibits a config for missing it).
+        if mode == "throughput":
+            tau_target = float("inf")
         self.tau_target = tau_target
         self.p_budget = p_budget
         self.p_min = p_min
@@ -120,13 +130,35 @@ class CORAL:
         if n == 1 or st.second is None:
             # second probe: exploit correlation-free diversity — max preset
             # if target unmet, min if power-bound.
-            if st.last is not None and st.last.tau < self.tau_target:
+            if self.mode == "throughput":
+                cand = (
+                    self.space.preset("min_power")
+                    if st.last is not None and st.last.power > self.p_budget
+                    else self.space.preset("max_power")
+                )
+            elif st.last is not None and st.last.tau < self.tau_target:
                 cand = self.space.preset("max_power")
             else:
                 cand = self.space.preset("min_power")
             return self._escape_prohibited(cand)
         alpha, beta = self.correlations()
-        if self.probe_policy == "off":
+        if self.mode == "throughput":
+            # The lines 14-17 move is a *power* optimization. With no
+            # finite budget there is no power objective and the probe
+            # stays off; with one, it re-arms per new best while the cap
+            # is violated — the τ precondition is vacuously met (there is
+            # no τ target), and comparing against the inf sentinel would
+            # disable it entirely, the same class of bug as the old
+            # inf-target reward. A violated cap also means every
+            # observation so far is over it, so eff_target below is -inf
+            # and the probe survives next_config's own guard.
+            probe = (
+                self.probe_policy != "off"
+                and math.isfinite(self.p_budget)
+                and st.best.config != st.probed_for
+                and st.best.power > self.p_budget
+            )
+        elif self.probe_policy == "off":
             probe = False
         elif self.probe_policy == "persistent":  # Alg. 2 lines 14-17 verbatim
             probe = st.best.power > self.p_min and st.best.tau > self.tau_target
@@ -142,6 +174,13 @@ class CORAL:
                 and st.best.tau > self.tau_target
                 and st.best.power > self.p_budget
             )
+        # Throughput mode: Alg. 2's direction test (line 6) compares τ_last
+        # against the target. With no target the search always climbs —
+        # except over the power cap, where an always-met effective target
+        # flips it into the power-saving direction.
+        eff_target = self.tau_target
+        if self.mode == "throughput" and st.last.power > self.p_budget:
+            eff_target = -math.inf
         cand = search.next_config(
             self.space,
             st.best.config,
@@ -150,7 +189,7 @@ class CORAL:
             beta,
             tau_last=st.last.tau,
             p_last=st.last.power,
-            tau_target=self.tau_target,
+            tau_target=eff_target,
             p_min=self.p_min,
             aside=st.aside,
             tau_best=st.best.tau,
@@ -192,7 +231,10 @@ class CORAL:
     # ------------------------------------------------------------------
     def observe(self, config: Config, tau: float, power: float) -> float:
         st = self.state
-        r = reward(tau, power, config, st.prohibited, self.tau_target, self.p_budget)
+        r = reward(
+            tau, power, config, st.prohibited, self.tau_target, self.p_budget,
+            mode=self.mode,
+        )
         obs = Observation(tuple(config), tau, power, r)
         st.history.append(obs)
         # aside: last probe failed to beat the current best → flip anchors
@@ -207,7 +249,16 @@ class CORAL:
 
     # ------------------------------------------------------------------
     def result(self) -> Optional[Observation]:
-        """Best feasible observation (else best by reward)."""
+        """Best feasible observation (else best by reward).
+
+        Dual mode ranks feasible observations by efficiency τ/p; throughput
+        mode (no τ target) ranks the power-feasible ones by τ.
+        """
+        if self.mode == "throughput":
+            feas = [o for o in self.state.history if o.power <= self.p_budget]
+            if feas:
+                return max(feas, key=lambda o: o.tau)
+            return self.state.best
         feas = [
             o
             for o in self.state.history

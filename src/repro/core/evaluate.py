@@ -29,8 +29,14 @@ def run_coral(
     seed: int = 0,
     mode: str = "dual",  # dual | throughput (single-target §IV-B)
 ) -> tuple[Outcome, Trace]:
-    target = float("inf") if mode == "throughput" else tau_target
-    opt = CORAL(space, target, p_budget, p_min=p_min, window=window, seed=seed)
+    # mode="throughput" is CORAL's own single-target path (reward = τ, no
+    # τ target) — not an inf-target sentinel, which would route every
+    # observation through the infeasible branch of Alg. 1 and maximize
+    # -(p/τ) (efficiency) instead of throughput.
+    opt = CORAL(
+        space, tau_target, p_budget, p_min=p_min, window=window, seed=seed,
+        mode=mode,
+    )
     tr = Trace([], [], [], [])
     for _ in range(iters):
         cfg = opt.propose()
@@ -40,9 +46,6 @@ def run_coral(
         tr.taus.append(tau)
         tr.powers.append(p)
         tr.rewards.append(r)
-    if mode == "throughput":
-        best = max(opt.state.history, key=lambda o: o.tau)
-        return Outcome(best.config, best.tau, best.power, iters), tr
     res = opt.result()
     if res is None:
         return Outcome(None, 0.0, 0.0, iters), tr

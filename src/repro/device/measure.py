@@ -1,11 +1,15 @@
 """WalltimeDevice: CORAL against *measured* throughput.
 
 Runs a reduced model's decode loop on the actual host (jitted XLA, real
-wall-clock tokens/sec) instead of the analytical simulator. Clock knobs
-modulate the measured base rate (this container has no DVFS control or
-power rail — the scaling and the power model are analytical, the base
-throughput and the concurrency/batching effects are real). Used by
-examples/tune_serving.py and integration tests.
+wall-clock tokens/sec) instead of the analytical simulator. The base rate
+*and the concurrency effect* are measured — each concurrency level is
+probed once through the continuous-batching runtime
+(``repro.serving.runtime``) and cached, so the knob's τ response is the
+real pipelining behaviour of this host, not a modeled utilization curve.
+Clock knobs still modulate the measured rate analytically (this container
+has no DVFS control or power rail; the power model is analytical too).
+Used by examples/tune_serving.py, the serving controller and integration
+tests.
 """
 from __future__ import annotations
 
@@ -20,6 +24,26 @@ from repro.device.power import PowerModel
 from repro.device.perfmodel import PerfModel, RooflineTerms
 
 
+def analytic_scale_and_power(
+    names, config: Config, hw: TPUv5eSpec = DEFAULT_HW
+) -> Tuple[float, float]:
+    """(device-rate scale, analytical power) for a config on this host.
+
+    The scale is the relative decode-rate multiplier of the DVFS knobs
+    (min of the compute and memory rooflines); power reuses the analytical
+    pod model at n_chips=1. Shared between WalltimeDevice and the serving
+    controller so both halves of the measured/analytical split agree.
+    """
+    d = canon(dict(zip(names, config)))
+    f_rel = d["tpu_freq"] / hw.nominal_tpu_freq
+    m_rel = d["hbm_freq"] / hw.nominal_hbm_freq
+    dev_rel = min(f_rel, m_rel * 1.25)
+    terms = RooflineTerms(1e-3 / max(f_rel, 1e-3), 8e-4 / max(m_rel, 1e-3),
+                          0.0, 1e-3, 1.0, n_chips=1)
+    pm = PowerModel(PerfModel(terms, hw), hw)
+    return dev_rel, pm.power(d)
+
+
 class WalltimeDevice:
     def __init__(
         self,
@@ -29,6 +53,7 @@ class WalltimeDevice:
         steps: int = 8,
         hw: TPUv5eSpec = DEFAULT_HW,
         seed: int = 0,
+        groups: int = 0,  # saturating groups per probe; 0 = auto from space
     ):
         self.space = space
         self.engine = engine
@@ -37,32 +62,38 @@ class WalltimeDevice:
         self.hw = hw
         self.rng = np.random.default_rng(seed)
         self.n_measurements = 0
-        self._base_rate = None  # measured once; decode rate is stable
+        self._c_index = space.index("concurrency")
+        c_max = int(space.dims[self._c_index].hi)
+        self.groups = groups or max(4, 2 * c_max)
+        self._rate_cache: Dict[int, float] = {}
 
-    def _measure_base(self) -> float:
-        if self._base_rate is None:
-            self._base_rate = self.engine.measure_decode_throughput(
-                self.prompt_len, self.steps
+    def _measured_rate(self, concurrency: int) -> float:
+        """Drain throughput of the runtime at this concurrency (measured
+        once per level; decode rate is stable within a process)."""
+        c = max(1, int(concurrency))
+        if c not in self._rate_cache:
+            from repro.serving.runtime import measure_runtime_throughput
+
+            self._rate_cache[c] = measure_runtime_throughput(
+                self.engine,
+                concurrency=c,
+                prompt_len=self.prompt_len,
+                new_tokens=self.steps,
+                groups=self.groups,
             )
-        return self._base_rate
+        return self._rate_cache[c]
 
     def exact(self, config: Config) -> Tuple[float, float]:
-        d = canon(dict(zip(self.space.names, config)))
-        base = self._measure_base()
-        # clock scaling is analytical (no DVFS control in this container)
-        f_rel = d["tpu_freq"] / self.hw.nominal_tpu_freq
-        m_rel = d["hbm_freq"] / self.hw.nominal_hbm_freq
-        c = d["concurrency"]
-        dev_rel = min(f_rel, m_rel * 1.25)
-        util = min(c * 0.45, 1.0)
-        tau = base * dev_rel * (0.55 + 0.45 * util)
-        # power: reuse the analytical pod model at n_chips=1 scale
-        terms = RooflineTerms(1e-3 / max(f_rel, 1e-3), 8e-4 / max(m_rel, 1e-3),
-                              0.0, 1e-3, 1.0, n_chips=1)
-        pm = PowerModel(PerfModel(terms, self.hw), self.hw)
-        return tau, pm.power(d)
+        base = self._measured_rate(config[self._c_index])
+        dev_rel, power = analytic_scale_and_power(self.space.names, config, self.hw)
+        return base * dev_rel, power
 
     def measure(self, config: Config) -> Tuple[float, float]:
         self.n_measurements += 1
         tau, p = self.exact(config)
-        return tau * (1 + self.rng.normal(0, 0.01)), p
+        # symmetric noise on both channels; clamp like DeviceSimulator so a
+        # noise tail can never emit τ ≤ 0 (which would flip the reward
+        # penalty's sign) or negative power
+        tau *= 1.0 + self.rng.normal(0, 0.01)
+        p *= 1.0 + self.rng.normal(0, 0.01)
+        return max(tau, 1e-9), max(p, 1e-9)

@@ -1,2 +1,14 @@
 from repro.serving.engine import ServingEngine, make_prefill_step, make_serve_step  # noqa: F401
-from repro.serving.scheduler import Request, Scheduler  # noqa: F401
+from repro.serving.runtime import (  # noqa: F401
+    Request,
+    ServingRuntime,
+    measure_concurrency_curve,
+    measure_runtime_throughput,
+)
+from repro.serving.scheduler import Scheduler  # noqa: F401
+from repro.serving.controller import (  # noqa: F401
+    IntervalRecord,
+    ServingController,
+    build_serving_record,
+)
+from repro.serving import workload  # noqa: F401

@@ -1,0 +1,170 @@
+"""Closed-loop CORAL over the live serving runtime.
+
+The paper's evaluation loop (Fig. 2) — optimizer proposes a config, the
+device applies it, measured (τ, p) feed back — wired to real traffic
+instead of a device model: each control interval the controller
+
+  1. applies CORAL's proposed config to the runtime (the concurrency knob
+     is applied *for real* via ``set_concurrency``; the DVFS knobs — no
+     clock control in this container — are enacted as pacing via
+     ``set_rate_scale``, so a down-clocked config genuinely serves slower
+     and its backlog genuinely grows; power stays analytical, the same
+     split as ``WalltimeDevice``),
+  2. releases the next ``interval_s`` worth of workload-trace arrivals
+     into the runtime's pool,
+  3. serves one wall-clock control interval and observes its windowed
+     (τ, p), which CORAL's reward/correlation machinery consumes.
+
+Under a bursty trace the queue builds up during under-provisioned
+intervals, so infeasible configs are penalized by what they actually did
+to live traffic — not by a model of what they would have done.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Tuple
+
+from repro.core.baselines import Outcome
+from repro.core.coral import CORAL
+from repro.core.space import CONCURRENCY_DIM, ConfigSpace
+from repro.device.hw import DEFAULT_HW, TPUv5eSpec
+from repro.device.measure import analytic_scale_and_power
+from repro.serving.runtime import Request, ServingRuntime
+
+
+@dataclasses.dataclass
+class IntervalRecord:
+    """One control interval: what was applied and what the traffic saw."""
+
+    config: tuple
+    tau: float  # measured tok/s over the interval, DVFS-scaled
+    power: float  # analytical pod power at this config
+    reward: float
+    requests_done: int
+    queue_depth: int  # backlog left when the interval ended
+    p50_latency_s: float
+    p99_latency_s: float
+
+
+class ServingController:
+    def __init__(
+        self,
+        runtime: ServingRuntime,
+        space: ConfigSpace,
+        workload: Iterable[Request],
+        tau_target: float,
+        p_budget: float = float("inf"),
+        interval_s: float = 0.5,
+        hw: TPUv5eSpec = DEFAULT_HW,
+        mode: str = "dual",
+        seed: int = 0,
+        window: int = 10,
+    ):
+        self.runtime = runtime
+        self.space = space
+        self.workload = iter(workload)
+        self.interval_s = interval_s
+        self.hw = hw
+        self.tau_target = tau_target
+        self.p_budget = p_budget
+        self.opt = CORAL(
+            space, tau_target, p_budget, window=window, seed=seed, mode=mode
+        )
+        self.records: List[IntervalRecord] = []
+        self._pending: Optional[Request] = None
+        self._c_index = space.index(CONCURRENCY_DIM)
+
+    def _submit_until(self, horizon_s: float) -> None:
+        """Release trace arrivals with offsets inside the next interval."""
+        if self._pending is not None:
+            if self._pending.arrival_s is not None and self._pending.arrival_s > horizon_s:
+                return
+            self.runtime.submit(self._pending)
+            self._pending = None
+        for r in self.workload:
+            if r.arrival_s is not None and r.arrival_s > horizon_s:
+                self._pending = r
+                return
+            self.runtime.submit(r)
+
+    def control_step(self) -> IntervalRecord:
+        cfg = self.opt.propose()
+        dev_rel, power = analytic_scale_and_power(self.space.names, cfg, self.hw)
+        self.runtime.set_concurrency(int(cfg[self._c_index]))
+        self.runtime.set_rate_scale(dev_rel)
+        self._submit_until(self.runtime.now() + self.interval_s)
+        m = self.runtime.run_for(self.interval_s, idle_wait=True)
+        tau = m["throughput_tok_s"]  # pacing already enacted the DVFS scale
+        r = self.opt.observe(cfg, tau, power)
+        rec = IntervalRecord(
+            config=tuple(cfg),
+            tau=tau,
+            power=power,
+            reward=r,
+            requests_done=int(m["requests"]),
+            queue_depth=int(m["queue_depth"]),
+            p50_latency_s=m["p50_latency_s"],
+            p99_latency_s=m["p99_latency_s"],
+        )
+        self.records.append(rec)
+        return rec
+
+    def run(self, iters: int = 10) -> Tuple[Outcome, List[IntervalRecord]]:
+        for _ in range(iters):
+            self.control_step()
+        res = self.opt.result()
+        if res is None:
+            return Outcome(None, 0.0, 0.0, iters), self.records
+        return Outcome(res.config, res.tau, res.power, iters), self.records
+
+
+def build_serving_record(
+    regenerate: str,
+    c_values,
+    curve,
+    rounds: int,
+    batch_size: int,
+    iters: int,
+    interval_s: float,
+    tau_target: float,
+    p_budget: float,
+    outcome: Outcome,
+    records: List[IntervalRecord],
+    include_intervals: bool = False,
+) -> dict:
+    """The BENCH_serving.json payload — one schema for every producer
+    (benchmarks/serving_bench.py and examples/tune_serving.py), so the
+    CI-uploaded artifact's shape does not depend on which ran last."""
+    closed = {
+        "iters": iters,
+        "interval_s": interval_s,
+        "tau_target": tau_target,
+        "p_budget": p_budget,
+        "feasible": outcome.feasible(tau_target, p_budget),
+        "config": list(outcome.config) if outcome.config else None,
+        "tau": outcome.tau,
+        "power": outcome.power,
+        "max_queue_depth": max(r.queue_depth for r in records),
+    }
+    if include_intervals:
+        closed["intervals"] = [
+            {"config": list(r.config), "tau": r.tau, "power": r.power,
+             "reward": r.reward, "queue_depth": r.queue_depth,
+             "p99_latency_s": r.p99_latency_s}
+            for r in records
+        ]
+    return {
+        "regenerate": regenerate,
+        "results": {
+            "tau_vs_concurrency": {
+                "concurrency": list(c_values),
+                "tok_s": [curve[c] for c in c_values],
+                "gain_best_c_vs_c1": (
+                    max(curve[c] for c in c_values[1:]) / curve[c_values[0]]
+                ),
+                "batch_size": batch_size,
+                "rounds_best_of": rounds,
+            },
+            "closed_loop_bursty": closed,
+        },
+    }

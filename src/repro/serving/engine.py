@@ -7,7 +7,6 @@ for the CORAL optimizer).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, Optional
 
 import jax
@@ -59,6 +58,12 @@ class ServingEngine:
         cache, logits = self._prefill(self.params, batch)
         return cache, logits
 
+    def decode(self, cache, tokens):
+        """One decode step. Dispatch is asynchronous: the returned
+        (cache, logits) are device futures, which is what lets the runtime
+        keep ``c`` groups in flight on the device queue."""
+        return self._decode(self.params, cache, tokens)
+
     def generate(
         self,
         prompt: np.ndarray,
@@ -86,16 +91,6 @@ class ServingEngine:
             key, logits[:, -1] / temperature, axis=-1
         )[:, None].astype(jnp.int32)
 
-    def measure_decode_throughput(self, prompt_len: int, steps: int = 16) -> float:
-        """Tokens/sec of steady-state decode (used by WalltimeDevice)."""
-        toks = np.zeros((self.batch, prompt_len), np.int32)
-        cache, logits = self.prefill(toks)
-        tok = jnp.zeros((self.batch, 1), jnp.int32)
-        cache, _ = self._decode(self.params, cache, tok)  # warmup/compile
-        jax.block_until_ready(cache["length"])
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            cache, logits = self._decode(self.params, cache, tok)
-        jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
-        return self.batch * steps / dt
+    # NOTE: throughput probing lives in repro.serving.runtime
+    # (measure_runtime_throughput / measure_concurrency_curve) so every
+    # reported number comes from the same continuous-batching path.

@@ -1,0 +1,382 @@
+"""Continuous-batching serving runtime — the real concurrency knob.
+
+The paper (§II-A) tunes concurrency as a first-class resource knob, which
+only means anything if ``c`` in-flight decode groups genuinely pipeline.
+This runtime replaces the old drain-everything ``Scheduler`` loop with:
+
+  * a request pool with arrival-time admission — requests carry an
+    ``arrival_s`` offset (seconds from the runtime clock start, produced by
+    ``repro.serving.workload`` traces) and are only eligible once the
+    serving clock passes it;
+  * ``concurrency`` decode *slots*, each holding a batch-aligned group with
+    its own KV cache. Slots are visited in ring order, and each visit
+    retires the slot's outstanding logits (host-side sampling + per-row
+    bookkeeping) and immediately re-dispatches its next decode. Because
+    dispatch is asynchronous, blocking on slot i's logits happens while the
+    decodes of the other c−1 slots are already queued on the device: host
+    work overlaps device work, and throughput rises with c until the
+    device queue saturates (the paper's Fig. 1 knee). At c=1 the pipeline
+    has depth one — retire must finish before the next dispatch — so the
+    loop is genuinely serial, which is what makes the knob measurable;
+  * slot refill on completion: rows that reach ``max_new_tokens`` are
+    masked out, and when a group's last row finishes the slot re-admits a
+    new group from the pool (group-granularity refill: the KV cache keeps
+    one shared ``length`` per group, so rows cannot be swapped
+    individually — documented deviation from per-sequence refill);
+  * rolling-window and per-control-interval (τ, latency) metrics instead
+    of one end-of-drain aggregate — ``run_for`` serves one control
+    interval and reports what happened inside it, which is what the
+    closed-loop CORAL controller observes.
+
+Groups are formed from same-prompt-length requests only (no padding to a
+neighbour's length), which fixes the old scheduler's silent truncation of
+prompts longer than the group head's.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (prompt_len,)
+    max_new_tokens: int
+    arrival_s: Optional[float] = None  # offset from clock start; None = now
+    arrived: float = dataclasses.field(default_factory=time.monotonic)
+    started: float = 0.0  # prefill dispatch time
+    finished: float = 0.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    output: Optional[np.ndarray] = None
+
+
+class _Slot:
+    """One in-flight decode group: KV cache + outstanding logits future."""
+
+    __slots__ = ("group", "cache", "logits", "live", "remaining")
+
+    def __init__(self):
+        self.group: Optional[List[Request]] = None
+        self.cache = None
+        self.logits = None
+        self.live: List[bool] = []
+        self.remaining: List[int] = []
+
+
+class ServingRuntime:
+    def __init__(
+        self,
+        engine,
+        batch_size: Optional[int] = None,
+        concurrency: int = 1,
+        window_s: float = 2.0,
+    ):
+        self.engine = engine
+        self.batch = int(batch_size or engine.batch)
+        self.concurrency = max(1, int(concurrency))
+        self.window_s = window_s
+        self.waiting: List[Request] = []
+        self.done: List[Request] = []
+        self.slots: List[_Slot] = []
+        self._events: Deque[Tuple[float, int]] = collections.deque()
+        self._tokens_total = 0
+        self._t0: Optional[float] = None
+        self.steps = 0
+        self.prefills = 0
+        self.rate_scale = 1.0
+
+    # ------------------------------------------------------------------
+    # clock & admission
+    # ------------------------------------------------------------------
+    def start_clock(self) -> None:
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        """Seconds since the serving clock started (starts it on first use)."""
+        self.start_clock()
+        return time.monotonic() - self._t0
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def set_concurrency(self, c: int) -> None:
+        """Live knob: target number of in-flight decode groups. Growth adds
+        idle slots on the next step; shrink lets excess groups finish and
+        then drops their slots (no preemption)."""
+        self.concurrency = max(1, int(c))
+
+    def set_rate_scale(self, scale: float) -> None:
+        """DVFS emulation: pace the serving loop to ``scale``× its natural
+        rate (this container has no clock control, so reduced clocks are
+        enacted as a pass-level pacing sleep — the queue then genuinely
+        builds up under slow configs, which is what the closed-loop
+        controller's latency/backlog signals feed on)."""
+        self.rate_scale = min(1.0, max(0.05, float(scale)))
+
+    def _form_group(self) -> Optional[List[Request]]:
+        """FIFO group of admissible requests sharing the head's prompt
+        length — equal-length grouping, never pad/clip to another request's
+        shape."""
+        now = self.now()
+        length = None
+        picked: List[Request] = []
+        for r in self.waiting:
+            if r.arrival_s is not None and r.arrival_s > now:
+                continue
+            if length is None:
+                length = r.prompt.size
+            if r.prompt.size == length:
+                picked.append(r)
+                if len(picked) == self.batch:
+                    break
+        if not picked:
+            return None
+        ids = {id(r) for r in picked}
+        self.waiting = [r for r in self.waiting if id(r) not in ids]
+        return picked
+
+    # ------------------------------------------------------------------
+    # the pipeline
+    # ------------------------------------------------------------------
+    def _start_group(self, slot: _Slot, group: List[Request]) -> None:
+        prompts = np.stack([r.prompt for r in group])
+        if len(group) < self.batch:
+            prompts = np.pad(prompts, ((0, self.batch - len(group)), (0, 0)))
+        t = time.monotonic()
+        for r in group:
+            r.started = t
+        # async dispatch: the prefill (and its first logits) queue behind
+        # whatever the other slots already have in flight. The last-position
+        # slice is dispatched here, not at retire: retire must only ever
+        # *transfer* a ready buffer — a sliced read there would enqueue a
+        # fresh device op behind every other slot's in-flight decode and
+        # serialize the whole ring.
+        slot.cache, logits = self.engine.prefill(prompts)
+        slot.logits = logits[:, -1:]
+        slot.group = group
+        slot.live = [True] * len(group)
+        slot.remaining = [max(1, int(r.max_new_tokens)) for r in group]
+        self.prefills += 1
+
+    def _retire(self, slot: _Slot) -> None:
+        """Host stage: block on this slot's logits, sample greedily on the
+        host, account tokens/completions, then dispatch the next decode."""
+        # (B, 1, vocab) device→host copy: blocks on *this slot's* buffer
+        # only (a pure transfer skips the execute queue, so the other
+        # slots' decodes keep running underneath the host work)
+        lg = np.asarray(slot.logits)
+        tok = lg[:, -1].argmax(axis=-1).astype(np.int32)  # host-side sampling
+        t = time.monotonic()
+        n_live = 0
+        for j, r in enumerate(slot.group):
+            if not slot.live[j]:
+                continue
+            r.tokens.append(int(tok[j]))
+            slot.remaining[j] -= 1
+            n_live += 1
+            if slot.remaining[j] == 0:
+                slot.live[j] = False
+                r.finished = t
+                r.output = np.asarray(r.tokens, np.int32)
+                self.done.append(r)
+        self._record(t, n_live)
+        self.steps += 1
+        if any(slot.live):
+            slot.cache, slot.logits = self.engine.decode(slot.cache, tok[:, None])
+        else:
+            slot.group = None
+            slot.cache = slot.logits = None
+
+    def step(self) -> bool:
+        """One ring pass over the slots: refill idle slots from the pool,
+        retire+redispatch active ones. Returns False when nothing could
+        progress (all slots idle and no admissible request)."""
+        self.start_clock()
+        t_pass = time.monotonic()
+        active = [s for s in self.slots if s.group is not None]
+        idle = [s for s in self.slots if s.group is None]
+        self.slots = active + idle[: max(0, self.concurrency - len(active))]
+        while len(self.slots) < self.concurrency:
+            self.slots.append(_Slot())
+        progressed = False
+        for slot in self.slots:
+            if slot.group is None:
+                group = self._form_group()
+                if group:
+                    self._start_group(slot, group)
+                    progressed = True
+                continue
+            self._retire(slot)
+            progressed = True
+        if progressed and self.rate_scale < 1.0:
+            # stretch the pass to 1/scale of its natural duration
+            time.sleep((1.0 / self.rate_scale - 1.0) * (time.monotonic() - t_pass))
+        return progressed
+
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
+    def _record(self, t: float, n_tokens: int) -> None:
+        self._tokens_total += n_tokens
+        self._events.append((t, n_tokens))
+        horizon = t - max(4.0 * self.window_s, 10.0)
+        while self._events and self._events[0][0] < horizon:
+            self._events.popleft()
+
+    def _effective_arrival(self, r: Request) -> float:
+        if r.arrival_s is not None and self._t0 is not None:
+            return self._t0 + r.arrival_s
+        return r.arrived
+
+    def _metrics(self, reqs: List[Request], tokens: int, span: float) -> Dict[str, float]:
+        lat = [r.finished - self._effective_arrival(r) for r in reqs] or [0.0]
+        return {
+            "throughput_tok_s": tokens / max(span, 1e-9),
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
+            "requests": len(reqs),
+            "queue_depth": len(self.waiting),
+            "in_flight": sum(s.group is not None for s in self.slots),
+            "interval_s": span,
+        }
+
+    def metrics_window(self, window_s: Optional[float] = None) -> Dict[str, float]:
+        """Rolling-window metrics over the last ``window_s`` seconds."""
+        w = window_s or self.window_s
+        now = time.monotonic()
+        tokens = sum(n for t, n in self._events if t >= now - w)
+        span = w if self._t0 is None else min(w, now - self._t0)
+        reqs = [r for r in self.done if r.finished >= now - w]
+        return self._metrics(reqs, tokens, span)
+
+    # ------------------------------------------------------------------
+    # serving loops
+    # ------------------------------------------------------------------
+    def run_for(self, seconds: float, idle_wait: bool = False) -> Dict[str, float]:
+        """Serve one control interval; returns metrics for what completed
+        inside it. With ``idle_wait`` the runtime sits out traffic gaps
+        (closed-loop control under a trace); without it, an empty pool ends
+        the interval early (metrics use the actual elapsed span)."""
+        self.start_clock()
+        t0 = time.monotonic()
+        tok0, done0 = self._tokens_total, len(self.done)
+        while time.monotonic() - t0 < seconds:
+            if not self.step():
+                if not idle_wait and not self.waiting:
+                    break
+                time.sleep(5e-4)
+        span = time.monotonic() - t0
+        return self._metrics(self.done[done0:], self._tokens_total - tok0, span)
+
+    def drain(self, timeout_s: float = 300.0) -> Dict[str, float]:
+        """Serve until every submitted request completes (or ``timeout_s``
+        elapses — a leftover ``queue_depth`` marks an incomplete drain);
+        aggregate metrics (the old ``Scheduler.run`` contract)."""
+        self.start_clock()
+        t0 = time.monotonic()
+        tok0, done0 = self._tokens_total, len(self.done)
+        while self.waiting or any(s.group is not None for s in self.slots):
+            if time.monotonic() - t0 > timeout_s:
+                break
+            if not self.step():
+                time.sleep(5e-4)
+        span = time.monotonic() - t0
+        return self._metrics(self.done[done0:], self._tokens_total - tok0, span)
+
+
+def measure_runtime_throughput(
+    engine,
+    concurrency: int,
+    prompt_len: int = 16,
+    new_tokens: int = 16,
+    groups: int = 4,
+    batch_size: Optional[int] = None,
+    vocab: int = 512,
+    seed: int = 0,
+    warmup: bool = True,
+) -> float:
+    """Measured decode tokens/sec of the runtime at a given concurrency.
+
+    Serves a fixed saturating workload (``groups`` full batches submitted
+    up front, no arrival gaps) and reports drain throughput — the probe
+    behind ``WalltimeDevice`` and the τ-vs-concurrency benchmark. Pass the
+    same ``groups`` (≥ the largest concurrency to be compared, ideally 2×)
+    at every concurrency level so the knob is the only variable."""
+    rng = np.random.default_rng(seed)
+    if warmup:
+        # compile prefill/decode for this (batch, prompt_len) outside the
+        # timed drain — otherwise the first probed level caches a
+        # several-fold-understated rate and can invert the c→τ signal
+        wrt = ServingRuntime(engine, batch_size=batch_size, concurrency=1)
+        for rid in range(wrt.batch):
+            wrt.submit(
+                Request(-1 - rid, rng.integers(0, vocab, prompt_len,
+                                               dtype=np.int32), 2)
+            )
+        wrt.drain()
+    runtime = ServingRuntime(engine, batch_size=batch_size, concurrency=concurrency)
+    for rid in range(groups * runtime.batch):
+        runtime.submit(
+            Request(
+                rid,
+                rng.integers(0, vocab, prompt_len, dtype=np.int32),
+                new_tokens,
+            )
+        )
+    return runtime.drain()["throughput_tok_s"]
+
+
+def measure_concurrency_curve(
+    engine,
+    c_values,
+    rounds: int = 4,
+    min_rounds: int = 2,
+    gain_gate: float = 1.2,
+    prompt_len: int = 8,
+    new_tokens: int = 16,
+    groups: int = 10,
+    batch_size: Optional[int] = None,
+    vocab: int = 512,
+    seed: int = 0,
+) -> Tuple[Dict[int, float], int]:
+    """Best-of interleaved τ-vs-concurrency sweep over ``c_values``
+    (ascending, starting at the baseline level, normally 1).
+
+    One shared protocol for the benchmark, the example and the
+    sensitivity test: on shared hosts neighbour interference only ever
+    slows a run down, so the per-level running max converges to the
+    level's capability, and rounds are interleaved so drift hits every
+    level equally. Stops early (after ``min_rounds``) once the knee is
+    visible — the second level above the first and some c past
+    ``gain_gate``× the baseline. Returns ({c: best tok/s}, rounds used).
+    """
+    c_values = [int(c) for c in c_values]
+    best = {c: 0.0 for c in c_values}
+    used = 0
+    warm = True
+    for used in range(1, max(rounds, min_rounds) + 1):
+        for c in c_values:
+            best[c] = max(
+                best[c],
+                measure_runtime_throughput(
+                    engine, c, prompt_len=prompt_len, new_tokens=new_tokens,
+                    groups=groups, batch_size=batch_size, vocab=vocab,
+                    seed=seed, warmup=warm,
+                ),
+            )
+            warm = False  # shapes compiled by the first probe's warmup
+        base = best[c_values[0]]
+        if (
+            used >= min_rounds
+            and len(c_values) > 1
+            and best[c_values[1]] > base
+            and max(best[c] for c in c_values[1:]) >= gain_gate * base
+        ):
+            break
+    return best, used

@@ -1,86 +1,49 @@
-"""Request scheduler: groups incoming requests into batch-aligned decode
-groups and runs ``concurrency`` groups in flight — the application-level
-knob the paper tunes (§II-A "Concurrency level")."""
+"""Back-compat facade over the continuous-batching runtime.
+
+The original ``Scheduler`` drained its queue strictly sequentially (the
+concurrency knob was a no-op) and padded/clipped every request in a group
+to the first request's prompt length, silently truncating longer prompts.
+Both are fixed by ``repro.serving.runtime.ServingRuntime``: groups are
+formed from equal-length requests and ``concurrency`` decode groups
+genuinely pipeline on the device queue. This module keeps the old
+submit/run surface for existing callers (``repro.launch.serve``, tests).
+"""
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
-from typing import Deque, Dict, List, Optional
+from typing import Dict
 
-import numpy as np
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (prompt_len,)
-    max_new_tokens: int
-    arrived: float = dataclasses.field(default_factory=time.monotonic)
-    output: Optional[np.ndarray] = None
-    finished: float = 0.0
+from repro.serving.runtime import Request, ServingRuntime  # noqa: F401 (re-export)
 
 
 class Scheduler:
-    """FIFO batcher: pulls up to ``batch_size`` same-length requests per
-    group; ``concurrency`` groups are processed round-robin so host work
-    overlaps device work (the engine pipelines on the device queue)."""
-
     def __init__(self, engine, batch_size: int, concurrency: int = 1):
         self.engine = engine
-        self.batch_size = batch_size
-        self.concurrency = max(1, concurrency)
-        self.queue: Deque[Request] = collections.deque()
-        self.done: List[Request] = []
+        self.runtime = ServingRuntime(
+            engine, batch_size=batch_size, concurrency=concurrency
+        )
 
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # live views of the runtime, not construction-time copies — the old
+    # Scheduler honored `sched.concurrency = c` between runs, so the
+    # facade must too rather than silently pinning the initial value
+    @property
+    def batch_size(self) -> int:
+        return self.runtime.batch
 
-    def _next_group(self) -> Optional[List[Request]]:
-        if not self.queue:
-            return None
-        group = [self.queue.popleft() for _ in range(min(self.batch_size, len(self.queue)))]
-        # pad group to batch_size by repeating the last request's shape
-        return group
+    @property
+    def concurrency(self) -> int:
+        return self.runtime.concurrency
+
+    @concurrency.setter
+    def concurrency(self, c: int) -> None:
+        self.runtime.set_concurrency(c)
+
+    @property
+    def done(self):
+        return self.runtime.done
+
+    def submit(self, req: Request) -> None:
+        self.runtime.submit(req)
 
     def run(self) -> Dict[str, float]:
         """Drain the queue; returns aggregate serving metrics."""
-        t0 = time.monotonic()
-        n_tokens = 0
-        groups = []
-        while True:
-            g = self._next_group()
-            if g is None:
-                break
-            groups.append(g)
-        # round-robin over `concurrency` groups at a time
-        for i in range(0, len(groups), self.concurrency):
-            inflight = groups[i : i + self.concurrency]
-            for g in inflight:
-                prompts = np.stack(
-                    [
-                        np.pad(r.prompt, (0, max(0, g[0].prompt.size - r.prompt.size)))[
-                            : g[0].prompt.size
-                        ]
-                        for r in g
-                    ]
-                )
-                if prompts.shape[0] < self.batch_size:
-                    prompts = np.pad(
-                        prompts,
-                        ((0, self.batch_size - prompts.shape[0]), (0, 0)),
-                    )
-                out = self.engine.generate(prompts, g[0].max_new_tokens)
-                for j, r in enumerate(g):
-                    r.output = out[j]
-                    r.finished = time.monotonic()
-                    n_tokens += out.shape[1]
-                self.done.extend(g)
-        wall = time.monotonic() - t0
-        lat = [r.finished - r.arrived for r in self.done] or [0.0]
-        return {
-            "throughput_tok_s": n_tokens / max(wall, 1e-9),
-            "p50_latency_s": float(np.percentile(lat, 50)),
-            "p99_latency_s": float(np.percentile(lat, 99)),
-            "requests": len(self.done),
-        }
+        return self.runtime.drain()

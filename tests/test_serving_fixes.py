@@ -1,0 +1,126 @@
+"""Regression tests for the ISSUE-2 satellite fixes: the real throughput
+mode in CORAL, WalltimeDevice noise clamping, and the de-ghosted ALERT-
+Online selection."""
+import numpy as np
+import pytest
+
+from repro.core import run_coral, tpu_pod_space
+from repro.core.baselines import alert_online, oracle
+from repro.device import DeviceSimulator, synthetic_terms
+from repro.device.measure import WalltimeDevice
+
+
+def test_throughput_mode_maximizes_tau_not_efficiency():
+    """mode="throughput" used to set tau_target=inf, sending every
+    observation down Alg. 1's infeasible branch: all rewards were
+    -(p/τ) and the search maximized efficiency. The real single-target
+    path rewards τ itself."""
+    space = tpu_pod_space()
+    terms = synthetic_terms("balanced")
+    orc = oracle(space, DeviceSimulator(space, terms, noise=0.0),
+                 tau_target=0.0)  # noise-free max-τ upper bound
+    out, tr = run_coral(
+        space, DeviceSimulator(space, terms, seed=0), tau_target=0.0,
+        iters=10, seed=0, mode="throughput",
+    )
+    assert out.config is not None
+    assert out.tau >= 0.85 * orc.tau, (out.tau, orc.tau)
+    # feasible observations are rewarded with τ (positive), not a penalty
+    assert max(tr.rewards) > 0
+    assert max(tr.rewards) == pytest.approx(max(tr.taus))
+
+
+def test_throughput_mode_respects_power_cap():
+    space = tpu_pod_space()
+    terms = synthetic_terms("balanced")
+    dev0 = DeviceSimulator(space, terms, noise=0.0)
+    p_cap = dev0.exact(space.preset("max_power"))[1] * 0.75
+    out, tr = run_coral(
+        space, DeviceSimulator(space, terms, seed=1), tau_target=0.0,
+        p_budget=p_cap, iters=10, seed=1, mode="throughput",
+    )
+    assert out.config is not None
+    assert out.power <= p_cap
+    # and it still maximizes τ among capped configs, beating the min preset
+    p_min_tau = dev0.exact(space.preset("min_power"))[0]
+    assert out.tau > p_min_tau
+
+
+def test_throughput_mode_power_probe_fires_over_cap():
+    """The lines 14-17 cores→MIN/concurrency→MAX probe used to be dead in
+    throughput mode: every predicate compared best.τ against the inf
+    sentinel. With a finite violated cap it must fire."""
+    from repro.core import CORAL
+
+    space = tpu_pod_space()
+    opt = CORAL(space, tau_target=0.0, p_budget=100.0, mode="throughput",
+                seed=0)
+    opt.observe(space.preset("max_power"), tau=50.0, power=300.0)
+    opt.observe(space.preset("default"), tau=40.0, power=200.0)
+    opt.observe(space.midpoint(), tau=45.0, power=250.0)
+    cand = opt.propose()
+    i_cores, i_conc = space.index("host_cores"), space.index("concurrency")
+    assert cand[i_cores] == space.dims[i_cores].lo
+    assert cand[i_conc] == space.dims[i_conc].hi
+
+
+class _FixedNoise:
+    """Stand-in rng whose normal() always returns the same draw."""
+
+    def __init__(self, z):
+        self.z = z
+
+    def normal(self, loc, scale):
+        return self.z
+
+
+def _walltime_with_stub_rates(base=50.0):
+    space = tpu_pod_space()
+    dev = WalltimeDevice(space, engine=None)
+    dev._rate_cache = {
+        int(v): base for v in space.dims[space.index("concurrency")].values
+    }
+    return space, dev
+
+
+def test_walltime_measure_clamps_noise_tail():
+    """A noise tail used to emit τ ≤ 0, flipping the reward penalty's
+    sign; both channels are now clamped like DeviceSimulator.measure."""
+    space, dev = _walltime_with_stub_rates()
+    dev.rng = _FixedNoise(-200.0)  # 1 + z < 0 on both channels
+    tau, p = dev.measure(space.preset("default"))
+    assert tau > 0 and p > 0
+
+
+def test_walltime_noise_is_symmetric_on_power():
+    space, dev = _walltime_with_stub_rates()
+    tau0, p0 = dev.exact(space.preset("default"))
+    dev.rng = _FixedNoise(0.5)
+    tau, p = dev.measure(space.preset("default"))
+    assert tau == pytest.approx(tau0 * 1.5)
+    assert p == pytest.approx(p0 * 1.5)  # power jitters too, not just τ
+
+
+def test_alert_online_selects_best_measured_feasible_trial():
+    """The Kalman filter was updated every trial but never consulted; it
+    is gone (there is no profiled baseline for its slowdown factor to
+    correct). Selection must be exactly the best measured feasible trial
+    by efficiency."""
+    space = tpu_pod_space()
+    terms = synthetic_terms("balanced")
+    dev0 = DeviceSimulator(space, terms, noise=0.0)
+    tau_t = dev0.exact(space.preset("default"))[0] * 0.5
+    p_b = dev0.exact(space.preset("max_power"))[1] * 0.9
+
+    out = alert_online(space, DeviceSimulator(space, terms, seed=3), tau_t,
+                       p_b, iters=10, seed=5)
+    # replay the identical config/measurement streams
+    rng = np.random.default_rng(5)
+    replay = DeviceSimulator(space, terms, seed=3)
+    trials = [(cfg := space.random(rng), *replay.measure(cfg))
+              for _ in range(10)]
+    feas = [t for t in trials if t[1] >= tau_t and t[2] <= p_b]
+    assert feas, "scenario must produce at least one feasible trial"
+    best = max(feas, key=lambda t: t[1] / max(t[2], 1e-9))
+    assert out.config == best[0]
+    assert out.tau == pytest.approx(best[1])
