@@ -1,0 +1,172 @@
+"""Bench-regression gate: freshly produced BENCH_*.json vs committed
+baselines (benchmarks/baselines/).
+
+Fails (exit 1) on
+
+  - a recorded speedup dropping more than 25% below its baseline (timing
+    ratios, not absolute µs — both sides of a ratio ran on the same
+    machine, so the gate is stable across runner generations);
+  - any scenario-matrix cell's normalized-vs-oracle score dropping below
+    the baseline's recorded floor (``coral.score_floor``, the worst seed
+    minus a jitter margin);
+  - any power-budget violation in dual-constraint cells;
+  - a fresh record that is missing or fails schema validation.
+
+Serving gates depend on host pipelining headroom and are therefore only
+enforced when SERVING_PERF_STRICT is on (the same flag the test suite
+uses — see benchmarks/common.py).
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+    PYTHONPATH=src python -m benchmarks.check_regression --records matrix
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+from benchmarks.common import serving_perf_strict
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE_DIR = ROOT / "benchmarks" / "baselines"
+
+SLOWDOWN_FACTOR = 0.75  # fresh speedup must keep ≥75% of baseline
+
+
+def _load(path: Path, errors: List[str]) -> dict | None:
+    if not path.exists():
+        errors.append(f"{path.name}: missing (run its bench first)")
+        return None
+    try:
+        return json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        errors.append(f"{path.name}: unreadable JSON ({e})")
+        return None
+
+
+def check_analytics(fresh: dict, base: dict, errors: List[str]) -> None:
+    for name, brec in base["results"].items():
+        frec = fresh["results"].get(name)
+        if frec is None:
+            errors.append(f"analytics:{name}: missing from fresh record")
+            continue
+        if "speedup" in brec and "speedup" in frec:
+            floor = SLOWDOWN_FACTOR * brec["speedup"]
+            if frec["speedup"] < floor:
+                errors.append(
+                    f"analytics:{name}: speedup {frec['speedup']:.2f}x < "
+                    f"{floor:.2f}x (75% of baseline {brec['speedup']:.2f}x)"
+                )
+        if brec.get("same_config") is True and frec.get("same_config") is False:
+            errors.append(
+                f"analytics:{name}: vectorized oracle no longer matches the "
+                "scalar sweep"
+            )
+
+
+def check_serving(fresh: dict, base: dict, errors: List[str]) -> None:
+    strict = serving_perf_strict()
+    fcurve = fresh["results"]["tau_vs_concurrency"]
+    bcurve = base["results"]["tau_vs_concurrency"]
+    gain_floor = SLOWDOWN_FACTOR * bcurve["gain_best_c_vs_c1"]
+    if fcurve["gain_best_c_vs_c1"] < gain_floor:
+        msg = (
+            f"serving:tau_vs_concurrency: gain "
+            f"{fcurve['gain_best_c_vs_c1']:.2f}x < {gain_floor:.2f}x "
+            f"(75% of baseline {bcurve['gain_best_c_vs_c1']:.2f}x)"
+        )
+        if strict:
+            errors.append(msg)
+        else:
+            print(f"  [skip: SERVING_PERF_STRICT=0] {msg}")
+    closed = fresh["results"]["closed_loop_bursty"]
+    if not closed["feasible"]:
+        msg = "serving:closed_loop_bursty: CORAL found no feasible config"
+        if strict:
+            errors.append(msg)
+        else:
+            print(f"  [skip: SERVING_PERF_STRICT=0] {msg}")
+
+
+def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.experiments.matrix import score_floors
+    from repro.experiments.schema import validate_matrix_record
+
+    try:
+        validate_matrix_record(fresh)
+    except ValueError as e:
+        errors.append(f"matrix: schema validation failed: {e}")
+        return
+    floors = score_floors(base)
+    fresh_cells = {
+        (c["device"], c["model"], c["workload"], c["regime"]): c
+        for c in fresh["cells"]
+    }
+    compared = 0
+    for key, floor in floors.items():
+        cell = fresh_cells.get(key)
+        if cell is None:
+            continue  # QUICK runs trim the workload axis
+        compared += 1
+        score = cell["coral"]["score"]
+        if score < floor:
+            errors.append(
+                f"matrix:{'/'.join(key)}: score {score:.3f} dropped below "
+                f"recorded floor {floor:.3f}"
+            )
+    if not compared:
+        errors.append("matrix: no overlapping cells between fresh and baseline")
+    viol = fresh["summary"]["dual_power_violations"]
+    if viol:
+        errors.append(
+            f"matrix: {viol} power-budget violations in dual-constraint cells"
+        )
+
+
+CHECKS = {
+    "analytics": ("BENCH_analytics.json", check_analytics),
+    "serving": ("BENCH_serving.json", check_serving),
+    "matrix": ("BENCH_matrix.json", check_matrix),
+}
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--records",
+        default="analytics,serving,matrix",
+        help="comma-separated subset of: analytics, serving, matrix",
+    )
+    ap.add_argument("--fresh-dir", type=Path, default=ROOT)
+    ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
+    args = ap.parse_args(argv)
+
+    errors: List[str] = []
+    for name in args.records.split(","):
+        name = name.strip()
+        if name not in CHECKS:
+            errors.append(f"unknown record {name!r}")
+            continue
+        filename, fn = CHECKS[name]
+        fresh = _load(args.fresh_dir / filename, errors)
+        base = _load(args.baseline_dir / filename, errors)
+        if fresh is None or base is None:
+            continue
+        before = len(errors)
+        fn(fresh, base, errors)
+        status = "FAIL" if len(errors) > before else "ok"
+        print(f"{name}: {status}")
+    if errors:
+        print("\nregression gate FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

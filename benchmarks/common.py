@@ -1,10 +1,55 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness — including the single
+source of truth for the env flags CI and local runs both read.
+
+Flags (see also tests/conftest.py, which re-exports the same helpers so
+the test suite and the benches cannot drift):
+
+  QUICK                — CI-smoke mode: fewer iterations/seeds everywhere.
+  SERVING_PERF_STRICT  — keep the concurrency-gain perf gates hard
+                         (default on; hosted runners set 0 to demote the
+                         host-headroom-dependent gates to skips).
+  PALLAS_INTERPRET     — force the Pallas kernels' interpret mode on/off
+                         (default: auto from the jax backend).
+"""
 from __future__ import annotations
 
 import json
+import os
 import time
 from pathlib import Path
-from typing import Callable
+from typing import Callable, Optional
+
+_FALSY = ("", "0", "false", "no")
+
+
+def env_flag(name: str, default: bool = False) -> bool:
+    """Truthiness of an env var: unset → ``default``; "", 0, false, no →
+    False; anything else → True. Every flag goes through here so "QUICK="
+    and "QUICK=0" mean the same thing in every entry point."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    return raw.strip().lower() not in _FALSY
+
+
+def quick() -> bool:
+    """CI-smoke mode (QUICK=1)."""
+    return env_flag("QUICK")
+
+
+def serving_perf_strict() -> bool:
+    """Whether host-headroom-dependent serving perf gates are hard
+    failures (default) or skips (SERVING_PERF_STRICT=0)."""
+    return env_flag("SERVING_PERF_STRICT", default=True)
+
+
+def pallas_interpret() -> Optional[bool]:
+    """Explicit PALLAS_INTERPRET override, or None for backend-auto.
+    Delegates to the kernel's own parser so the helper and
+    ``repro.kernels.dcov.dcov.default_interpret`` cannot drift."""
+    from repro.kernels.dcov.dcov import parse_interpret_env
+
+    return parse_interpret_env(os.environ.get("PALLAS_INTERPRET"))
 
 
 def timeit(fn: Callable, iters: int = 3, warmup: int = 1) -> float:

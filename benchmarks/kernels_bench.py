@@ -3,13 +3,12 @@ derived column reports correctness vs oracle, not TPU speed) plus the
 vectorized-analytics suite that records BENCH_analytics.json."""
 from __future__ import annotations
 
-import os
 from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit_json, row, timeit
+from benchmarks.common import emit_json, quick, row, timeit
 from repro.core.dcov import dcor, dcor_all, dcor_numpy
 from repro.kernels.dcov import dcor_all_pallas, dcor_pallas, dcor_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention_bhsd
@@ -17,7 +16,7 @@ from repro.kernels.ssd_scan import ssd, ssd_ref
 
 ANALYTICS_JSON = Path(__file__).resolve().parent.parent / "BENCH_analytics.json"
 # CI smoke: fewer timing iterations (QUICK=0/false/empty means full run)
-QUICK = os.environ.get("QUICK", "").lower() not in ("", "0", "false")
+QUICK = quick()
 
 
 def bench_dcov_kernel():

@@ -1,0 +1,96 @@
+"""Scenario-matrix benchmark: devices × models × workloads × regimes.
+
+Runs CORAL + all baselines through every cell (EXPERIMENTS.md §Scenario
+matrix), writes the schema-validated BENCH_matrix.json plus the
+BENCH_matrix.md summary table, and enforces the acceptance gates:
+every single-target cell ≥ 0.9 normalized-vs-oracle and zero power-budget
+violations in dual-constraint cells.
+
+    PYTHONPATH=src python -m benchmarks.matrix_bench          # full grid
+    QUICK=1 PYTHONPATH=src python -m benchmarks.matrix_bench  # CI smoke
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from benchmarks.common import emit_json, quick, row
+
+MATRIX_JSON = Path(__file__).resolve().parent.parent / "BENCH_matrix.json"
+MATRIX_MD = MATRIX_JSON.with_suffix(".md")
+
+SINGLE_TARGET_SCORE_GATE = 0.9
+
+
+def bench_matrix_suite():
+    from repro.experiments import (
+        REGIMES,
+        enumerate_cells,
+        markdown_report,
+        run_matrix,
+        validate_matrix_record,
+    )
+    from repro.experiments.scenarios import FULL_MATRIX_WORKLOADS
+
+    QUICK = quick()
+    # QUICK trims the workload axis only — iters/seeds stay identical, so
+    # the cells both modes run produce identical scores and the committed
+    # full-grid baseline gates the CI smoke run cell-for-cell.
+    cells = enumerate_cells() if QUICK else enumerate_cells(
+        workloads=FULL_MATRIX_WORKLOADS
+    )
+    regenerate = ("QUICK=1 " if QUICK else "") + (
+        "PYTHONPATH=src python -m benchmarks.matrix_bench"
+    )
+    t0 = time.perf_counter()
+    record = run_matrix(
+        cells, iters=10, seeds=(0, 1, 2), regenerate=regenerate, quick=QUICK
+    )
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+    validate_matrix_record(record)
+    emit_json(MATRIX_JSON, record)
+    MATRIX_MD.write_text(markdown_report(record))
+
+    s = record["summary"]
+    row(
+        "matrix_grid",
+        elapsed_us,
+        f"cells={s['n_cells']} mean_score={s['mean_coral_score']:.3f}",
+    )
+    for regime in record["grid"]["regimes"]:
+        cell_scores = [
+            c["coral"]["score"] for c in record["cells"] if c["regime"] == regime
+        ]
+        row(
+            f"matrix_{regime}",
+            0.0,
+            f"worst_cell={min(cell_scores):.3f} "
+            f"mean={sum(cell_scores) / len(cell_scores):.3f}",
+        )
+
+    failures = []
+    for c in record["cells"]:
+        if REGIMES[c["regime"]].single_target:
+            if c["coral"]["score"] < SINGLE_TARGET_SCORE_GATE:
+                failures.append(
+                    f"single-target cell {c['device']}/{c['model']}/"
+                    f"{c['workload']}/{c['regime']} scored "
+                    f"{c['coral']['score']:.3f} < {SINGLE_TARGET_SCORE_GATE}"
+                )
+    if s["dual_power_violations"]:
+        failures.append(
+            f"{s['dual_power_violations']} power-budget violations in "
+            "dual-constraint cells (gate: 0)"
+        )
+    if failures:
+        raise RuntimeError("; ".join(failures))
+    return record
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_matrix_suite()
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ import numpy as np
 from benchmarks.common import row, timeit
 from repro.core import run_coral, jetson_like_space, tpu_pod_space
 from repro.core.baselines import alert, alert_online, oracle, preset
-from repro.device import DeviceSimulator, jetson_like_simulator, synthetic_terms
+from repro.device import jetson_like_simulator
 
 # model-scale analogues of the paper's detectors (20× parameter span):
 # (scale, power slack): heavier models leave less headroom (paper §IV-C)

@@ -2,7 +2,6 @@
 roofline artifacts (the framework's first-class feature)."""
 from __future__ import annotations
 
-import os
 
 from benchmarks.common import row
 from repro.core import run_coral, tpu_pod_space

@@ -3,7 +3,14 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import ablations, kernels_bench, paper_figs, pod_tuning, serving_bench
+    from benchmarks import (
+        ablations,
+        kernels_bench,
+        matrix_bench,
+        paper_figs,
+        pod_tuning,
+        serving_bench,
+    )
 
     benches = [
         paper_figs.bench_fig1_tradeoff,
@@ -19,6 +26,7 @@ def main() -> None:
         kernels_bench.bench_analytics_suite,
         pod_tuning.bench_pod_tuning_from_artifacts,
         serving_bench.bench_serving_suite,
+        matrix_bench.bench_matrix_suite,
         ablations.bench_ablation_step_floor,
         ablations.bench_ablation_probe_policy,
     ]

@@ -6,14 +6,11 @@ closed-loop CORAL-over-live-traffic run. Emits BENCH_serving.json.
 """
 from __future__ import annotations
 
-import os
 from pathlib import Path
 
-import numpy as np
+from benchmarks.common import emit_json, quick, row
 
-from benchmarks.common import emit_json, row
-
-QUICK = bool(int(os.environ.get("QUICK", "0")))
+QUICK = quick()
 
 
 def _engine(batch_size: int = 2, max_len: int = 64):

@@ -183,6 +183,17 @@ class ModelConfig:
         inactive = n_moe_layers * (e.n_experts - e.top_k) * per
         return total - inactive
 
+    def flops_per_token(self) -> float:
+        """Dense-equivalent FLOPs to produce one token (2·active params —
+        the standard matmul-dominated inference estimate)."""
+        return 2.0 * self.n_active_params()
+
+    def bytes_per_token(self, dtype_bytes: int = 2) -> float:
+        """DRAM traffic per decode step: every active parameter streamed
+        once (bf16 by default). Batch amortizes this, not multiplies it —
+        the weight stream is shared across the batch."""
+        return float(dtype_bytes) * self.n_active_params()
+
     def reduced(self) -> "ModelConfig":
         """Tiny same-family variant for CPU smoke tests (<=2 layers etc.)."""
         kw: dict = dict(

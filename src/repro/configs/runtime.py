@@ -3,7 +3,6 @@ sharding rule set, MoE capacity — everything the perf hillclimb tunes."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax.numpy as jnp
 

@@ -2,7 +2,12 @@
 # hardware configuration search with throughput-power co-optimization.
 from repro.core.coral import CORAL, CoralState, Observation  # noqa: F401
 from repro.core.dcov import dcor, dcor_all, dcov2  # noqa: F401
-from repro.core.evaluate import run_coral  # noqa: F401
+from repro.core.evaluate import (  # noqa: F401
+    RegimeTargets,
+    measurements_to_feasible,
+    run_coral,
+    run_regime,
+)
 from repro.core.reward import reward  # noqa: F401
 from repro.core.search import next_config  # noqa: F401
 from repro.core.space import ConfigSpace, Dim, jetson_like_space, tpu_pod_space  # noqa: F401

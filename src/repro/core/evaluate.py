@@ -1,9 +1,16 @@
 """The common evaluation loop (paper Fig. 2): optimizer proposes a config,
-the device applies it and runs inference, measured (τ, p) feed back."""
+the device applies it and runs inference, measured (τ, p) feed back.
+
+``run_regime`` is the regime-parameterized entry the scenario matrix
+uses: a ``RegimeTargets`` names the constraint shape (CORAL mode, τ
+target, power budget) so one runner serves single-target and strict
+dual-constraint cells alike.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+import math
+from typing import List, Optional
 
 from repro.core.baselines import Outcome
 from repro.core.coral import CORAL
@@ -16,6 +23,60 @@ class Trace:
     taus: List[float]
     powers: List[float]
     rewards: List[float]
+
+
+@dataclasses.dataclass(frozen=True)
+class RegimeTargets:
+    """Resolved constraint shape for one evaluation run.
+
+    ``mode`` selects CORAL's objective ("dual": Alg. 1 reward, τ target +
+    power budget; "throughput": single-target max-τ). ``p_budget`` is
+    ``inf`` for uncapped regimes.
+    """
+
+    mode: str
+    tau_target: float
+    p_budget: float = float("inf")
+
+    @property
+    def capped(self) -> bool:
+        return math.isfinite(self.p_budget)
+
+    def feasible(self, tau: float, power: float) -> bool:
+        return tau >= self.tau_target and power <= self.p_budget
+
+
+def run_regime(
+    space: ConfigSpace,
+    device,
+    targets: RegimeTargets,
+    iters: int = 10,
+    window: int = 10,
+    seed: int = 0,
+) -> tuple[Outcome, Trace]:
+    """``run_coral`` under a named constraint regime."""
+    return run_coral(
+        space,
+        device,
+        tau_target=targets.tau_target,
+        p_budget=targets.p_budget,
+        iters=iters,
+        window=window,
+        seed=seed,
+        mode=targets.mode,
+    )
+
+
+def measurements_to_feasible(tr: Trace, targets: RegimeTargets) -> Optional[int]:
+    """Exploration cost: 1-based index of the first measurement that met
+    the regime's constraints (None if the run never did). Throughput-mode
+    targets carry ``tau_target=0`` (no τ floor — see
+    ``repro.experiments.scenarios.resolve_targets``), so only the power
+    cap gates feasibility there."""
+    for i, (tau, p) in enumerate(zip(tr.taus, tr.powers)):
+        if targets.feasible(tau, p):
+            return i + 1
+    return None
 
 
 def run_coral(

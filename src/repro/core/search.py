@@ -34,9 +34,8 @@ stated semantics on a discrete grid.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
-import numpy as np
 
 from repro.core.space import (
     CONCURRENCY_DIM,

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Iterable, List, Sequence, Tuple
 
 import numpy as np
 
@@ -149,6 +149,41 @@ def jetson_like_space(device: str = "xavier_nx") -> ConfigSpace:
             )
         )
     raise KeyError(device)
+
+
+def profile_space(kind: str) -> ConfigSpace:
+    """Knob grids owned by the device-profile registry (``repro.device.hw``).
+
+    These are the *deployment* ladders the scenario matrix tunes over —
+    distinct from ``jetson_like_space``, which reproduces the paper's
+    Table-2 grids verbatim for the figure-level benchmarks. The edge
+    profiles differ in every ladder (CPU/GPU/EMC steps, stream counts):
+    per-device tuning landscapes genuinely differ, which is what the
+    matrix exists to show.
+    """
+    if kind == "edge_xavier_nx":
+        return ConfigSpace(
+            dims=(
+                Dim("cpu_freq", tuple(float(v) for v in range(1190, 1909, 100))),  # 8
+                Dim("cpu_cores", (2.0, 3.0, 4.0, 5.0, 6.0)),  # 5
+                Dim("gpu_freq", tuple(float(v) for v in range(510, 1101, 100))),  # 6
+                Dim("mem_freq", (1600.0, 1866.0)),  # 2 binned EMC steps
+                Dim("concurrency", (1.0, 2.0, 3.0)),  # 3
+            )
+        )
+    if kind == "edge_orin_nano":
+        return ConfigSpace(
+            dims=(
+                Dim("cpu_freq", tuple(float(v) for v in range(806, 1511, 100))),  # 8
+                Dim("cpu_cores", (2.0, 3.0, 4.0, 5.0, 6.0)),  # 5
+                Dim("gpu_freq", (306.0, 406.0, 506.0, 624.0)),  # 4
+                Dim("mem_freq", (2133.0, 3199.0)),  # 2
+                Dim("concurrency", (1.0, 2.0, 3.0, 4.0, 5.0)),  # 5
+            )
+        )
+    if kind == "tpu_pod":
+        return tpu_pod_space()
+    raise KeyError(kind)
 
 
 # Dimension roles used by Alg. 2's power-optimization heuristic

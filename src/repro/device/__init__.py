@@ -1,8 +1,19 @@
-from repro.device.hw import DEFAULT_HW, TPUv5eSpec  # noqa: F401
-from repro.device.perfmodel import PerfModel, RooflineTerms  # noqa: F401
+from repro.device.hw import (  # noqa: F401
+    DEFAULT_HW,
+    DEVICE_PROFILES,
+    DeviceProfile,
+    TPUv5eSpec,
+    get_profile,
+)
+from repro.device.perfmodel import (  # noqa: F401
+    PerfModel,
+    RooflineTerms,
+    model_roofline_terms,
+)
 from repro.device.power import PowerModel  # noqa: F401
 from repro.device.simulator import (  # noqa: F401
     DeviceSimulator,
+    build_cell_simulator,
     jetson_like_simulator,
     synthetic_terms,
 )

@@ -51,6 +51,52 @@ class RooflineTerms:
         return max(terms, key=terms.get)
 
 
+def model_roofline_terms(
+    model_cfg,
+    profile,
+    kind: str = "decode",
+    batch: int = 8,
+    seq: int = 256,
+) -> RooflineTerms:
+    """Per-(device, model) RooflineTerms from a model's analytic footprint.
+
+    ``model_cfg`` is a ``repro.configs.base.ModelConfig`` (anything with
+    ``flops_per_token``/``bytes_per_token``); ``profile`` a
+    ``repro.device.hw.DeviceProfile``. Two workload kinds:
+
+      decode  — one step produces ``batch`` tokens; compute scales with
+                the batch, the weight stream does not → memory-bound at
+                small batch (the LLM analogue of the paper's detectors).
+      prefill — one step ingests ``seq`` prompt tokens for one sequence;
+                compute-bound for any realistic ``seq``.
+
+    Device work is sharded across the profile's chips; host preprocess
+    scales with items per step. This is what lets the scenario matrix
+    build a simulator for every (device profile × registry model) cell
+    instead of the single hand-wired device the scripts used before.
+    """
+    hw = profile.hw
+    eff_flops = hw.peak_flops_bf16 * profile.compute_eff * profile.n_chips
+    eff_bw = hw.hbm_bw * profile.mem_eff * profile.n_chips
+    bytes_per_step = model_cfg.bytes_per_token()
+    if kind == "decode":
+        flops_per_step = model_cfg.flops_per_token() * batch
+        items = float(batch)
+    elif kind == "prefill":
+        flops_per_step = model_cfg.flops_per_token() * seq
+        items = 1.0
+    else:
+        raise KeyError(f"unknown workload kind {kind!r}")
+    return RooflineTerms(
+        t_compute=flops_per_step / eff_flops,
+        t_memory=bytes_per_step / eff_bw,
+        t_collective=0.0 if profile.n_chips == 1 else 0.05 * flops_per_step / eff_flops,
+        t_host=profile.t_host_per_item * items,
+        items_per_step=items,
+        n_chips=profile.n_chips,
+    )
+
+
 # knob-name aliases: TPU-pod space vs the paper's original Jetson grids
 _ALIASES = {
     "tpu_freq": ("tpu_freq", "gpu_freq"),

@@ -11,14 +11,18 @@ compiled multi-pod dry-run of a real (arch × shape × mesh) — see
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.space import Config, ConfigSpace
-from repro.device.hw import DEFAULT_HW, TPUv5eSpec
-from repro.device.perfmodel import PerfModel, RooflineTerms, canon_columns
+from repro.device.hw import DEFAULT_HW, DeviceProfile, TPUv5eSpec
+from repro.device.perfmodel import (
+    PerfModel,
+    RooflineTerms,
+    canon_columns,
+    model_roofline_terms,
+)
 from repro.device.power import PowerModel
 
 
@@ -102,6 +106,34 @@ def synthetic_terms(kind: str = "balanced", n_chips: int = 256) -> RooflineTerms
     }
     t = kinds[kind]
     return RooflineTerms(*t[:4], items_per_step=t[4], n_chips=n_chips)
+
+
+def build_cell_simulator(
+    profile: DeviceProfile,
+    model_cfg,
+    kind: str = "decode",
+    batch: int = 8,
+    seq: int = 256,
+    noise: float = 0.02,
+    seed: int = 0,
+) -> "DeviceSimulator":
+    """Simulator for one (device profile × model × workload-kind) cell.
+
+    The profile supplies the knob grid, power curve and derating; the
+    model config supplies the FLOP/byte footprint (its analytic active
+    parameter count) — see ``model_roofline_terms``. This replaces the
+    hand-wired single device per script with a constructor the scenario
+    matrix can call for every cell.
+    """
+    terms = model_roofline_terms(model_cfg, profile, kind=kind, batch=batch, seq=seq)
+    return DeviceSimulator(
+        profile.space(),
+        terms,
+        profile.hw,
+        noise=noise,
+        seed=seed,
+        contention_kappa=profile.contention_kappa,
+    )
 
 
 def jetson_like_simulator(

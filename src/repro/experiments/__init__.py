@@ -1,0 +1,30 @@
+"""Scenario-matrix evaluation harness (paper §IV grid analogue).
+
+Declaratively enumerates device profile × model config × workload trace ×
+constraint regime cells, runs CORAL and every baseline through each, and
+scores cells as normalized-vs-oracle performance, constraint-violation
+rate and exploration cost. See EXPERIMENTS.md §Scenario matrix.
+"""
+from repro.experiments.matrix import (  # noqa: F401
+    run_cell,
+    run_matrix,
+)
+from repro.experiments.report import markdown_report  # noqa: F401
+from repro.experiments.scenarios import (  # noqa: F401
+    MATRIX_DEVICES,
+    MATRIX_MODELS,
+    MATRIX_REGIMES,
+    MATRIX_WORKLOADS,
+    REGIMES,
+    WORKLOADS,
+    Cell,
+    Regime,
+    Workload,
+    cell_simulator,
+    enumerate_cells,
+    resolve_targets,
+)
+from repro.experiments.schema import (  # noqa: F401
+    MATRIX_SCHEMA,
+    validate_matrix_record,
+)

@@ -1,0 +1,273 @@
+"""Run the scenario matrix: CORAL + all baselines through every cell.
+
+Each cell is scored on three axes (the paper's Table/Fig. §IV summary):
+
+  normalized score — performance of the chosen config, noise-free, as a
+      fraction of the cell's exhaustive-search ORACLE under the regime's
+      own objective (max_throughput: τ ratio; τ-targeted regimes:
+      efficiency τ/p ratio among what the oracle ranks);
+  violation rate  — fraction of runs whose chosen config truly breaks a
+      constraint (evaluated on the noise-free twin, so a lucky noise
+      sample can't hide a real power-budget bust);
+  exploration cost — measurements until the first feasible observation
+      (ORACLE pays the full grid; CORAL its iteration budget).
+
+All optimizer selections run against the *noisy* device (the 1-second
+tegrastats-style samples CORAL actually sees); all scoring runs against
+the noise-free twin.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.baselines import Outcome, alert, alert_online, oracle, preset
+from repro.core.evaluate import (
+    RegimeTargets,
+    measurements_to_feasible,
+    run_regime,
+)
+from repro.experiments.scenarios import (
+    REGIMES,
+    Cell,
+    cell_simulator,
+    enumerate_cells,
+    resolve_targets,
+)
+
+# Per-baseline device seeds: every baseline sees its own noise stream,
+# deterministically, so matrix records are reproducible bit-for-bit.
+_BASELINE_SEEDS = {"alert": 101, "alert_online": 102, "max_power": 103, "default": 104}
+
+# Regression-gate margin: the recorded floor sits this far under the
+# worst seed, absorbing cross-platform float jitter without letting a
+# real regression through.
+SCORE_FLOOR_MARGIN = 0.05
+
+
+def _score(tau: float, power: float, regime_name: str, oracle_ref: Outcome) -> float:
+    """Normalized-vs-oracle performance under the regime's objective."""
+    if oracle_ref.config is None:
+        return 0.0
+    if REGIMES[regime_name].mode == "throughput":
+        return tau / max(oracle_ref.tau, 1e-9)
+    eff = tau / max(power, 1e-9)
+    return eff / max(oracle_ref.efficiency, 1e-9)
+
+
+def _violations(
+    tau: float, power: float, targets: RegimeTargets
+) -> Tuple[bool, bool]:
+    """(τ-target miss, power-budget bust) of a chosen config, noise-free."""
+    tau_miss = targets.mode != "throughput" and tau < targets.tau_target * (1 - 1e-9)
+    power_bust = targets.capped and power > targets.p_budget * (1 + 1e-9)
+    return tau_miss, power_bust
+
+
+def run_cell(
+    cell: Cell,
+    iters: int = 10,
+    seeds: Sequence[int] = (0, 1, 2),
+    window: int = 10,
+) -> dict:
+    """One cell → one JSON-ready record (see schema.MATRIX_SCHEMA)."""
+    sim0 = cell_simulator(cell, noise=0.0)
+    space = sim0.space
+    targets = resolve_targets(cell, sim0)
+    oracle_ref = oracle(space, sim0, targets.tau_target, targets.p_budget)
+
+    # ---- CORAL, one run per seed against the noisy device -------------
+    scores: List[float] = []
+    tau_misses: List[bool] = []
+    power_busts: List[bool] = []
+    m2f: List[Optional[int]] = []
+    best: Optional[Tuple[float, float, float, tuple]] = None
+    for seed in seeds:
+        dev = cell_simulator(cell, seed=seed)
+        out, tr = run_regime(space, dev, targets, iters=iters, window=window, seed=seed)
+        if out.config is None:
+            # found nothing: a feasibility failure (τ miss), not a power
+            # bust — no config ever drew power over the cap. Same mapping
+            # as _outcome_record below for config-less baselines.
+            scores.append(0.0)
+            tau_misses.append(True)
+            power_busts.append(False)
+            m2f.append(None)
+            continue
+        tau, power = sim0.exact(out.config)
+        miss, bust = _violations(tau, power, targets)
+        # A pick that truly breaks the regime's constraints earns no
+        # credit — an infeasible low-clock config can beat the feasible
+        # optimum on raw τ/p, and crediting it would let feasibility
+        # regressions read as score improvements.
+        s = 0.0 if (miss or bust) else _score(tau, power, cell.regime, oracle_ref)
+        scores.append(s)
+        tau_misses.append(miss)
+        power_busts.append(bust)
+        m2f.append(measurements_to_feasible(tr, targets))
+        if not (miss or bust) and (best is None or s > best[0]):
+            best = (s, tau, power, tuple(out.config))
+    n = len(seeds)
+    reached = [v for v in m2f if v is not None]
+    coral = {
+        "score": sum(scores) / n,
+        "score_min": min(scores),
+        "score_floor": round(max(0.0, min(scores) - SCORE_FLOOR_MARGIN), 4),
+        "violation_rate": sum(a or b for a, b in zip(tau_misses, power_busts)) / n,
+        "power_violations": int(sum(power_busts)),
+        "found_feasible_rate": len(reached) / n,
+        "measurements_to_feasible": (
+            sum(reached) / len(reached) if reached else None
+        ),
+        "measurements": iters,
+        "tau": best[1] if best else 0.0,
+        "power": best[2] if best else 0.0,
+        "config": list(best[3]) if best else None,
+    }
+
+    # ---- baselines, one run each --------------------------------------
+    def _outcome_record(out: Outcome) -> dict:
+        if out.config is None:
+            return {
+                "score": None,
+                "tau": 0.0,
+                "power": 0.0,
+                "violates_tau": True,
+                "violates_power": False,
+                "measurements": out.measurements,
+            }
+        tau, power = sim0.exact(out.config)
+        miss, bust = _violations(tau, power, targets)
+        # Baselines keep their raw normalized score next to the violation
+        # flags — the paper's presentation (ALERT achieves high τ *while*
+        # busting the cap) needs both visible. Only CORAL's scores feed
+        # the gates, and those zero out on violation above.
+        return {
+            "score": _score(tau, power, cell.regime, oracle_ref),
+            "tau": tau,
+            "power": power,
+            "violates_tau": bool(miss),
+            "violates_power": bool(bust),
+            "measurements": out.measurements,
+        }
+
+    # ALERT prioritizes throughput (its published objective) — in capped
+    # regimes the budget is handed over but, faithfully, soft.
+    baselines = {
+        "alert": _outcome_record(
+            alert(
+                space,
+                cell_simulator(cell, seed=_BASELINE_SEEDS["alert"]),
+                targets.tau_target,
+                targets.p_budget,
+            )
+        ),
+        "alert_online": _outcome_record(
+            alert_online(
+                space,
+                cell_simulator(cell, seed=_BASELINE_SEEDS["alert_online"]),
+                targets.tau_target,
+                targets.p_budget,
+                iters=iters,
+                seed=_BASELINE_SEEDS["alert_online"],
+            )
+        ),
+        "max_power": _outcome_record(
+            preset(
+                space,
+                cell_simulator(cell, seed=_BASELINE_SEEDS["max_power"]),
+                "max_power",
+            )
+        ),
+        "default": _outcome_record(
+            preset(
+                space,
+                cell_simulator(cell, seed=_BASELINE_SEEDS["default"]),
+                "default",
+            )
+        ),
+    }
+
+    return {
+        "device": cell.device,
+        "model": cell.model,
+        "workload": cell.workload,
+        "regime": cell.regime,
+        "mode": targets.mode,
+        "tau_target": targets.tau_target,
+        "p_budget": targets.p_budget if targets.capped else None,
+        "space_size": space.size(),
+        "oracle": {
+            "config": list(oracle_ref.config) if oracle_ref.config else None,
+            "tau": oracle_ref.tau,
+            "power": oracle_ref.power,
+            "measurements": oracle_ref.measurements,
+        },
+        "coral": coral,
+        "baselines": baselines,
+    }
+
+
+def run_matrix(
+    cells: Optional[Sequence[Cell]] = None,
+    iters: int = 10,
+    seeds: Sequence[int] = (0, 1, 2),
+    regenerate: str = "PYTHONPATH=src python -m benchmarks.matrix_bench",
+    quick: bool = False,
+) -> dict:
+    """Run every cell and assemble the schema'd BENCH_matrix record."""
+    if cells is None:
+        cells = enumerate_cells()
+    records = [run_cell(c, iters=iters, seeds=seeds) for c in cells]
+    return {
+        "schema_version": 1,
+        "regenerate": regenerate,
+        "quick": quick,
+        "iters": iters,
+        "seeds": list(seeds),
+        "grid": {
+            "devices": sorted({c.device for c in cells}),
+            "models": sorted({c.model for c in cells}),
+            "workloads": sorted({c.workload for c in cells}),
+            "regimes": sorted({c.regime for c in cells}),
+        },
+        "cells": records,
+        "summary": _summarize(records),
+    }
+
+
+def _summarize(records: List[dict]) -> dict:
+    single = [
+        r["coral"]["score"] for r in records if REGIMES[r["regime"]].single_target
+    ]
+    dual = [r for r in records if REGIMES[r["regime"]].dual_constraint]
+    all_scores = [r["coral"]["score"] for r in records]
+    return {
+        "n_cells": len(records),
+        "mean_coral_score": sum(all_scores) / max(len(all_scores), 1),
+        # null, not NaN, when the grid has no single-target regime — bare
+        # NaN tokens are not valid JSON for strict artifact consumers.
+        "min_single_target_score": min(single) if single else None,
+        "dual_power_violations": int(
+            sum(r["coral"]["power_violations"] for r in dual)
+        ),
+        # τ-floor boundary misses (power stayed within budget) — reported
+        # separately because the acceptance gate is the power cap.
+        "dual_tau_miss_cells": int(
+            sum(
+                r["coral"]["violation_rate"] > 0
+                and r["coral"]["power_violations"] == 0
+                for r in dual
+            )
+        ),
+    }
+
+
+def score_floors(record: dict) -> Dict[Tuple[str, str, str, str], float]:
+    """(device, model, workload, regime) → recorded floor, for the
+    bench-regression gate."""
+    return {
+        (c["device"], c["model"], c["workload"], c["regime"]): c["coral"][
+            "score_floor"
+        ]
+        for c in record["cells"]
+    }

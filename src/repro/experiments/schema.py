@@ -1,0 +1,249 @@
+"""JSON schema for BENCH_matrix.json and a dependency-free validator.
+
+``MATRIX_SCHEMA`` is standard JSON Schema (draft 2020-12 subset). When
+the ``jsonschema`` package is importable it is used directly; otherwise
+``validate_matrix_record`` falls back to a built-in structural checker
+covering the same constraints (type, required, enum, bounds) — CI and
+air-gapped containers validate either way.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+_OUTCOME = {
+    "type": "object",
+    "required": [
+        "score",
+        "tau",
+        "power",
+        "violates_tau",
+        "violates_power",
+        "measurements",
+    ],
+    "properties": {
+        "score": {"type": ["number", "null"], "minimum": 0},
+        "tau": {"type": "number", "minimum": 0},
+        "power": {"type": "number", "minimum": 0},
+        "violates_tau": {"type": "boolean"},
+        "violates_power": {"type": "boolean"},
+        "measurements": {"type": "integer", "minimum": 0},
+    },
+}
+
+_CELL = {
+    "type": "object",
+    "required": [
+        "device",
+        "model",
+        "workload",
+        "regime",
+        "mode",
+        "tau_target",
+        "p_budget",
+        "space_size",
+        "oracle",
+        "coral",
+        "baselines",
+    ],
+    "properties": {
+        "device": {"type": "string"},
+        "model": {"type": "string"},
+        "workload": {"type": "string"},
+        "regime": {"type": "string"},
+        "mode": {"type": "string", "enum": ["dual", "throughput"]},
+        "tau_target": {"type": "number", "minimum": 0},
+        "p_budget": {"type": ["number", "null"]},
+        "space_size": {"type": "integer", "minimum": 1},
+        "oracle": {
+            "type": "object",
+            "required": ["config", "tau", "power", "measurements"],
+            "properties": {
+                "config": {
+                    "type": ["array", "null"],
+                    "items": {"type": "number"},
+                },
+                "tau": {"type": "number", "minimum": 0},
+                "power": {"type": "number", "minimum": 0},
+                "measurements": {"type": "integer", "minimum": 0},
+            },
+        },
+        "coral": {
+            "type": "object",
+            "required": [
+                "score",
+                "score_min",
+                "score_floor",
+                "violation_rate",
+                "power_violations",
+                "found_feasible_rate",
+                "measurements_to_feasible",
+                "measurements",
+                "tau",
+                "power",
+                "config",
+            ],
+            "properties": {
+                "score": {"type": "number", "minimum": 0},
+                "score_min": {"type": "number", "minimum": 0},
+                "score_floor": {"type": "number", "minimum": 0},
+                "violation_rate": {
+                    "type": "number",
+                    "minimum": 0,
+                    "maximum": 1,
+                },
+                "power_violations": {"type": "integer", "minimum": 0},
+                "found_feasible_rate": {
+                    "type": "number",
+                    "minimum": 0,
+                    "maximum": 1,
+                },
+                "measurements_to_feasible": {
+                    "type": ["number", "null"],
+                    "minimum": 0,
+                },
+                "measurements": {"type": "integer", "minimum": 0},
+                "tau": {"type": "number", "minimum": 0},
+                "power": {"type": "number", "minimum": 0},
+                "config": {
+                    "type": ["array", "null"],
+                    "items": {"type": "number"},
+                },
+            },
+        },
+        "baselines": {
+            "type": "object",
+            "required": ["alert", "alert_online", "max_power", "default"],
+            "additionalProperties": _OUTCOME,
+        },
+    },
+}
+
+MATRIX_SCHEMA = {
+    "$schema": "https://json-schema.org/draft/2020-12/schema",
+    "title": "BENCH_matrix",
+    "type": "object",
+    "required": [
+        "schema_version",
+        "regenerate",
+        "quick",
+        "iters",
+        "seeds",
+        "grid",
+        "cells",
+        "summary",
+    ],
+    "properties": {
+        "schema_version": {"type": "integer", "enum": [1]},
+        "regenerate": {"type": "string"},
+        "quick": {"type": "boolean"},
+        "iters": {"type": "integer", "minimum": 1},
+        "seeds": {
+            "type": "array",
+            "items": {"type": "integer"},
+            "minItems": 1,
+        },
+        "grid": {
+            "type": "object",
+            "required": ["devices", "models", "workloads", "regimes"],
+            "properties": {
+                k: {
+                    "type": "array",
+                    "items": {"type": "string"},
+                    "minItems": 1,
+                }
+                for k in ("devices", "models", "workloads", "regimes")
+            },
+        },
+        "cells": {"type": "array", "items": _CELL, "minItems": 1},
+        "summary": {
+            "type": "object",
+            "required": [
+                "n_cells",
+                "mean_coral_score",
+                "min_single_target_score",
+                "dual_power_violations",
+                "dual_tau_miss_cells",
+            ],
+            "properties": {
+                "n_cells": {"type": "integer", "minimum": 1},
+                "mean_coral_score": {"type": "number"},
+                "min_single_target_score": {"type": ["number", "null"]},
+                "dual_power_violations": {"type": "integer", "minimum": 0},
+                "dual_tau_miss_cells": {"type": "integer", "minimum": 0},
+            },
+        },
+    },
+}
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def _check(node: Any, schema: dict, path: str, errors: List[str]) -> None:
+    """Minimal structural validator for the subset MATRIX_SCHEMA uses."""
+    types = schema.get("type")
+    if types is not None:
+        allowed = [types] if isinstance(types, str) else list(types)
+        ok = False
+        for t in allowed:
+            if t == "number":
+                ok |= isinstance(node, (int, float)) and not isinstance(node, bool)
+            elif t == "integer":
+                ok |= isinstance(node, int) and not isinstance(node, bool)
+            else:
+                ok |= isinstance(node, _TYPES[t])
+        if not ok:
+            errors.append(f"{path}: expected {allowed}, got {type(node).__name__}")
+            return
+    if node is None:
+        return
+    if "enum" in schema and node not in schema["enum"]:
+        errors.append(f"{path}: {node!r} not in {schema['enum']}")
+    if isinstance(node, (int, float)) and not isinstance(node, bool):
+        if "minimum" in schema and node < schema["minimum"]:
+            errors.append(f"{path}: {node} < minimum {schema['minimum']}")
+        if "maximum" in schema and node > schema["maximum"]:
+            errors.append(f"{path}: {node} > maximum {schema['maximum']}")
+    if isinstance(node, dict):
+        for req in schema.get("required", ()):
+            if req not in node:
+                errors.append(f"{path}: missing required key {req!r}")
+        props = schema.get("properties", {})
+        extra = schema.get("additionalProperties")
+        for k, v in node.items():
+            if k in props:
+                _check(v, props[k], f"{path}.{k}", errors)
+            elif isinstance(extra, dict):
+                _check(v, extra, f"{path}.{k}", errors)
+    if isinstance(node, list):
+        if "minItems" in schema and len(node) < schema["minItems"]:
+            errors.append(f"{path}: fewer than {schema['minItems']} items")
+        item_schema = schema.get("items")
+        if isinstance(item_schema, dict):
+            for i, v in enumerate(node):
+                _check(v, item_schema, f"{path}[{i}]", errors)
+
+
+def validate_matrix_record(record: dict) -> None:
+    """Raise ValueError if the record does not conform to MATRIX_SCHEMA."""
+    try:
+        import jsonschema
+    except ImportError:
+        jsonschema = None
+    if jsonschema is not None:
+        try:
+            jsonschema.validate(record, MATRIX_SCHEMA)
+        except jsonschema.ValidationError as e:
+            raise ValueError(f"BENCH_matrix record invalid: {e.message}") from e
+        return
+    errors: List[str] = []
+    _check(record, MATRIX_SCHEMA, "$", errors)
+    if errors:
+        raise ValueError(
+            "BENCH_matrix record invalid:\n  " + "\n  ".join(errors[:20])
+        )

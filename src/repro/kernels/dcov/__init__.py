@@ -1,7 +1,7 @@
-from repro.kernels.dcov.dcov import dcov_gram_pallas, dcov_sums_pallas  # noqa: F401
-from repro.kernels.dcov.ops import (  # noqa: F401
-    dcor_all_pallas,
-    dcor_pallas,
+from repro.kernels.dcov.dcov import (  # noqa: F401
+    dcov_gram_pallas,
+    dcov_sums_pallas,
     default_interpret,
 )
+from repro.kernels.dcov.ops import dcor_all_pallas, dcor_pallas  # noqa: F401
 from repro.kernels.dcov.ref import dcor_ref, dcov_gram_ref, dcov_sums_ref  # noqa: F401

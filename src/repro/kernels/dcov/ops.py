@@ -14,11 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dcov import dcor_from_sums
-from repro.kernels.dcov.dcov import (
-    dcov_gram_pallas,
-    dcov_sums_pallas,
-    default_interpret,
-)
+from repro.kernels.dcov.dcov import dcov_gram_pallas, dcov_sums_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

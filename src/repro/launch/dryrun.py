@@ -22,7 +22,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import REGISTRY, get_config
@@ -37,7 +36,6 @@ from repro.serving.engine import make_prefill_step, make_serve_step
 from repro.sharding.specs import (
     activation_sharding,
     cache_shardings,
-    data_axes,
     param_shardings,
 )
 from repro.training import AdamWConfig, make_train_step

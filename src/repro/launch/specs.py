@@ -2,14 +2,14 @@
 (arch × input-shape) pair — weak-type-correct, shardable, no allocation."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.configs.runtime import RunConfig
-from repro.configs.shapes import LONG_CONTEXT_WINDOW, InputShape
+from repro.configs.shapes import InputShape
 from repro.models.transformer import abstract_cache
 
 

@@ -15,7 +15,6 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.configs.runtime import RunConfig
-from repro.launch.mesh import make_host_mesh
 from repro.models.transformer import ApplyCtx, init_model_params
 from repro.training import AdamWConfig, SyntheticLM, make_train_step, multimodal_extras
 from repro.training import checkpoint as ckpt

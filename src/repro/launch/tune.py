@@ -12,7 +12,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
 from typing import Optional

@@ -18,9 +18,8 @@ Token dropping follows the standard fixed-capacity model
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -356,7 +356,6 @@ def _conv_tail(cfg: ModelConfig, hn: jax.Array, sp: dict) -> jax.Array:
     s = cfg.ssm
     proj = jnp.einsum("bsd,de->bse", hn, sp["in_proj"].astype(hn.dtype))
     di = s.inner(cfg.d_model)
-    nh = s.n_ssm_heads(cfg.d_model)
     xbc = proj[..., di : 2 * di + 2 * s.d_state]
     k = s.d_conv - 1
     tail = xbc[:, -k:, :]

@@ -27,7 +27,7 @@ from typing import Iterable, List, Optional, Tuple
 from repro.core.baselines import Outcome
 from repro.core.coral import CORAL
 from repro.core.space import CONCURRENCY_DIM, ConfigSpace
-from repro.device.hw import DEFAULT_HW, TPUv5eSpec
+from repro.device.hw import DEFAULT_HW, DeviceProfile, TPUv5eSpec
 from repro.device.measure import analytic_scale_and_power
 from repro.serving.runtime import Request, ServingRuntime
 
@@ -50,7 +50,7 @@ class ServingController:
     def __init__(
         self,
         runtime: ServingRuntime,
-        space: ConfigSpace,
+        space: Optional[ConfigSpace],
         workload: Iterable[Request],
         tau_target: float,
         p_budget: float = float("inf"),
@@ -59,7 +59,18 @@ class ServingController:
         mode: str = "dual",
         seed: int = 0,
         window: int = 10,
+        profile: Optional[DeviceProfile] = None,
     ):
+        # An injected device profile supplies both the knob grid and the
+        # power-model constants — the serving loop tunes whatever target
+        # the scenario matrix describes, not only the hand-wired default.
+        if profile is not None:
+            hw = profile.hw
+            if space is None:
+                space = profile.space()
+        if space is None:
+            raise ValueError("pass a ConfigSpace or a DeviceProfile")
+        self.profile = profile
         self.runtime = runtime
         self.space = space
         self.workload = iter(workload)

@@ -15,7 +15,6 @@ import numpy as np
 
 from repro.models.transformer import (
     ApplyCtx,
-    abstract_cache,
     decode_step,
     prefill,
 )

@@ -3,4 +3,16 @@ import sys
 
 # NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
 # single real device. Only repro.launch.dryrun forces 512 host devices.
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # for the benchmarks package
+
+# Env-flag handling is centralized in benchmarks.common — tests import
+# these instead of reading os.environ ad hoc, so CI and local runs read
+# every flag (QUICK, SERVING_PERF_STRICT, PALLAS_INTERPRET) identically.
+from benchmarks.common import (  # noqa: E402,F401
+    env_flag,
+    pallas_interpret,
+    quick,
+    serving_perf_strict,
+)

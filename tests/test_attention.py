@@ -1,10 +1,8 @@
 """Attention implementation tests: blocked == direct, windows, ring cache."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.runtime import RunConfig
 from repro.models.attention import attention
@@ -97,7 +95,7 @@ def test_mla_decode_equals_full_attention():
     """Absorbed MLA decode == expanded MLA attention at the last position."""
     from repro.configs.registry import REGISTRY
     from repro.models import mla as mla_lib
-    from repro.models.layers import abstract_params, init_params, ParamSpec
+    from repro.models.layers import init_params
     import jax
 
     cfg = REGISTRY["deepseek-v2-236b"].reduced()

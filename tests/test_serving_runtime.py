@@ -2,7 +2,6 @@
 slot refill, interval metrics, the concurrency→τ response (the knob was a
 no-op before this runtime existed), and CORAL closed-loop over live
 traffic."""
-import time
 
 import jax
 import numpy as np
@@ -122,14 +121,14 @@ def test_concurrency_raises_measured_throughput(engine):
     property of the host's host/device overlap headroom, not of the code
     alone — set SERVING_PERF_STRICT=0 to demote them to a skip on
     machines whose XLA threadpool already saturates every core."""
-    import os
+    from benchmarks.common import serving_perf_strict
 
     from repro.serving import measure_concurrency_curve
 
     cs = (1, 2, 3, 4, 5)
     best, _ = measure_concurrency_curve(engine, cs, rounds=6, groups=8)
     peak = max(best[c] for c in cs[1:])
-    strict = os.environ.get("SERVING_PERF_STRICT", "1") != "0"
+    strict = serving_perf_strict()
     if not strict and not (best[2] > best[1] and peak >= 1.2 * best[1]):
         pytest.skip(f"no pipelining headroom on this host: {best}")
     assert best[2] > best[1], best

@@ -4,11 +4,9 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import HloCostModel, _shape_info
-from repro.models.layers import ParamSpec
 from repro.sharding.specs import RULE_SETS, spec_for_axes
 
 

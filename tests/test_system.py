@@ -53,6 +53,7 @@ def test_full_loop_dual_constraint(artifact_terms):
     al = alert(space, DeviceSimulator(space, artifact_terms, seed=9), tau_t, p_b)
     alo = alert_online(space, DeviceSimulator(space, artifact_terms, seed=9),
                        tau_t, p_b)
+    assert alo.config is None or alo.power <= p_b  # only feasible trials win
     mx = preset(space, DeviceSimulator(space, artifact_terms, seed=9), "max_power")
     # the paper's qualitative ordering
     assert al.tau >= orc.tau * 0.9  # ALERT chases throughput...
