@@ -7,9 +7,13 @@ Fails (exit 1) on
     ratios, not absolute µs — both sides of a ratio ran on the same
     machine, so the gate is stable across runner generations);
   - any scenario-matrix cell's normalized-vs-oracle score dropping below
-    the baseline's recorded floor (``coral.score_floor``, the worst seed
-    minus a jitter margin);
-  - any power-budget violation in dual-constraint cells;
+    the baseline's recorded floor (``coral.score_floor`` for stationary
+    cells, ``adaptive.score_floor`` for drift cells);
+  - any power-budget violation in dual-constraint cells, or a drift cell
+    whose adaptive-static separation collapses below 0.3;
+  - a kernel record whose max |err| vs the reference implementation grew
+    past 10x its baseline, with an absolute floor of 1e-5 for near-exact
+    baselines (interpret-mode wall time is never gated);
   - a fresh record that is missing or fails schema validation.
 
 Serving gates depend on host pipelining headroom and are therefore only
@@ -102,16 +106,19 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
         return
     floors = score_floors(base)
     fresh_cells = {
-        (c["device"], c["model"], c["workload"], c["regime"]): c
+        (c["device"], c["model"], c["workload"], c["regime"]): c["coral"]["score"]
         for c in fresh["cells"]
     }
+    # dynamic cells gate on the drift-adaptive post-shift score
+    for c in fresh.get("drift_cells", ()):
+        key = (c["device"], c["model"], c["workload"], c["regime"])
+        fresh_cells[key] = c["adaptive"]["final_score"]
     compared = 0
     for key, floor in floors.items():
-        cell = fresh_cells.get(key)
-        if cell is None:
-            continue  # QUICK runs trim the workload axis
+        score = fresh_cells.get(key)
+        if score is None:
+            continue  # QUICK runs trim the workload axis and drift grid
         compared += 1
-        score = cell["coral"]["score"]
         if score < floor:
             errors.append(
                 f"matrix:{'/'.join(key)}: score {score:.3f} dropped below "
@@ -124,12 +131,56 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
         errors.append(
             f"matrix: {viol} power-budget violations in dual-constraint cells"
         )
+    # Drift separation must hold in every fresh dynamic cell: a static
+    # ablation that stops breaking means the drift no longer stresses
+    # one-shot tuning — a silent loss of the scenario's point. The
+    # threshold is the bench's own gate constant so the two cannot drift.
+    from repro.experiments.matrix import DRIFT_SEPARATION
+
+    for c in fresh.get("drift_cells", ()):
+        sep = c["adaptive"]["final_score"] - c["static"]["final_score"]
+        if sep < DRIFT_SEPARATION:
+            errors.append(
+                f"matrix:{c['device']}/{c['model']}/{c['regime']}: "
+                f"drift adaptive-static separation {sep:.3f} < "
+                f"{DRIFT_SEPARATION}"
+            )
+
+
+# Kernel-error floor: float32 interpret-mode errs jitter across BLAS/
+# platform generations, so tiny baselines (1e-8-ish) get an absolute
+# floor rather than a pure 10x ratio — but the floor stays far below any
+# real precision regression (a low-precision accumulation lands ~1e-4+).
+KERNEL_ERR_FLOOR = 1e-5
+
+
+def check_kernels(fresh: dict, base: dict, errors: List[str]) -> None:
+    """Kernel records gate on *correctness* (max |err| vs the reference
+    implementations), not interpret-mode wall time — CPU interpret
+    timings are noise, numerical drift is a real regression."""
+    for name, brec in base["results"].items():
+        frec = fresh["results"].get(name)
+        if frec is None:
+            errors.append(f"kernels:{name}: missing from fresh record")
+            continue
+        if "err_vs_ref" in brec:
+            err = frec.get("err_vs_ref")
+            if err is None:
+                errors.append(f"kernels:{name}: fresh record lacks err_vs_ref")
+                continue
+            bound = max(10.0 * brec["err_vs_ref"], KERNEL_ERR_FLOOR)
+            if err > bound:
+                errors.append(
+                    f"kernels:{name}: err_vs_ref {err:.2e} > bound "
+                    f"{bound:.2e} (10x baseline, floor {KERNEL_ERR_FLOOR:.0e})"
+                )
 
 
 CHECKS = {
     "analytics": ("BENCH_analytics.json", check_analytics),
     "serving": ("BENCH_serving.json", check_serving),
     "matrix": ("BENCH_matrix.json", check_matrix),
+    "kernels": ("BENCH_kernels.json", check_kernels),
 }
 
 
@@ -137,8 +188,8 @@ def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--records",
-        default="analytics,serving,matrix",
-        help="comma-separated subset of: analytics, serving, matrix",
+        default="analytics,serving,matrix,kernels",
+        help="comma-separated subset of: analytics, serving, matrix, kernels",
     )
     ap.add_argument("--fresh-dir", type=Path, default=ROOT)
     ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)

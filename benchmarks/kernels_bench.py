@@ -1,6 +1,9 @@
 """Micro-benchmarks for the Pallas kernels (interpret mode on CPU — the
 derived column reports correctness vs oracle, not TPU speed) plus the
-vectorized-analytics suite that records BENCH_analytics.json."""
+vectorized-analytics suite. Two machine-readable records come out:
+BENCH_kernels.json (per-kernel correctness + interpret-mode timing; the
+regression gate bounds the *error*, never the CPU wall time) and
+BENCH_analytics.json (loop-vs-batched speedups)."""
 from __future__ import annotations
 
 from pathlib import Path
@@ -15,11 +18,12 @@ from repro.kernels.flash_attention import attention_ref, flash_attention_bhsd
 from repro.kernels.ssd_scan import ssd, ssd_ref
 
 ANALYTICS_JSON = Path(__file__).resolve().parent.parent / "BENCH_analytics.json"
+KERNELS_JSON = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
 # CI smoke: fewer timing iterations (QUICK=0/false/empty means full run)
 QUICK = quick()
 
 
-def bench_dcov_kernel():
+def bench_dcov_kernel(record: dict | None = None):
     rng = np.random.default_rng(0)
     n = 512
     x = jnp.asarray(rng.normal(size=n), jnp.float32)
@@ -31,9 +35,11 @@ def bench_dcov_kernel():
     row("dcov_pallas_n512", us_pallas, f"err_vs_ref={err:.1e}")
     row("dcov_ref_n512", us_ref, "materialized n×n oracle")
     row("dcov_core_jnp_n512", us_core, "model-side jnp implementation")
+    if record is not None:
+        record["dcov_pallas_n512"] = {"us": us_pallas, "err_vs_ref": err}
 
 
-def bench_flash_attention_kernel():
+def bench_flash_attention_kernel(record: dict | None = None):
     rng = np.random.default_rng(1)
     b, hq, hkv, s, d = 1, 4, 2, 256, 64
     q = jnp.asarray(rng.normal(size=(b, hq, s, d)), jnp.float32)
@@ -53,9 +59,11 @@ def bench_flash_attention_kernel():
         )
     )
     row("flash_attention_s256", us, f"err_vs_ref={err:.1e} (interpret mode)")
+    if record is not None:
+        record["flash_attention_s256"] = {"us": us, "err_vs_ref": err}
 
 
-def bench_ssd_kernel():
+def bench_ssd_kernel(record: dict | None = None):
     rng = np.random.default_rng(2)
     b, s, nh, hd, n, chunk = 1, 256, 2, 32, 16, 32
     x = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
@@ -70,6 +78,8 @@ def bench_ssd_kernel():
     y2, s2 = ssd_ref(x, dt, A, Bm, Cm, chunk=chunk)
     err = float(jnp.max(jnp.abs(y1 - y2)))
     row("ssd_scan_s256", us, f"err_vs_ref={err:.1e} (interpret mode)")
+    if record is not None:
+        record["ssd_scan_s256"] = {"us": us, "err_vs_ref": err}
 
 
 def bench_coral_iteration_overhead():
@@ -216,6 +226,22 @@ def bench_analytics_suite():
     row("analytics_json", 0.0, f"wrote {ANALYTICS_JSON.name}")
 
 
+def bench_kernels_suite():
+    """Run the Pallas-kernel benches and emit BENCH_kernels.json."""
+    record: dict = {}
+    bench_dcov_kernel(record)
+    bench_flash_attention_kernel(record)
+    bench_ssd_kernel(record)
+    bench_coral_iteration_overhead()
+    payload = {
+        "regenerate": "PYTHONPATH=src python -m benchmarks.kernels_bench",
+        "results": record,
+    }
+    emit_json(KERNELS_JSON, payload)
+    row("kernels_json", 0.0, f"wrote {KERNELS_JSON.name}")
+
+
 if __name__ == "__main__":
     print("name,us_per_call,derived")
+    bench_kernels_suite()
     bench_analytics_suite()

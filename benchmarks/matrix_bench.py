@@ -24,21 +24,32 @@ SINGLE_TARGET_SCORE_GATE = 0.9
 
 def bench_matrix_suite():
     from repro.experiments import (
+        DRIFT_ADAPTIVE_GATE,
+        DRIFT_SEPARATION,
+        DRIFT_STATIC_CEILING,
         REGIMES,
         enumerate_cells,
         markdown_report,
         run_matrix,
         validate_matrix_record,
     )
-    from repro.experiments.scenarios import FULL_MATRIX_WORKLOADS
+    from repro.experiments.scenarios import (
+        FULL_MATRIX_WORKLOADS,
+        MATRIX_DRIFT_CELLS,
+        QUICK_DRIFT_CELLS,
+    )
 
     QUICK = quick()
-    # QUICK trims the workload axis only — iters/seeds stay identical, so
-    # the cells both modes run produce identical scores and the committed
-    # full-grid baseline gates the CI smoke run cell-for-cell.
-    cells = enumerate_cells() if QUICK else enumerate_cells(
-        workloads=FULL_MATRIX_WORKLOADS
-    )
+    # QUICK trims the workload axis and the drift grid (one cell per
+    # dynamic regime) — iters/seeds stay identical, so the cells both
+    # modes run produce identical scores and the committed full-grid
+    # baseline gates the CI smoke run cell-for-cell.
+    if QUICK:
+        cells = enumerate_cells() + list(QUICK_DRIFT_CELLS)
+    else:
+        cells = enumerate_cells(workloads=FULL_MATRIX_WORKLOADS) + list(
+            MATRIX_DRIFT_CELLS
+        )
     regenerate = ("QUICK=1 " if QUICK else "") + (
         "PYTHONPATH=src python -m benchmarks.matrix_bench"
     )
@@ -61,11 +72,22 @@ def bench_matrix_suite():
         cell_scores = [
             c["coral"]["score"] for c in record["cells"] if c["regime"] == regime
         ]
+        if not cell_scores:
+            continue  # dynamic regimes report below
         row(
             f"matrix_{regime}",
             0.0,
             f"worst_cell={min(cell_scores):.3f} "
             f"mean={sum(cell_scores) / len(cell_scores):.3f}",
+        )
+    for c in record["drift_cells"]:
+        rec = c["adaptive"]["recovery_intervals"]
+        row(
+            f"drift_{c['regime']}_{c['device']}_{c['model']}",
+            0.0,
+            f"adaptive={c['adaptive']['final_score']:.3f} "
+            f"static={c['static']['final_score']:.3f} "
+            f"recovery={'—' if rec is None else f'{rec:.1f}'}",
         )
 
     failures = []
@@ -82,6 +104,28 @@ def bench_matrix_suite():
             f"{s['dual_power_violations']} power-budget violations in "
             "dual-constraint cells (gate: 0)"
         )
+    # Dynamic-regime acceptance: on every drift cell the adaptive loop
+    # must reach the post-shift oracle while the static one-shot ablation
+    # demonstrably does not — and the gap must be decisive.
+    for c in record["drift_cells"]:
+        name = f"{c['device']}/{c['model']}/{c['regime']}"
+        a = c["adaptive"]["final_score"]
+        st = c["static"]["final_score"]
+        if a < DRIFT_ADAPTIVE_GATE:
+            failures.append(
+                f"drift cell {name}: adaptive post-shift score {a:.3f} < "
+                f"{DRIFT_ADAPTIVE_GATE}"
+            )
+        if st > DRIFT_STATIC_CEILING:
+            failures.append(
+                f"drift cell {name}: static ablation scored {st:.3f} > "
+                f"{DRIFT_STATIC_CEILING} (drift did not break one-shot tuning)"
+            )
+        if a - st < DRIFT_SEPARATION:
+            failures.append(
+                f"drift cell {name}: adaptive-static separation "
+                f"{a - st:.3f} < {DRIFT_SEPARATION}"
+            )
     if failures:
         raise RuntimeError("; ".join(failures))
     return record

@@ -2,12 +2,20 @@
 # hardware configuration search with throughput-power co-optimization.
 from repro.core.coral import CORAL, CoralState, Observation  # noqa: F401
 from repro.core.dcov import dcor, dcor_all, dcov2  # noqa: F401
+from repro.core.drift import CusumDetector, DriftConfig, DriftMonitor  # noqa: F401
 from repro.core.evaluate import (  # noqa: F401
+    DriftTrace,
     RegimeTargets,
     measurements_to_feasible,
     run_coral,
+    run_drift_regime,
     run_regime,
 )
 from repro.core.reward import reward  # noqa: F401
 from repro.core.search import next_config  # noqa: F401
-from repro.core.space import ConfigSpace, Dim, jetson_like_space, tpu_pod_space  # noqa: F401
+from repro.core.space import (  # noqa: F401
+    ConfigSpace,
+    Dim,
+    jetson_like_space,
+    tpu_pod_space,
+)

@@ -41,7 +41,9 @@ class Outcome:
         )
 
 
-def _sweep(space: ConfigSpace, device, exact: bool) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+def _sweep(
+    space: ConfigSpace, device, exact: bool
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """(grid (N,D), tau (N,), p (N,)) for the full space — one vectorized
     evaluation when the device supports batched sweeps, else a Python loop
     (any object with only scalar ``exact``/``measure``)."""

@@ -10,6 +10,16 @@ Per iteration:
            (best, second-best) toward the feasible/efficient region.
 
 The loop runs a fixed iteration budget (10 in the paper).
+
+Drift awareness (beyond the paper, EXPERIMENTS.md §Drift): constructed
+with a ``DriftConfig`` the optimizer becomes epoch-structured — it
+explores for ``explore_budget`` measurements, then *holds* its best
+feasible config while a CUSUM monitor watches that config's repeated
+(τ, p) measurements. A detected change-point (or an externally commanded
+power-budget change that the held config violates) triggers *bounded
+re-exploration*: the correlation window, anchors and exploration state
+reset to a fresh epoch while the prohibited-set memory is kept — a warm
+restart, not a cold one.
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ import numpy as np
 
 from repro.core import search
 from repro.core.dcov import dcor_all
+from repro.core.drift import DriftConfig, DriftMonitor
 from repro.core.reward import reward
 from repro.core.space import Config, ConfigSpace
 
@@ -32,6 +43,7 @@ class Observation:
     tau: float
     power: float
     reward: float
+    t: int = 0  # control-interval clock at measurement time
 
 
 @dataclasses.dataclass
@@ -50,6 +62,12 @@ class CoralState:
     # fires once: permanent pinning would freeze two dimensions.
     probed_for: Optional[Config] = None
     power_probe_done: bool = False
+    # Drift epochs: observations before ``epoch_start`` belong to earlier
+    # epochs — they stay in ``history`` (and the prohibited set keeps its
+    # memory) but anchors, correlation windows and revisit tracking only
+    # see the current epoch.
+    epoch_start: int = 0
+    resets: int = 0
 
 
 class CORAL:
@@ -79,6 +97,7 @@ class CORAL:
         probe_policy: str = "budget_aware",  # budget_aware|oneshot|persistent|off
         gamma_mode: str = "max",  # max (paper) | directional (beyond-paper)
         mode: str = "dual",  # dual | throughput (single-target §IV-B)
+        drift: Optional[DriftConfig] = None,
     ):
         self.space = space
         self.mode = mode
@@ -96,12 +115,161 @@ class CORAL:
         self.probe_policy = probe_policy
         self.gamma_mode = gamma_mode
         self.state = CoralState()
+        self.drift = drift
+        self.clock = 0  # control-interval counter (explore + hold)
+        self._held: Optional[Observation] = None
+        self._monitor: Optional[DriftMonitor] = None
+        self._retries = 0  # infeasible-hold retry epochs since last trigger
+
+    # ------------------------------------------------------------------
+    # Drift epochs
+    # ------------------------------------------------------------------
+    @property
+    def epoch_history(self) -> List[Observation]:
+        return self.state.history[self.state.epoch_start :]
+
+    @property
+    def epoch_n(self) -> int:
+        return len(self.state.history) - self.state.epoch_start
+
+    @property
+    def exploring(self) -> bool:
+        """True while the current epoch's exploration budget is unspent.
+        Without a DriftConfig, CORAL explores forever (paper behavior)."""
+        if self.drift is None:
+            return True
+        return self.epoch_n < self.drift.explore_budget
+
+    def hold_config(self) -> Config:
+        """The config held (and monitored) between exploration epochs:
+        the epoch's best feasible pick, falling back to best-by-reward."""
+        if self._held is None:
+            held = self.result()
+            if held is None:
+                held = self.state.last
+            self._held = held
+            if self.drift is not None and self.drift.monitor:
+                self._monitor = DriftMonitor(
+                    held.tau,
+                    held.power,
+                    sigma=self.drift.sigma,
+                    k_sigma=self.drift.k_sigma,
+                    h_sigma=self.drift.h_sigma,
+                    calibration=self.drift.calibration,
+                )
+        return self._held.config
+
+    def _feasible(self, tau: float, power: float) -> bool:
+        """Feasibility under the *current* constraints. The τ target is
+        the inf sentinel in throughput mode, so that mode only gates on
+        the power cap (matching ``reward``)."""
+        if self.mode == "throughput":
+            return power <= self.p_budget
+        return tau >= self.tau_target and power <= self.p_budget
+
+    def _hold_reward(self, tau: float, power: float) -> float:
+        """Alg. 1's reward shape without its prohibited-set mutation —
+        what a calm hold interval reports (mutating would prohibit the
+        held config on a single unlucky noise sample)."""
+        if not self._feasible(tau, power):
+            return -(power / max(tau, 1e-9))
+        return tau if self.mode == "throughput" else tau / max(power, 1e-9)
+
+    def next_config(self) -> Config:
+        """Unified control-loop entry: propose while exploring, otherwise
+        re-apply the held configuration.
+
+        If an exploration epoch ends without a pick that is feasible
+        under the *current* constraints, holding it would monitor a
+        stably-bad signal — spend another (bounded) exploration epoch
+        instead. Feasibility is re-evaluated here rather than read off
+        the stored reward sign: a commanded budget change can invalidate
+        a pick whose reward was computed under the old budget. The
+        static ablation (monitor off) never retries: one-shot tuning
+        holds whatever it found.
+        """
+        if self.exploring:
+            return self.propose()
+        if self._held is None and self.drift is not None and self.drift.monitor:
+            held = self.result() or self.state.last
+            infeasible = held is None or not self._feasible(held.tau, held.power)
+            if infeasible and self._retries < self.drift.max_retries:
+                self._retries += 1
+                self.re_explore()
+                return self.propose()
+        return self.hold_config()
+
+    def record(self, config: Config, tau: float, power: float) -> float:
+        """Unified observation entry: exploration measurements feed the
+        optimizer, hold measurements feed the change-point monitor (a
+        trigger starts the next exploration epoch, seeded with the held
+        config's just-measured post-shift performance)."""
+        if self.exploring:
+            return self.observe(config, tau, power)
+        self.clock += 1
+        changed = self._monitor is not None and self._monitor.update(tau, power)
+        if changed:
+            self._retries = 0  # a real change-point refreshes the allowance
+            self.re_explore()
+            # Seed the new epoch with the held config's just-taken
+            # measurement only if it is *infeasible* — prohibiting the
+            # broken config steers the fresh search away from it. A
+            # feasible-looking sample is discarded: the detector fires
+            # mid-transient, and carrying a half-shifted (plus lucky
+            # noise) measurement in once let a truly-infeasible config
+            # outrank every genuine post-shift observation.
+            if not self._feasible(tau, power):
+                self.clock -= 1  # observe() re-advances the clock
+                return self.observe(config, tau, power)
+            return 0.0
+        return self._hold_reward(tau, power)
+
+    def re_explore(self) -> None:
+        """Bounded re-exploration after a change-point: fresh epoch for
+        anchors/window/probe state, prohibited-set memory retained."""
+        st = self.state
+        st.epoch_start = len(st.history)
+        st.best = None
+        st.second = None
+        st.last = None
+        st.aside = False
+        st.probed_for = None
+        st.power_probe_done = False
+        st.resets += 1
+        self._held = None
+        self._monitor = None
+
+    def set_p_budget(self, p_budget: float) -> None:
+        """Commanded budget change (e.g. a rack-level cap step). Unlike
+        environment drift this is *known*, not detected: if the held
+        config's calibrated draw violates the new budget, re-explore
+        immediately."""
+        old = self.p_budget
+        self.p_budget = p_budget
+        if old == p_budget or self.exploring:
+            return
+        if self._held is None:
+            return
+        draw = (
+            self._monitor.ref_power if self._monitor is not None
+            else self._held.power
+        )
+        if draw > p_budget:
+            self._retries = 0
+            self.re_explore()
 
     # ------------------------------------------------------------------
     # Step 2: correlation analysis over the sliding window
     # ------------------------------------------------------------------
     def correlations(self) -> Tuple[np.ndarray, np.ndarray]:
-        hist = self.state.history[-self.window :]
+        hist = self.epoch_history[-self.window :]
+        if self.drift is not None and self.drift.halflife is not None:
+            # Exponentially-decayed buffer, hard-truncated at the decay
+            # horizon: a sample older than ~3 halflives carries <1/8 the
+            # weight of a fresh one — below the dCor window's resolution —
+            # so it is dropped rather than fractionally weighted.
+            horizon = 3.0 * self.drift.halflife
+            hist = [o for o in hist if self.clock - o.t <= horizon]
         d = len(self.space.dims)
         n = len(hist)
         if n < 3:  # not enough samples: uniform weights
@@ -124,9 +292,9 @@ class CORAL:
     # ------------------------------------------------------------------
     def propose(self) -> Config:
         st = self.state
-        n = len(st.history)
+        n = self.epoch_n
         if n == 0:
-            return self.space.midpoint()
+            return self._escape_prohibited(self.space.midpoint())
         if n == 1 or st.second is None:
             # second probe: exploit correlation-free diversity — max preset
             # if target unmet, min if power-bound.
@@ -205,8 +373,11 @@ class CORAL:
 
     def _escape_prohibited(self, cand: Config) -> Config:
         """Skip configs on the prohibited list (Alg. 1): walk to the nearest
-        unvisited neighbor; fall back to random restart."""
-        seen = self.state.prohibited | {o.config for o in self.state.history}
+        unvisited neighbor; fall back to random restart. Revisit tracking
+        is per-epoch: after a change-point, pre-shift measurements are
+        stale, so re-measuring an old config is allowed (the prohibited
+        set itself is kept — its entries were constraint violations)."""
+        seen = self.state.prohibited | {o.config for o in self.epoch_history}
         if cand not in seen:
             return cand
         frontier = [cand]
@@ -232,10 +403,16 @@ class CORAL:
     def observe(self, config: Config, tau: float, power: float) -> float:
         st = self.state
         r = reward(
-            tau, power, config, st.prohibited, self.tau_target, self.p_budget,
+            tau,
+            power,
+            config,
+            st.prohibited,
+            self.tau_target,
+            self.p_budget,
             mode=self.mode,
         )
-        obs = Observation(tuple(config), tau, power, r)
+        obs = Observation(tuple(config), tau, power, r, t=self.clock)
+        self.clock += 1
         st.history.append(obs)
         # aside: last probe failed to beat the current best → flip anchors
         st.aside = st.best is not None and r <= st.best.reward
@@ -252,16 +429,19 @@ class CORAL:
         """Best feasible observation (else best by reward).
 
         Dual mode ranks feasible observations by efficiency τ/p; throughput
-        mode (no τ target) ranks the power-feasible ones by τ.
+        mode (no τ target) ranks the power-feasible ones by τ. Only the
+        current epoch's observations are ranked — pre-shift measurements
+        describe a device that no longer exists.
         """
+        hist = self.epoch_history
         if self.mode == "throughput":
-            feas = [o for o in self.state.history if o.power <= self.p_budget]
+            feas = [o for o in hist if o.power <= self.p_budget]
             if feas:
                 return max(feas, key=lambda o: o.tau)
             return self.state.best
         feas = [
             o
-            for o in self.state.history
+            for o in hist
             if o.tau >= self.tau_target and o.power <= self.p_budget
         ]
         if feas:

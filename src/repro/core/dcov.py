@@ -84,9 +84,7 @@ def dcor_from_sums(
 
 
 @jax.jit
-def dcor_all(
-    settings: jax.Array, metrics: jax.Array, n_valid: jax.Array
-) -> jax.Array:
+def dcor_all(settings: jax.Array, metrics: jax.Array, n_valid: jax.Array) -> jax.Array:
     """All (setting dim, metric dim) correlation weights in one device call.
 
     Each column's double-centered distance matrix is computed once and all

@@ -14,6 +14,7 @@ from typing import List, Optional
 
 from repro.core.baselines import Outcome
 from repro.core.coral import CORAL
+from repro.core.drift import DriftConfig
 from repro.core.space import ConfigSpace
 
 
@@ -79,6 +80,82 @@ def measurements_to_feasible(tr: Trace, targets: RegimeTargets) -> Optional[int]
     return None
 
 
+@dataclasses.dataclass
+class DriftTrace:
+    """Per-interval record of a drift run: what was applied, what was
+    measured, and whether the optimizer was exploring or holding."""
+
+    configs: List[tuple]
+    taus: List[float]
+    powers: List[float]
+    exploring: List[bool]
+    budgets: List[float]  # effective p_budget at each interval
+    resets: int = 0
+
+
+def run_drift_regime(
+    space: ConfigSpace,
+    device,  # a DriftingSimulator (or anything with set_time + measure)
+    targets: RegimeTargets,
+    schedule,  # repro.device.hw.DriftSchedule
+    intervals: int,
+    explore_budget: int = 10,
+    window: int = 10,
+    seed: int = 0,
+    adaptive: bool = True,
+    sigma: float = 0.05,
+) -> tuple[CORAL, DriftTrace]:
+    """Closed loop over a non-stationary device twin.
+
+    Each control interval advances the device's drift clock, applies the
+    optimizer's next config (a proposal while exploring, the held config
+    while monitoring) and feeds the measurement back. ``adaptive=False``
+    is the static ablation: one exploration epoch, then hold forever with
+    the change-point monitor off — the one-shot tuning that PolyThrottle
+    shows breaking under changing operating conditions.
+
+    Budget steps are *commanded*, not detected: the loop reads the
+    schedule's ``budget_scale`` each interval and notifies the adaptive
+    optimizer via ``set_p_budget``; the static ablation is oblivious (it
+    keeps running against the stale budget, and is scored against the
+    real one).
+    """
+    drift = DriftConfig(
+        explore_budget=explore_budget,
+        sigma=sigma,
+        monitor=adaptive,
+        halflife=float(window),
+    )
+    opt = CORAL(
+        space,
+        targets.tau_target,
+        targets.p_budget,
+        window=window,
+        seed=seed,
+        mode=targets.mode,
+        drift=drift,
+    )
+    tr = DriftTrace([], [], [], [], [])
+    for t in range(intervals):
+        device.set_time(t)
+        budget_t = targets.p_budget * schedule.state_at(t).budget_scale
+        if adaptive and budget_t != opt.p_budget:
+            opt.set_p_budget(budget_t)
+        cfg = opt.next_config()
+        # read the flag *after* next_config: an infeasible-epoch retry
+        # flips the optimizer back into exploration and returns a probe,
+        # which must not be logged (and scored) as a held operating point
+        tr.exploring.append(opt.exploring)
+        tau, p = device.measure(cfg)
+        opt.record(cfg, tau, p)
+        tr.configs.append(tuple(cfg))
+        tr.taus.append(tau)
+        tr.powers.append(p)
+        tr.budgets.append(budget_t)
+    tr.resets = opt.state.resets
+    return opt, tr
+
+
 def run_coral(
     space: ConfigSpace,
     device,
@@ -95,7 +172,12 @@ def run_coral(
     # observation through the infeasible branch of Alg. 1 and maximize
     # -(p/τ) (efficiency) instead of throughput.
     opt = CORAL(
-        space, tau_target, p_budget, p_min=p_min, window=window, seed=seed,
+        space,
+        tau_target,
+        p_budget,
+        p_min=p_min,
+        window=window,
+        seed=seed,
         mode=mode,
     )
     tr = Trace([], [], [], [])

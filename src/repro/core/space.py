@@ -181,6 +181,16 @@ def profile_space(kind: str) -> ConfigSpace:
                 Dim("concurrency", (1.0, 2.0, 3.0, 4.0, 5.0)),  # 5
             )
         )
+    if kind == "edge_orin_nx":
+        return ConfigSpace(
+            dims=(
+                Dim("cpu_freq", tuple(float(v) for v in range(1190, 1985, 110))),  # 8
+                Dim("cpu_cores", (2.0, 3.0, 4.0, 5.0, 6.0)),  # 5
+                Dim("gpu_freq", (306.0, 408.0, 510.0, 612.0, 765.0, 918.0)),  # 6
+                Dim("mem_freq", (1866.0, 2665.0, 3733.0)),  # 3 LPDDR5 steps
+                Dim("concurrency", (1.0, 2.0, 3.0, 4.0)),  # 4
+            )
+        )
     if kind == "tpu_pod":
         return tpu_pod_space()
     raise KeyError(kind)

@@ -1,7 +1,13 @@
 from repro.device.hw import (  # noqa: F401
     DEFAULT_HW,
     DEVICE_PROFILES,
+    NO_DRIFT,
+    BudgetStep,
+    CotenantStep,
     DeviceProfile,
+    DriftSchedule,
+    DriftState,
+    ThermalRamp,
     TPUv5eSpec,
     get_profile,
 )
@@ -13,6 +19,7 @@ from repro.device.perfmodel import (  # noqa: F401
 from repro.device.power import PowerModel  # noqa: F401
 from repro.device.simulator import (  # noqa: F401
     DeviceSimulator,
+    DriftingSimulator,
     build_cell_simulator,
     jetson_like_simulator,
     synthetic_terms,

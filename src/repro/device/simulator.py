@@ -11,12 +11,19 @@ compiled multi-pod dry-run of a real (arch × shape × mesh) — see
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.space import Config, ConfigSpace
-from repro.device.hw import DEFAULT_HW, DeviceProfile, TPUv5eSpec
+from repro.device.hw import (
+    DEFAULT_HW,
+    DeviceProfile,
+    DriftSchedule,
+    DriftState,
+    TPUv5eSpec,
+)
 from repro.device.perfmodel import (
     PerfModel,
     RooflineTerms,
@@ -83,6 +90,124 @@ class DeviceSimulator:
         config-major order, so the RNG stream — and therefore every
         downstream selection — matches N sequential ``measure`` calls
         exactly."""
+        if configs is None:
+            configs = self.space.grid()
+        tau, p = self.exact_all(configs)
+        self.n_measurements += tau.size
+        if self.noise:
+            z = self.rng.normal(0.0, self.noise, size=(tau.size, 2))
+            tau = tau * (1.0 + z[:, 0])
+            p = p * (1.0 + z[:, 1])
+        return np.maximum(tau, 1e-9), np.maximum(p, 1e-9)
+
+
+class DriftingSimulator:
+    """A time-varying device twin: the wrapped simulator's delivered
+    clocks, host speed, stream contention and static power follow a
+    ``DriftSchedule`` on a control-interval clock.
+
+    ``set_time`` advances the clock; ``exact``/``measure``/``exact_all``
+    evaluate at the current interval, so the same object serves both the
+    noisy device the optimizer sees and (wrapped around a noise-free
+    base) the ground-truth twin that scores it — including the post-shift
+    oracle, which is just ``set_time(t_end)`` + the usual batched sweep.
+
+    Drift semantics (see ``repro.device.hw.DriftState``):
+      - thermal throttling reduces the *delivered* clock by
+        ``derate · f_rel`` of itself — quadratic in the requested level,
+        so high DVFS points lose disproportionately more throughput;
+      - dynamic power still follows the *requested* DVFS point (the
+        governor throttles by duty-cycling, the rail voltage stays
+        commanded) while static power inflates with temperature —
+        post-shift, racing the clock costs the same watts for less τ;
+      - a co-tenant inflates host time and per-stream DRAM contention;
+      - ``budget_scale`` is carried but not applied here: budgets are an
+        external constraint, the control loop reads them off the schedule.
+    """
+
+    def __init__(self, base: DeviceSimulator, schedule: DriftSchedule):
+        self.base = base
+        self.space = base.space
+        self.schedule = schedule
+        self.noise = base.noise
+        self.rng = base.rng
+        self.n_measurements = 0
+        self.t = 0
+        self._state = schedule.state_at(0)
+        self._models: Dict[Tuple[float, float], Tuple[PerfModel, PowerModel]] = {}
+
+    def set_time(self, t: int) -> None:
+        self.t = int(t)
+        self._state = self.schedule.state_at(self.t)
+
+    @property
+    def state(self) -> DriftState:
+        return self._state
+
+    def _drifted_models(
+        self, state: DriftState
+    ) -> Tuple[PerfModel, PowerModel]:
+        key = (state.host_inflation, state.kappa_add)
+        if key not in self._models:
+            base_perf = self.base.perf
+            terms = dataclasses.replace(
+                base_perf.terms,
+                t_host=base_perf.terms.t_host * (1.0 + state.host_inflation),
+            )
+            perf = PerfModel(
+                terms,
+                base_perf.hw,
+                base_perf.contention_kappa + state.kappa_add,
+            )
+            self._models[key] = (perf, PowerModel(perf, base_perf.hw))
+        return self._models[key]
+
+    def _idle_power(self) -> float:
+        hw = self.base.perf.hw
+        n = self.base.perf.terms.n_chips
+        n_hosts = max(n // hw.chips_per_host, 1)
+        return n * hw.p_idle_chip + n_hosts * hw.p_host_idle
+
+    def exact_all(
+        self, configs: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Noise-free (τ, p) arrays at the current drift clock."""
+        if configs is None:
+            configs = self.space.grid()
+        grid = np.asarray(configs, np.float64)
+        cols = canon_columns(self.space.names, grid)
+        state = self._state
+        perf, power_model = self._drifted_models(state)
+        hw = perf.hw
+        f_rel = cols["tpu_freq"] / hw.nominal_tpu_freq
+        m_rel = cols["hbm_freq"] / hw.nominal_hbm_freq
+        delivered = dict(cols)
+        delivered["tpu_freq"] = cols["tpu_freq"] * (
+            1.0 - state.clock_derate * f_rel
+        )
+        delivered["hbm_freq"] = cols["hbm_freq"] * (
+            1.0 - state.mem_derate * m_rel
+        )
+        tau, util, mem_frac = perf.stats_batch(delivered)
+        p = power_model.power_batch(cols, util, mem_frac)
+        p = p + state.static_inflation * self._idle_power()
+        return tau, p
+
+    def exact(self, config: Config) -> Tuple[float, float]:
+        tau, p = self.exact_all(np.asarray([config], np.float64))
+        return float(tau[0]), float(p[0])
+
+    def measure(self, config: Config) -> Tuple[float, float]:
+        tau, p = self.exact(config)
+        self.n_measurements += 1
+        if self.noise:
+            tau *= 1.0 + self.rng.normal(0.0, self.noise)
+            p *= 1.0 + self.rng.normal(0.0, self.noise)
+        return max(tau, 1e-9), max(p, 1e-9)
+
+    def measure_all(
+        self, configs: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
         if configs is None:
             configs = self.space.grid()
         tau, p = self.exact_all(configs)

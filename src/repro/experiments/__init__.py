@@ -6,21 +6,31 @@ scores cells as normalized-vs-oracle performance, constraint-violation
 rate and exploration cost. See EXPERIMENTS.md §Scenario matrix.
 """
 from repro.experiments.matrix import (  # noqa: F401
+    DRIFT_ADAPTIVE_GATE,
+    DRIFT_SEPARATION,
+    DRIFT_STATIC_CEILING,
     run_cell,
+    run_drift_cell,
     run_matrix,
 )
 from repro.experiments.report import markdown_report  # noqa: F401
 from repro.experiments.scenarios import (  # noqa: F401
+    DRIFT_INTERVALS,
+    DRIFT_SHIFT_START,
+    DRIFTS,
     MATRIX_DEVICES,
+    MATRIX_DRIFT_CELLS,
     MATRIX_MODELS,
     MATRIX_REGIMES,
     MATRIX_WORKLOADS,
+    QUICK_DRIFT_CELLS,
     REGIMES,
     WORKLOADS,
     Cell,
     Regime,
     Workload,
     cell_simulator,
+    drifting_cell_simulator,
     enumerate_cells,
     resolve_targets,
 )

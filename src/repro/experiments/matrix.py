@@ -24,12 +24,18 @@ from repro.core.baselines import Outcome, alert, alert_online, oracle, preset
 from repro.core.evaluate import (
     RegimeTargets,
     measurements_to_feasible,
+    run_drift_regime,
     run_regime,
 )
 from repro.experiments.scenarios import (
+    DRIFT_INTERVALS,
+    DRIFT_SHIFT_START,
+    DRIFTS,
     REGIMES,
+    WORKLOADS,
     Cell,
     cell_simulator,
+    drifting_cell_simulator,
     enumerate_cells,
     resolve_targets,
 )
@@ -207,6 +213,165 @@ def run_cell(
     }
 
 
+# Drift-cell acceptance levels (gated in benchmarks/matrix_bench.py):
+# drift-adaptive CORAL must average ≥ this fraction of the post-shift
+# oracle, the static ablation must average ≤ the ceiling, and the gap
+# between them must demonstrate that re-exploration — not luck — closed it.
+DRIFT_ADAPTIVE_GATE = 0.85
+DRIFT_STATIC_CEILING = 0.5
+DRIFT_SEPARATION = 0.3
+
+
+def run_drift_cell(
+    cell: Cell,
+    seeds: Sequence[int] = (0, 1, 2),
+    window: int = 10,
+    explore_budget: int = 10,
+    intervals: int = DRIFT_INTERVALS,
+    shift_start: int = DRIFT_SHIFT_START,
+) -> dict:
+    """One dynamic (non-stationary) cell → one JSON-ready record.
+
+    Runs drift-adaptive CORAL and the static (no-re-exploration) ablation
+    through the same drifting twin and scores both against the
+    *post-shift* oracle: the exhaustive search on the fully-shifted
+    noise-free landscape under the post-shift budget. Metrics:
+
+      final_score      — the optimizer's end-of-run choice, normalized
+                         vs. the post-shift oracle (violating → 0);
+      recovery_intervals — intervals from the shift until the loop holds
+                         a ≥0.85-scoring config for the rest of the run
+                         (None if it never settles that high);
+      transient_violation_rate — fraction of post-shift intervals whose
+                         *applied* config truly violated the constraints
+                         in force at that interval (exploration probes
+                         included: re-exploration's price is visible);
+      resets           — exploration epochs spent after the shift.
+    """
+    regime = REGIMES[cell.regime]
+    schedule = DRIFTS[regime.drift]
+    sim0 = cell_simulator(cell, noise=0.0)
+    space = sim0.space
+    targets = resolve_targets(cell, sim0)
+    sigma = WORKLOADS[cell.workload].noise
+
+    from repro.device.simulator import DriftingSimulator
+
+    twin = DriftingSimulator(sim0, schedule)
+    twin.set_time(intervals - 1)
+    p_budget_post = targets.p_budget * twin.state.budget_scale
+    post_oracle = oracle(space, twin, targets.tau_target, p_budget_post)
+
+    def final_state_score(cfg) -> float:
+        """Normalized-vs-post-oracle score at the fully-shifted state."""
+        if cfg is None or post_oracle.config is None:
+            return 0.0
+        twin.set_time(intervals - 1)
+        tau, p = twin.exact(cfg)
+        if (
+            tau < targets.tau_target * (1 - 1e-9)
+            or p > p_budget_post * (1 + 1e-9)
+        ):
+            return 0.0
+        if targets.mode == "throughput":
+            return tau / max(post_oracle.tau, 1e-9)
+        return (tau / max(p, 1e-9)) / max(post_oracle.efficiency, 1e-9)
+
+    def variant(adaptive: bool) -> dict:
+        finals: List[float] = []
+        recoveries: List[Optional[int]] = []
+        transients: List[float] = []
+        resets: List[int] = []
+        for seed in seeds:
+            dev = drifting_cell_simulator(cell, seed=seed)
+            opt, tr = run_drift_regime(
+                space,
+                dev,
+                targets,
+                schedule,
+                intervals,
+                explore_budget=explore_budget,
+                window=window,
+                seed=seed,
+                adaptive=adaptive,
+                sigma=sigma,
+            )
+            res = opt.result()
+            finals.append(final_state_score(res.config if res else None))
+            resets.append(tr.resets)
+            # recovery: first post-shift interval from which every *held*
+            # interval onward scores ≥ the adaptive gate (exploration
+            # probes between holds don't break the streak — they are the
+            # search, not the operating point)
+            holds = [
+                t
+                for t in range(shift_start, intervals)
+                if not tr.exploring[t]
+            ]
+            rec = None
+            scores = {t: final_state_score(tr.configs[t]) for t in holds}
+            for t in holds:
+                if all(scores[u] >= DRIFT_ADAPTIVE_GATE for u in holds if u >= t):
+                    rec = t - shift_start
+                    break
+            recoveries.append(rec)
+            # transient violations, against the constraints in force at t
+            viol = 0
+            for t in range(shift_start, intervals):
+                twin.set_time(t)
+                tau, p = twin.exact(tr.configs[t])
+                cap_t = targets.p_budget * schedule.state_at(t).budget_scale
+                if (
+                    tau < targets.tau_target * (1 - 1e-9)
+                    or p > cap_t * (1 + 1e-9)
+                ):
+                    viol += 1
+            transients.append(viol / (intervals - shift_start))
+        n = len(seeds)
+        recovered = [r for r in recoveries if r is not None]
+        mean_final = sum(finals) / n
+        return {
+            "final_score": mean_final,
+            "final_score_min": min(finals),
+            "final_score_max": max(finals),
+            "score_floor": round(max(0.0, mean_final - SCORE_FLOOR_MARGIN), 4),
+            "recovered_rate": len(recovered) / n,
+            "recovery_intervals": (
+                sum(recovered) / len(recovered) if recovered else None
+            ),
+            "transient_violation_rate": sum(transients) / n,
+            "resets": sum(resets) / n,
+        }
+
+    adaptive = variant(True)
+    static = variant(False)
+    twin.set_time(intervals - 1)
+    return {
+        "device": cell.device,
+        "model": cell.model,
+        "workload": cell.workload,
+        "regime": cell.regime,
+        "mode": targets.mode,
+        "tau_target": targets.tau_target,
+        "p_budget": targets.p_budget if targets.capped else None,
+        "p_budget_post": p_budget_post if targets.capped else None,
+        "space_size": space.size(),
+        "drift": {
+            "schedule": regime.drift,
+            "shift_start": shift_start,
+            "shift_end": schedule.shift_end,
+            "intervals": intervals,
+        },
+        "post_oracle": {
+            "config": list(post_oracle.config) if post_oracle.config else None,
+            "tau": post_oracle.tau,
+            "power": post_oracle.power,
+        },
+        "adaptive": adaptive,
+        "static": static,
+    }
+
+
 def run_matrix(
     cells: Optional[Sequence[Cell]] = None,
     iters: int = 10,
@@ -214,12 +379,21 @@ def run_matrix(
     regenerate: str = "PYTHONPATH=src python -m benchmarks.matrix_bench",
     quick: bool = False,
 ) -> dict:
-    """Run every cell and assemble the schema'd BENCH_matrix record."""
+    """Run every cell and assemble the schema'd BENCH_matrix record.
+
+    Cells whose regime names a drift schedule run the non-stationary
+    loop (``run_drift_cell``, adaptive vs. static ablation) and land in
+    the record's ``drift_cells`` array; stationary cells keep the
+    CORAL-vs-baselines shape in ``cells``.
+    """
     if cells is None:
         cells = enumerate_cells()
-    records = [run_cell(c, iters=iters, seeds=seeds) for c in cells]
+    static_cells = [c for c in cells if not REGIMES[c.regime].dynamic]
+    dynamic_cells = [c for c in cells if REGIMES[c.regime].dynamic]
+    records = [run_cell(c, iters=iters, seeds=seeds) for c in static_cells]
+    drift_records = [run_drift_cell(c, seeds=seeds) for c in dynamic_cells]
     return {
-        "schema_version": 1,
+        "schema_version": 2,
         "regenerate": regenerate,
         "quick": quick,
         "iters": iters,
@@ -231,17 +405,18 @@ def run_matrix(
             "regimes": sorted({c.regime for c in cells}),
         },
         "cells": records,
-        "summary": _summarize(records),
+        "drift_cells": drift_records,
+        "summary": _summarize(records, drift_records),
     }
 
 
-def _summarize(records: List[dict]) -> dict:
+def _summarize(records: List[dict], drift_records: List[dict] = ()) -> dict:
     single = [
         r["coral"]["score"] for r in records if REGIMES[r["regime"]].single_target
     ]
     dual = [r for r in records if REGIMES[r["regime"]].dual_constraint]
     all_scores = [r["coral"]["score"] for r in records]
-    return {
+    summary = {
         "n_cells": len(records),
         "mean_coral_score": sum(all_scores) / max(len(all_scores), 1),
         # null, not NaN, when the grid has no single-target regime — bare
@@ -259,15 +434,41 @@ def _summarize(records: List[dict]) -> dict:
                 for r in dual
             )
         ),
+        "n_drift_cells": len(drift_records),
+        "min_drift_adaptive_score": (
+            min(r["adaptive"]["final_score"] for r in drift_records)
+            if drift_records
+            else None
+        ),
+        "max_drift_static_score": (
+            max(r["static"]["final_score"] for r in drift_records)
+            if drift_records
+            else None
+        ),
+        "min_drift_separation": (
+            min(
+                r["adaptive"]["final_score"] - r["static"]["final_score"]
+                for r in drift_records
+            )
+            if drift_records
+            else None
+        ),
     }
+    return summary
 
 
 def score_floors(record: dict) -> Dict[Tuple[str, str, str, str], float]:
     """(device, model, workload, regime) → recorded floor, for the
-    bench-regression gate."""
-    return {
+    bench-regression gate. Dynamic cells contribute their drift-adaptive
+    floor — cell keys are unique across both arrays because a regime is
+    either stationary or dynamic, never both."""
+    floors = {
         (c["device"], c["model"], c["workload"], c["regime"]): c["coral"][
             "score_floor"
         ]
         for c in record["cells"]
     }
+    for c in record.get("drift_cells", ()):
+        key = (c["device"], c["model"], c["workload"], c["regime"])
+        floors[key] = c["adaptive"]["score_floor"]
+    return floors

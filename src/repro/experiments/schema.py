@@ -118,6 +118,88 @@ _CELL = {
     },
 }
 
+_DRIFT_VARIANT = {
+    "type": "object",
+    "required": [
+        "final_score",
+        "final_score_min",
+        "final_score_max",
+        "score_floor",
+        "recovered_rate",
+        "recovery_intervals",
+        "transient_violation_rate",
+        "resets",
+    ],
+    "properties": {
+        "final_score": {"type": "number", "minimum": 0},
+        "final_score_min": {"type": "number", "minimum": 0},
+        "final_score_max": {"type": "number", "minimum": 0},
+        "score_floor": {"type": "number", "minimum": 0},
+        "recovered_rate": {"type": "number", "minimum": 0, "maximum": 1},
+        "recovery_intervals": {"type": ["number", "null"], "minimum": 0},
+        "transient_violation_rate": {
+            "type": "number",
+            "minimum": 0,
+            "maximum": 1,
+        },
+        "resets": {"type": "number", "minimum": 0},
+    },
+}
+
+_DRIFT_CELL = {
+    "type": "object",
+    "required": [
+        "device",
+        "model",
+        "workload",
+        "regime",
+        "mode",
+        "tau_target",
+        "p_budget",
+        "p_budget_post",
+        "space_size",
+        "drift",
+        "post_oracle",
+        "adaptive",
+        "static",
+    ],
+    "properties": {
+        "device": {"type": "string"},
+        "model": {"type": "string"},
+        "workload": {"type": "string"},
+        "regime": {"type": "string"},
+        "mode": {"type": "string", "enum": ["dual", "throughput"]},
+        "tau_target": {"type": "number", "minimum": 0},
+        "p_budget": {"type": ["number", "null"]},
+        "p_budget_post": {"type": ["number", "null"]},
+        "space_size": {"type": "integer", "minimum": 1},
+        "drift": {
+            "type": "object",
+            "required": ["schedule", "shift_start", "shift_end", "intervals"],
+            "properties": {
+                "schedule": {"type": "string"},
+                "shift_start": {"type": "integer", "minimum": 0},
+                "shift_end": {"type": "integer", "minimum": 0},
+                "intervals": {"type": "integer", "minimum": 1},
+            },
+        },
+        "post_oracle": {
+            "type": "object",
+            "required": ["config", "tau", "power"],
+            "properties": {
+                "config": {
+                    "type": ["array", "null"],
+                    "items": {"type": "number"},
+                },
+                "tau": {"type": "number", "minimum": 0},
+                "power": {"type": "number", "minimum": 0},
+            },
+        },
+        "adaptive": _DRIFT_VARIANT,
+        "static": _DRIFT_VARIANT,
+    },
+}
+
 MATRIX_SCHEMA = {
     "$schema": "https://json-schema.org/draft/2020-12/schema",
     "title": "BENCH_matrix",
@@ -130,10 +212,11 @@ MATRIX_SCHEMA = {
         "seeds",
         "grid",
         "cells",
+        "drift_cells",
         "summary",
     ],
     "properties": {
-        "schema_version": {"type": "integer", "enum": [1]},
+        "schema_version": {"type": "integer", "enum": [2]},
         "regenerate": {"type": "string"},
         "quick": {"type": "boolean"},
         "iters": {"type": "integer", "minimum": 1},
@@ -155,6 +238,8 @@ MATRIX_SCHEMA = {
             },
         },
         "cells": {"type": "array", "items": _CELL, "minItems": 1},
+        # empty when the grid has no dynamic regime (e.g. trimmed runs)
+        "drift_cells": {"type": "array", "items": _DRIFT_CELL},
         "summary": {
             "type": "object",
             "required": [
@@ -163,6 +248,10 @@ MATRIX_SCHEMA = {
                 "min_single_target_score",
                 "dual_power_violations",
                 "dual_tau_miss_cells",
+                "n_drift_cells",
+                "min_drift_adaptive_score",
+                "max_drift_static_score",
+                "min_drift_separation",
             ],
             "properties": {
                 "n_cells": {"type": "integer", "minimum": 1},
@@ -170,6 +259,10 @@ MATRIX_SCHEMA = {
                 "min_single_target_score": {"type": ["number", "null"]},
                 "dual_power_violations": {"type": "integer", "minimum": 0},
                 "dual_tau_miss_cells": {"type": "integer", "minimum": 0},
+                "n_drift_cells": {"type": "integer", "minimum": 0},
+                "min_drift_adaptive_score": {"type": ["number", "null"]},
+                "max_drift_static_score": {"type": ["number", "null"]},
+                "min_drift_separation": {"type": ["number", "null"]},
             },
         },
     },

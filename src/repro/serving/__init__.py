@@ -1,4 +1,8 @@
-from repro.serving.engine import ServingEngine, make_prefill_step, make_serve_step  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ServingEngine,
+    make_prefill_step,
+    make_serve_step,
+)
 from repro.serving.runtime import (  # noqa: F401
     Request,
     ServingRuntime,

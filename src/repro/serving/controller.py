@@ -18,6 +18,13 @@ instead of a device model: each control interval the controller
 Under a bursty trace the queue builds up during under-provisioned
 intervals, so infeasible configs are penalized by what they actually did
 to live traffic — not by a model of what they would have done.
+
+With a ``drift_schedule`` the live intervals carry the drift clock
+(EXPERIMENTS.md §Drift): each control interval reads the schedule's
+operating condition, enacts the derated delivered rate and inflated rail
+draw on real traffic, relays commanded budget steps to the optimizer,
+and lets CORAL's change-point monitor watch the held config between
+exploration epochs.
 """
 from __future__ import annotations
 
@@ -26,8 +33,14 @@ from typing import Iterable, List, Optional, Tuple
 
 from repro.core.baselines import Outcome
 from repro.core.coral import CORAL
+from repro.core.drift import DriftConfig
 from repro.core.space import CONCURRENCY_DIM, ConfigSpace
-from repro.device.hw import DEFAULT_HW, DeviceProfile, TPUv5eSpec
+from repro.device.hw import (
+    DEFAULT_HW,
+    DeviceProfile,
+    DriftSchedule,
+    TPUv5eSpec,
+)
 from repro.device.measure import analytic_scale_and_power
 from repro.serving.runtime import Request, ServingRuntime
 
@@ -60,6 +73,8 @@ class ServingController:
         seed: int = 0,
         window: int = 10,
         profile: Optional[DeviceProfile] = None,
+        drift_schedule: Optional[DriftSchedule] = None,
+        drift: Optional[DriftConfig] = None,
     ):
         # An injected device profile supplies both the knob grid and the
         # power-model constants — the serving loop tunes whatever target
@@ -78,8 +93,23 @@ class ServingController:
         self.hw = hw
         self.tau_target = tau_target
         self.p_budget = p_budget
+        # Live intervals carry the drift clock: each control interval is
+        # one tick of the schedule, so thermal ramps / co-tenant steps /
+        # budget steps land on real traffic at the interval they name.
+        # A schedule without an explicit DriftConfig still gets a
+        # monitoring-enabled optimizer — drift without detection would
+        # silently degrade the held config.
+        self.drift_schedule = drift_schedule
+        if drift is None and drift_schedule is not None:
+            drift = DriftConfig()
         self.opt = CORAL(
-            space, tau_target, p_budget, window=window, seed=seed, mode=mode
+            space,
+            tau_target,
+            p_budget,
+            window=window,
+            seed=seed,
+            mode=mode,
+            drift=drift,
         )
         self.records: List[IntervalRecord] = []
         self._pending: Optional[Request] = None
@@ -88,7 +118,8 @@ class ServingController:
     def _submit_until(self, horizon_s: float) -> None:
         """Release trace arrivals with offsets inside the next interval."""
         if self._pending is not None:
-            if self._pending.arrival_s is not None and self._pending.arrival_s > horizon_s:
+            pending_at = self._pending.arrival_s
+            if pending_at is not None and pending_at > horizon_s:
                 return
             self.runtime.submit(self._pending)
             self._pending = None
@@ -99,14 +130,46 @@ class ServingController:
             self.runtime.submit(r)
 
     def control_step(self) -> IntervalRecord:
-        cfg = self.opt.propose()
+        # the interval index is the drift clock: schedules are defined in
+        # control intervals, and each step serves exactly one
+        t = len(self.records)
+        state = (
+            self.drift_schedule.state_at(t)
+            if self.drift_schedule is not None
+            else None
+        )
+        if state is not None:
+            budget_t = self.p_budget * state.budget_scale
+            if budget_t != self.opt.p_budget:
+                self.opt.set_p_budget(budget_t)  # commanded, not detected
+        cfg = self.opt.next_config()
         dev_rel, power = analytic_scale_and_power(self.space.names, cfg, self.hw)
+        if state is not None and not state.stationary:
+            # Enact the drifted operating condition on live traffic: the
+            # pacing scale carries the per-level clock derating and the
+            # co-tenant's stream contention (host_inflation is not paced —
+            # the runtime's host stage is real work, not a dial), and the
+            # analytical rail draw carries the extra static power.
+            from repro.device.perfmodel import canon
+
+            d = canon(dict(zip(self.space.names, cfg)))
+            f_rel = d["tpu_freq"] / self.hw.nominal_tpu_freq
+            m_rel = d["hbm_freq"] / self.hw.nominal_hbm_freq
+            derate = min(
+                1.0 - state.clock_derate * f_rel,
+                1.0 - state.mem_derate * m_rel,
+            )
+            contention = 1.0 + state.kappa_add * (d["concurrency"] - 1.0)
+            dev_rel = dev_rel * max(derate, 0.05) / contention
+            power = power + state.static_inflation * (
+                self.hw.p_idle_chip + self.hw.p_host_idle
+            )
         self.runtime.set_concurrency(int(cfg[self._c_index]))
         self.runtime.set_rate_scale(dev_rel)
         self._submit_until(self.runtime.now() + self.interval_s)
         m = self.runtime.run_for(self.interval_s, idle_wait=True)
         tau = m["throughput_tok_s"]  # pacing already enacted the DVFS scale
-        r = self.opt.observe(cfg, tau, power)
+        r = self.opt.record(cfg, tau, power)
         rec = IntervalRecord(
             config=tuple(cfg),
             tau=tau,

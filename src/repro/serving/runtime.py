@@ -234,7 +234,9 @@ class ServingRuntime:
             return self._t0 + r.arrival_s
         return r.arrived
 
-    def _metrics(self, reqs: List[Request], tokens: int, span: float) -> Dict[str, float]:
+    def _metrics(
+        self, reqs: List[Request], tokens: int, span: float
+    ) -> Dict[str, float]:
         lat = [r.finished - self._effective_arrival(r) for r in reqs] or [0.0]
         return {
             "throughput_tok_s": tokens / max(span, 1e-9),
@@ -316,8 +318,9 @@ def measure_runtime_throughput(
         wrt = ServingRuntime(engine, batch_size=batch_size, concurrency=1)
         for rid in range(wrt.batch):
             wrt.submit(
-                Request(-1 - rid, rng.integers(0, vocab, prompt_len,
-                                               dtype=np.int32), 2)
+                Request(
+                    -1 - rid, rng.integers(0, vocab, prompt_len, dtype=np.int32), 2
+                )
             )
         wrt.drain()
     runtime = ServingRuntime(engine, batch_size=batch_size, concurrency=concurrency)
@@ -365,9 +368,15 @@ def measure_concurrency_curve(
             best[c] = max(
                 best[c],
                 measure_runtime_throughput(
-                    engine, c, prompt_len=prompt_len, new_tokens=new_tokens,
-                    groups=groups, batch_size=batch_size, vocab=vocab,
-                    seed=seed, warmup=warm,
+                    engine,
+                    c,
+                    prompt_len=prompt_len,
+                    new_tokens=new_tokens,
+                    groups=groups,
+                    batch_size=batch_size,
+                    vocab=vocab,
+                    seed=seed,
+                    warmup=warm,
                 ),
             )
             warm = False  # shapes compiled by the first probe's warmup

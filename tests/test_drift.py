@@ -1,0 +1,275 @@
+"""Drift subsystem tests: the CUSUM change-point detector's operating
+characteristics (zero false triggers on stationary noise, guaranteed
+trigger under a thermal ramp), the drifting device twin's semantics, and
+re-exploration's state contract (prohibited memory kept, epoch reset)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import CORAL, DriftConfig
+from repro.core.baselines import oracle
+from repro.core.drift import CusumDetector, DriftMonitor
+from repro.core.evaluate import run_drift_regime
+from repro.device import (
+    DriftingSimulator,
+    DriftSchedule,
+    ThermalRamp,
+    build_cell_simulator,
+    get_profile,
+)
+from repro.experiments import (
+    DRIFT_SHIFT_START,
+    DRIFTS,
+    MATRIX_DRIFT_CELLS,
+    REGIMES,
+    drifting_cell_simulator,
+    resolve_targets,
+)
+
+NOISE = 0.02  # decode_steady trace noise — what the monitor is tuned for
+
+
+# ------------------------------------------------------------- detector
+def test_cusum_no_false_trigger_on_stationary_noise_across_seeds():
+    """In-control behavior: 200 noisy samples of an unchanged config,
+    20 seeds — the monitor must never fire (h=9σ, k=1σ leaves the
+    per-run false-alarm probability astronomically small)."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        mon = DriftMonitor(ref_tau=100.0, ref_power=10.0, sigma=NOISE)
+        for _ in range(200):
+            tau = 100.0 * (1.0 + rng.normal(0.0, NOISE))
+            p = 10.0 * (1.0 + rng.normal(0.0, NOISE))
+            assert not mon.update(tau, p), f"false trigger, seed {seed}"
+
+
+def test_cusum_triggers_within_k_intervals_on_thermal_ramp():
+    """A thermal-ramp twin degrades the held config's τ; the monitor must
+    fire within K intervals of the shift start for every seed."""
+    K = 8
+    cell = MATRIX_DRIFT_CELLS[0]  # edge-orin-nx thermal-ramp cell
+    sched = DRIFTS["thermal-ramp"]
+    sim0 = build_cell_simulator(
+        get_profile(cell.device), get_config(cell.model), noise=0.0
+    )
+    held = oracle(sim0.space, sim0, 0.55 * oracle(sim0.space, sim0, 0.0).tau)
+    for seed in range(5):
+        dev = DriftingSimulator(
+            build_cell_simulator(
+                get_profile(cell.device), get_config(cell.model), seed=seed
+            ),
+            sched,
+        )
+        mon = DriftMonitor(held.tau, held.power, sigma=NOISE)
+        fired_at = None
+        for t in range(DRIFT_SHIFT_START + K + 1):
+            dev.set_time(t)
+            tau, p = dev.measure(held.config)
+            if mon.update(tau, p):
+                fired_at = t
+                break
+        assert fired_at is not None, f"no trigger by t={t}, seed {seed}"
+        assert fired_at >= DRIFT_SHIFT_START, "fired before the shift"
+        assert fired_at <= DRIFT_SHIFT_START + K
+
+
+def test_cusum_two_sided():
+    det = CusumDetector(k=1.0, h=9.0)
+    for _ in range(5):
+        det.update(4.0)  # +4σ sustained
+    assert det.tripped
+    det.reset()
+    assert not det.tripped
+    for _ in range(5):
+        det.update(-4.0)  # the negative side trips independently
+    assert det.tripped
+
+
+# -------------------------------------------------------- drifting twin
+def test_drifting_simulator_identity_before_shift_and_batched_scalar_agree():
+    cell = MATRIX_DRIFT_CELLS[0]
+    ds = drifting_cell_simulator(cell, noise=0.0)
+    base = ds.base
+    t0, p0 = base.exact_all()
+    dt0, dp0 = ds.exact_all()
+    np.testing.assert_allclose(t0, dt0)
+    np.testing.assert_allclose(p0, dp0)
+    ds.set_time(100)
+    grid = ds.space.grid()
+    t1, p1 = ds.exact_all(grid[:16])
+    for i in range(16):
+        tau, p = ds.exact(tuple(grid[i]))
+        assert tau == pytest.approx(t1[i])
+        assert p == pytest.approx(p1[i])
+
+
+def test_thermal_derate_is_per_level_and_inflates_static_power():
+    """Thermal throttling must cost high DVFS steps a larger τ fraction
+    than low steps (delivered-clock derate is quadratic in the requested
+    level) and raise power everywhere (leakage)."""
+    prof = get_profile("edge-orin-nx")
+    base = build_cell_simulator(prof, get_config("qwen2.5-3b"), noise=0.0)
+    ds = DriftingSimulator(
+        base, DriftSchedule((ThermalRamp(0, 1, 0.3, 0.3, 0.3),))
+    )
+    t0, p0 = base.exact_all()
+    ds.set_time(10)
+    t1, p1 = ds.exact_all()
+    assert (p1 > p0).all()
+    grid = base.space.grid()
+    mem = grid[:, base.space.index("mem_freq")]
+    ratios = t1 / t0
+    # decode is memory-bound: the top memory step must lose a strictly
+    # larger τ fraction than the bottom step
+    assert ratios[mem == mem.max()].mean() < ratios[mem == mem.min()].mean()
+
+
+def test_drift_schedule_composition_and_budget_scale():
+    sched = DRIFTS["budget-step"]
+    assert sched.state_at(DRIFT_SHIFT_START - 1).budget_scale == 1.0
+    assert sched.state_at(DRIFT_SHIFT_START).budget_scale == pytest.approx(0.55)
+    ramp = DRIFTS["thermal-ramp"]
+    mid = ramp.state_at(DRIFT_SHIFT_START + 3)
+    full = ramp.state_at(DRIFT_SHIFT_START + 60)
+    assert 0 < mid.clock_derate < full.clock_derate
+    assert ramp.shift_start == DRIFT_SHIFT_START
+    assert ramp.shift_end == DRIFT_SHIFT_START + 6
+
+
+# ------------------------------------------------------- re-exploration
+def _drift_coral():
+    cell = MATRIX_DRIFT_CELLS[0]
+    sim0 = build_cell_simulator(
+        get_profile(cell.device), get_config(cell.model), noise=0.0
+    )
+    targets = resolve_targets(cell, sim0)
+    opt = CORAL(
+        sim0.space,
+        targets.tau_target,
+        targets.p_budget,
+        mode=targets.mode,
+        drift=DriftConfig(explore_budget=6, sigma=NOISE),
+    )
+    return opt, sim0
+
+
+def test_re_explore_preserves_prohibited_set_and_resets_epoch():
+    opt, sim0 = _drift_coral()
+    for _ in range(6):
+        cfg = opt.propose()
+        tau, p = sim0.exact(cfg)
+        opt.observe(cfg, tau, p)
+    prohibited_before = set(opt.state.prohibited)
+    assert opt.state.best is not None
+    assert not opt.exploring  # budget spent → holding
+    opt.re_explore()
+    assert opt.state.prohibited >= prohibited_before  # memory kept
+    assert opt.state.best is None and opt.state.second is None
+    assert opt.state.epoch_start == len(opt.state.history)
+    assert opt.state.resets == 1
+    assert opt.exploring  # fresh epoch explores again
+    # previously-visited configs are re-measurable in the new epoch (their
+    # pre-shift measurements are stale), but prohibited ones stay skipped
+    cand = opt.propose()
+    assert cand not in opt.state.prohibited
+
+
+def test_hold_measurements_do_not_mutate_state():
+    opt, sim0 = _drift_coral()
+    for _ in range(6):
+        cfg = opt.propose()
+        tau, p = sim0.exact(cfg)
+        opt.observe(cfg, tau, p)
+    held = opt.next_config()
+    n_hist = len(opt.state.history)
+    prohibited = set(opt.state.prohibited)
+    tau, p = sim0.exact(held)
+    for _ in range(5):  # calm holds: monitor feeds, nothing else moves
+        opt.record(held, tau, p)
+    assert len(opt.state.history) == n_hist
+    assert opt.state.prohibited == prohibited
+    assert opt.state.resets == 0
+
+
+def test_commanded_budget_step_triggers_re_exploration():
+    opt, sim0 = _drift_coral()
+    for _ in range(6):
+        cfg = opt.propose()
+        tau, p = sim0.exact(cfg)
+        opt.observe(cfg, tau, p)
+    held = opt.next_config()
+    _, held_p = sim0.exact(held)
+    opt.set_p_budget(held_p * 0.5)  # cut below the held draw
+    assert opt.state.resets == 1
+    assert opt.exploring
+
+
+# ------------------------------------------------- end-to-end separation
+@pytest.mark.parametrize("cell", MATRIX_DRIFT_CELLS[:2])
+def test_adaptive_recovers_where_static_breaks(cell):
+    """The acceptance property on the thermal cells: after the shift the
+    adaptive loop's choice is feasible and near the post-shift oracle
+    while the static ablation's held config violates the constraints."""
+    regime = REGIMES[cell.regime]
+    sched = DRIFTS[regime.drift]
+    sim0 = build_cell_simulator(
+        get_profile(cell.device), get_config(cell.model), noise=0.0
+    )
+    targets = resolve_targets(cell, sim0)
+    twin = DriftingSimulator(
+        build_cell_simulator(
+            get_profile(cell.device), get_config(cell.model), noise=0.0
+        ),
+        sched,
+    )
+    intervals = 56
+    twin.set_time(intervals - 1)
+    cap_post = targets.p_budget * twin.state.budget_scale
+    post = oracle(sim0.space, twin, targets.tau_target, cap_post)
+
+    def run(adaptive):
+        dev = drifting_cell_simulator(cell, seed=0)
+        opt, tr = run_drift_regime(
+            sim0.space,
+            dev,
+            targets,
+            sched,
+            intervals,
+            seed=0,
+            adaptive=adaptive,
+            sigma=NOISE,
+        )
+        res = opt.result()
+        return twin.exact(res.config), tr.resets
+
+    (a_tau, a_p), a_resets = run(True)
+    (s_tau, s_p), s_resets = run(False)
+    assert a_resets >= 1 and s_resets == 0
+    assert a_tau >= targets.tau_target and a_p <= cap_post * (1 + 1e-9)
+    a_eff = (a_tau / a_p) / post.efficiency
+    assert a_eff >= 0.85
+    static_violates = s_tau < targets.tau_target or s_p > cap_post
+    assert static_violates, "static ablation should break under this drift"
+
+
+def test_run_drift_regime_static_never_re_explores():
+    cell = MATRIX_DRIFT_CELLS[4]
+    sim0 = build_cell_simulator(
+        get_profile(cell.device), get_config(cell.model), noise=0.0
+    )
+    targets = resolve_targets(cell, sim0)
+    sched = DRIFTS[REGIMES[cell.regime].drift]
+    dev = drifting_cell_simulator(cell, seed=1)
+    opt, tr = run_drift_regime(
+        sim0.space,
+        dev,
+        targets,
+        sched,
+        40,
+        seed=1,
+        adaptive=False,
+        sigma=NOISE,
+    )
+    assert tr.resets == 0
+    assert len(set(tr.configs[10:])) == 1  # one held config, forever
