@@ -6,6 +6,12 @@ Fails (exit 1) on
   - a recorded speedup dropping more than 25% below its baseline (timing
     ratios, not absolute µs — both sides of a ratio ran on the same
     machine, so the gate is stable across runner generations);
+  - the compiled episode engine's speedup over the scalar episode loops
+    falling below 75% of max(baseline, the bench's own 10×/5×
+    static/drift acceptance floors) — the error-bounded-floor pattern of
+    the kernels gate applied to wall-clock ratios. Quick (trimmed-grid)
+    records are not gated: their small batches under-amortize the
+    compiled call;
   - any scenario-matrix cell's normalized-vs-oracle score dropping below
     the baseline's recorded floor (``coral.score_floor`` for stationary
     cells, ``adaptive.score_floor`` for drift cells);
@@ -37,6 +43,10 @@ ROOT = Path(__file__).resolve().parent.parent
 BASELINE_DIR = ROOT / "benchmarks" / "baselines"
 
 SLOWDOWN_FACTOR = 0.75  # fresh speedup must keep ≥75% of baseline
+
+# Episode-engine acceptance floors (mirror benchmarks.matrix_bench) —
+# compiled lax.scan episodes vs the scalar interpreter loops.
+EPISODE_SPEEDUP_FLOORS = {"static": 10.0, "drift": 5.0}
 
 
 def _load(path: Path, errors: List[str]) -> dict | None:
@@ -145,6 +155,23 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
                 f"drift adaptive-static separation {sep:.3f} < "
                 f"{DRIFT_SEPARATION}"
             )
+    # Episode-engine wall-clock: fresh full-grid speedups must hold 75%
+    # of max(baseline, acceptance floor) — the floor keeps the gate
+    # meaningful when a baseline was recorded on a noisy runner, the
+    # ratio keeps improvements from silently eroding.
+    fresh_engine = fresh.get("episode_engine")
+    base_engine = base.get("episode_engine", {})
+    if fresh_engine and not fresh.get("quick"):
+        for kind, floor in EPISODE_SPEEDUP_FLOORS.items():
+            got = fresh_engine[kind]["speedup"]
+            base_speedup = base_engine.get(kind, {}).get("speedup", floor)
+            required = SLOWDOWN_FACTOR * max(base_speedup, floor)
+            if got < required:
+                errors.append(
+                    f"matrix:episode_engine:{kind}: speedup {got:.1f}x < "
+                    f"{required:.1f}x (75% of max(baseline "
+                    f"{base_speedup:.1f}x, floor {floor:.0f}x))"
+                )
 
 
 # Kernel-error floor: float32 interpret-mode errs jitter across BLAS/

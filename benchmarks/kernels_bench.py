@@ -37,6 +37,18 @@ def bench_dcov_kernel(record: dict | None = None):
     row("dcov_core_jnp_n512", us_core, "model-side jnp implementation")
     if record is not None:
         record["dcov_pallas_n512"] = {"us": us_pallas, "err_vs_ref": err}
+    # ORACLE-scale: beyond one VMEM tile the auto-blocked kernel (8×8
+    # grid of 256-tiles here) must stay correct, not degrade to an
+    # oversized single tile. Timing is interpret-mode (correctness gate
+    # only); one rep keeps the 64-step grid walk affordable in CI.
+    n2 = 2048
+    x2 = jnp.asarray(rng.normal(size=n2), jnp.float32)
+    y2 = jnp.asarray(np.asarray(x2) ** 2 + rng.normal(size=n2) * 0.1, jnp.float32)
+    us2 = timeit(lambda: dcor_pallas(x2, y2).block_until_ready(), iters=1)
+    err2 = abs(float(dcor_pallas(x2, y2)) - float(dcor_ref(x2, y2)))
+    row("dcov_pallas_n2048", us2, f"err_vs_ref={err2:.1e} (auto block)")
+    if record is not None:
+        record["dcov_pallas_n2048"] = {"us": us2, "err_vs_ref": err2}
 
 
 def bench_flash_attention_kernel(record: dict | None = None):

@@ -3,11 +3,18 @@
 from repro.core.coral import CORAL, CoralState, Observation  # noqa: F401
 from repro.core.dcov import dcor, dcor_all, dcov2  # noqa: F401
 from repro.core.drift import CusumDetector, DriftConfig, DriftMonitor  # noqa: F401
+from repro.core.episode import (  # noqa: F401
+    EpisodeResult,
+    run_coral_batch,
+    run_drift_requests,
+    run_static_requests,
+)
 from repro.core.evaluate import (  # noqa: F401
     DriftTrace,
     RegimeTargets,
     measurements_to_feasible,
     run_coral,
+    run_coral_scalar,
     run_drift_regime,
     run_regime,
 )

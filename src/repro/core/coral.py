@@ -34,7 +34,13 @@ from repro.core import search
 from repro.core.dcov import dcor_all
 from repro.core.drift import DriftConfig, DriftMonitor
 from repro.core.reward import reward
-from repro.core.space import Config, ConfigSpace
+from repro.core.space import (
+    Config,
+    ConfigSpace,
+    index_coords,
+    row_index,
+    space_rows,
+)
 
 
 @dataclasses.dataclass
@@ -372,30 +378,32 @@ class CORAL:
         return self._escape_prohibited(cand)
 
     def _escape_prohibited(self, cand: Config) -> Config:
-        """Skip configs on the prohibited list (Alg. 1): walk to the nearest
-        unvisited neighbor; fall back to random restart. Revisit tracking
-        is per-epoch: after a change-point, pre-shift measurements are
-        stale, so re-measuring an old config is allowed (the prohibited
-        set itself is kept — its entries were constraint violations)."""
+        """Skip configs on the prohibited list (Alg. 1): jump to the
+        *nearest unseen* config — minimum L1 distance in level-index
+        space (the BFS level of the old frontier walk), ties broken by
+        grid-row order. The canonical rule replaces the frontier BFS
+        (whose within-level order depended on path enumeration) so the
+        compiled episode engine can evaluate the identical argmin over
+        the grid; ``tests/test_episode.py`` pins the two paths together.
+        Revisit tracking is per-epoch: after a change-point, pre-shift
+        measurements are stale, so re-measuring an old config is allowed
+        (the prohibited set itself is kept — its entries were constraint
+        violations)."""
         seen = self.state.prohibited | {o.config for o in self.epoch_history}
         if cand not in seen:
             return cand
-        frontier = [cand]
-        visited = {cand}
-        for _ in range(64):
-            nxt = []
-            for c in frontier:
-                for nb in self.space.neighbors(c):
-                    if nb in visited:
-                        continue
-                    if nb not in seen:
-                        return nb
-                    visited.add(nb)
-                    nxt.append(nb)
-            if not nxt:
-                break
-            frontier = nxt
-        return self.space.random(self.rng)
+        coords = index_coords(self.space)
+        n = coords.shape[0]
+        seen_mask = np.zeros(n, bool)
+        for cfg in seen:
+            seen_mask[row_index(self.space, cfg)] = True
+        if seen_mask.all():  # exhausted grid — unreachable at episode scale
+            return self.space.random(self.rng)
+        ci = coords[row_index(self.space, cand)]
+        dist = np.abs(coords - ci).sum(axis=1).astype(np.int32)
+        key = dist * np.int32(n) + np.arange(n, dtype=np.int32)
+        key = np.where(seen_mask, np.int32(np.iinfo(np.int32).max), key)
+        return space_rows(self.space)[int(np.argmin(key))]
 
     # ------------------------------------------------------------------
     # Step 1: reward evaluation & state update

@@ -1,0 +1,1133 @@
+"""Array-native episode engine: one compiled call per batch of episodes.
+
+The scalar loops in ``repro.core.evaluate`` run CORAL one interpreter
+iteration at a time — ~50 tiny jitted ``dcor_all`` dispatches per cell,
+repeated across 54 static cells × 3 seeds and 6 drift cells × 3 seeds ×
+2 variants every nightly run. This module re-expresses a *whole episode*
+as a pure ``lax.scan`` step over fixed-size array state and lifts it
+with ``vmap`` across seeds × cells × baseline variants: the entire
+episode layer of the scenario matrix becomes ONE compiled call per
+episode family (static, drift).
+
+State layout (one episode):
+
+  - history: one ``(T+W, D+4)`` append-only observation block — config
+    values, τ, p, then the clock stamp and grid-row index as exact-
+    integer float32 columns — so recording an observation is a single
+    scatter. Appending at row ``n_obs`` keeps unwritten rows zero, so
+    ``lax.dynamic_slice`` at the window start reproduces the scalar
+    path's zero-padded ``(W, D+2)`` dcor input bit-for-bit — the *same*
+    jitted dcor math serves both paths (``dcor_all_cols``).
+  - seen tag: one ``(N,)`` int32 over ``space.grid()`` rows — a row is
+    prohibited forever at ``INT_MAX`` (Alg. 1) or visited-this-epoch at
+    the current ``epoch_id``; ``tag >= epoch_id`` is the whole revisit
+    test, a drift re-exploration resets it by bumping the scalar
+    ``epoch_id``, and writes are O(1) scatters. The canonical escape
+    (CORAL._escape_prohibited) is one argmin over a precomputed,
+    device-resident ``(N, N)`` key table of
+    ``L1-level-distance · N + row``.
+  - anchors: best / second / last as (row-index, τ, p, reward) scalars
+    with validity flags, replacing ``Observation`` objects. Every state
+    update is gated at the leaf (``where(taken, new, old)``) — there is
+    no branch-and-select over the whole carry, which keeps the per-step
+    op count flat.
+  - the device twin is folded in as data: ``(T, N)`` measurement tables
+    — the float64 landscape times the seed's exact numpy noise stream,
+    precomputed host-side and cast to float32 — so a measurement inside
+    the scan is a single gather. The adaptive and static variants of a
+    drift cell share one table via ``table_id``.
+
+Everything cell-specific — the constraint shape (``throughput`` flag,
+τ target, budget), even the drift variant (``adaptive`` flag) — rides
+the batch axis as data. Grids are zero-padded to the batch's largest
+space (padding rows are born prohibited, so no code path can select
+them); the padded per-space constants stay device-resident across calls
+and are selected per episode by ``space_id``, so only measurement
+tables cross the host/device boundary per call. One jit specializes
+only on episode *structure*: (T, W, D, padded N, the participating
+spaces, drift-ness).
+
+Equivalence contract (tests/test_episode.py): compiled episodes replay
+the scalar loops' *selections* exactly — same chosen configs per seed —
+and τ/p traces are reconstructed in float64 from the same landscape ×
+noise products, so they are bitwise equal to the scalar measurements.
+Decision arithmetic inside the scan runs in float32; the scalar path
+was canonicalized to the same float32 ops (``search.alg2_levels``),
+leaving fp-tie flips (two float64 quantities within one float32 ulp) as
+the only divergence channel — never observed across the matrix, and
+pinned by the equivalence suite.
+
+What is deliberately NOT vectorized: see EXPERIMENTS.md §Episode engine
+(open-loop baselines are gathers, not scans; the ALERT offline profiler
+is already one ``measure_all`` sweep; per-cell scoring stays numpy
+float64 host code).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import functools
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search
+from repro.core.baselines import Outcome
+from repro.core.dcov import dcor_all_cols
+from repro.core.space import (
+    CONCURRENCY_DIM,
+    CORES_DIM_CANDIDATES,
+    ConfigSpace,
+    index_coords,
+    level_strides,
+    row_index,
+    space_grid,
+    space_rows,
+)
+
+_INT_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+# ---------------------------------------------------------------------------
+# Engine specification — only what shapes the compiled program.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Structural (compile-time) episode parameters. Hashable: one
+    compiled executable per distinct spec, cached via ``lru_cache``.
+    ``spaces`` is the ordered tuple of distinct grids in the batch —
+    their padded constants are baked into the executable and selected
+    per episode by ``space_id``."""
+
+    spaces: Tuple[ConfigSpace, ...]
+    iters: int  # episode length T (intervals for drift episodes)
+    window: int  # dCor sliding window W
+    drift: bool = False  # epoch-structured drift episode
+    explore_budget: int = 10
+    halflife: Optional[float] = None  # dCor age horizon (drift: window)
+    calibration: int = 8
+    k_sigma: float = 1.25
+    h_sigma: float = 9.0
+    max_retries: int = 2
+    p_min: float = 0.0
+
+    @property
+    def n(self) -> int:
+        return max(s.size() for s in self.spaces)
+
+    @property
+    def d(self) -> int:
+        return len(self.spaces[0].dims)
+
+    @property
+    def lmax(self) -> int:
+        return max(len(d.values) for s in self.spaces for d in s.dims)
+
+
+@functools.lru_cache(maxsize=None)
+def _space_consts(space: ConfigSpace) -> Dict[str, np.ndarray]:
+    """Per-space constant arrays, padded per batch by ``_packed_consts``."""
+    return {
+        "grid32": space_grid(space).astype(np.float32),
+        "coords": index_coords(space),
+        "strides": level_strides(space),
+        "ladders": search.padded_ladders(space),
+        "n_levels": np.asarray([len(d.values) for d in space.dims], np.int32),
+        "notches": search.dim_notches(space, True),
+        "cores_mask": np.asarray(search.role_mask(space, CORES_DIM_CANDIDATES)),
+        "conc_mask": np.asarray(search.role_mask(space, (CONCURRENCY_DIM,))),
+        "mid_idx": np.int32(row_index(space, space.midpoint())),
+        "max_idx": np.int32(row_index(space, space.preset("max_power"))),
+        "min_idx": np.int32(row_index(space, space.preset("min_power"))),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_consts(spec: EngineSpec) -> Dict[str, np.ndarray]:
+    """The batch's space constants stacked over ``spaces`` and padded to
+    (n rows, lmax levels). Padding grid rows are zeros and born
+    prohibited (``pad_mask``); padding ladder levels are +inf so the
+    snap argmin never selects them."""
+    n, lmax, d = spec.n, spec.lmax, spec.d
+    s = len(spec.spaces)
+    out = {
+        "grid32": np.zeros((s, n, d), np.float32),
+        "ladders": np.full((s, d, lmax), np.inf, np.float32),
+        "pad_mask": np.ones((s, n), bool),
+    }
+    for name in ("strides", "n_levels", "notches", "cores_mask", "conc_mask"):
+        out[name] = np.stack(
+            [_space_consts(sp)[name] for sp in spec.spaces]
+        )
+    for name in ("mid_idx", "max_idx", "min_idx"):
+        out[name] = np.asarray(
+            [_space_consts(sp)[name] for sp in spec.spaces], np.int32
+        )
+    for i, sp in enumerate(spec.spaces):
+        k = _space_consts(sp)
+        n0 = k["grid32"].shape[0]
+        out["grid32"][i, :n0] = k["grid32"]
+        out["ladders"][i, :, : k["ladders"].shape[1]] = k["ladders"]
+        out["pad_mask"][i, :n0] = False
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _escape_key_table(space: ConfigSpace, n: int) -> np.ndarray:
+    """(n, n) int32 canonical escape keys: row c is ``L1-level-distance
+    to c · n + row index`` for every grid row — the exact ordering
+    CORAL._escape_prohibited minimizes (the padded multiplier n ≥ N
+    preserves the (distance, row) lexicographic order). Precomputing the
+    table turns the per-step escape into one row gather + argmin instead
+    of an (N × D) distance reduction inside the scan."""
+    coords = index_coords(space).astype(np.int32)
+    n0 = coords.shape[0]
+    dist = np.zeros((n0, n0), np.int32)
+    for dim in range(coords.shape[1]):
+        lev = coords[:, dim]
+        dist += np.abs(lev[:, None] - lev[None, :])
+    out = np.full((n, n), _INT_MAX, np.int32)
+    out[:n0, :n0] = dist * np.int32(n) + np.arange(n0, dtype=np.int32)[None, :]
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _device_consts(spec: EngineSpec) -> Dict[str, jnp.ndarray]:
+    """Device-resident constants for one spec, staged once — passed as
+    (unbatched) jit arguments so calls move only measurement tables."""
+    dc = {name: jnp.asarray(v) for name, v in _packed_consts(spec).items()}
+    dc["key_tab"] = jnp.asarray(
+        np.stack([_escape_key_table(sp, spec.n) for sp in spec.spaces])
+    )
+    return dc
+
+
+# ---------------------------------------------------------------------------
+# Carry construction and (flat, gated) epoch reset
+# ---------------------------------------------------------------------------
+
+
+def _init_carry(spec: EngineSpec, ep: Dict, pad_mask) -> Dict[str, jnp.ndarray]:
+    t, w, d = spec.iters, spec.window, spec.d
+    f32, i32 = jnp.float32, jnp.int32
+    c = {
+        # one (T+W, D+4) observation block: config values, τ, p, then
+        # the clock stamp and the grid-row index as exact-integer
+        # float32 columns — the whole observation is ONE scatter per
+        # step, and the leading D+2 columns are already the dcor window
+        # layout so the propose step slices it once
+        "hist_sm": jnp.zeros((t + w, d + 4), f32),
+        "n_obs": i32(0),
+        "epoch_start": i32(0),
+        "epoch_id": i32(0),
+        "clock": i32(0),
+        # one (N,) "seen" tag: row is prohibited forever at INT_MAX
+        # (padding rows are born there, so no code path selects them) or
+        # visited-this-epoch at the current epoch_id — ``tag >= epoch_id``
+        # is the whole revisit test, and re-exploration resets it by
+        # bumping the scalar epoch_id
+        "seen_tag": jnp.where(pad_mask, jnp.int32(_INT_MAX), jnp.int32(-1)),
+        "best_idx": i32(-1),
+        "best_tau": f32(0),
+        "best_p": f32(0),
+        "best_r": f32(-jnp.inf),
+        "best_valid": jnp.bool_(False),
+        "sec_idx": i32(-1),
+        "sec_tau": f32(0),
+        "sec_p": f32(0),
+        "sec_r": f32(-jnp.inf),
+        "sec_valid": jnp.bool_(False),
+        "last_idx": i32(-1),
+        "last_tau": f32(0),
+        "last_p": f32(0),
+        "last_valid": jnp.bool_(False),
+        "aside": jnp.bool_(False),
+        "probed_for": i32(-1),
+        "probe_done": jnp.bool_(False),
+    }
+    if spec.drift:
+        c.update(
+            p_budget=jnp.asarray(ep["p_budget0"], f32),
+            mon_sigma=jnp.maximum(jnp.asarray(ep["sigma"], f32), 1e-6),
+            held_idx=i32(-1),
+            held_tau=f32(0),
+            held_p=f32(0),
+            held_valid=jnp.bool_(False),
+            mon_ref_tau=f32(1),
+            mon_ref_p=f32(1),
+            mon_calib=i32(0),
+            mon_pos_tau=f32(0),
+            mon_neg_tau=f32(0),
+            mon_pos_p=f32(0),
+            mon_neg_p=f32(0),
+            mon_active=jnp.bool_(False),
+            retries=i32(0),
+            resets=i32(0),
+        )
+    return c
+
+
+def _re_explore(c: Dict, cond) -> Dict:
+    """CORAL.re_explore gated by ``cond``: fresh epoch for anchors /
+    window / probe / revisit state, prohibited memory kept. Scalar-only
+    updates — revisit tracking resets by bumping ``epoch_id``."""
+    c = dict(c)
+    c["epoch_start"] = jnp.where(cond, c["n_obs"], c["epoch_start"])
+    c["epoch_id"] = c["epoch_id"] + cond.astype(jnp.int32)
+    neg_inf = jnp.float32(-jnp.inf)
+    for k in ("best", "sec", "last"):
+        c[f"{k}_valid"] = c[f"{k}_valid"] & ~cond
+    c["best_r"] = jnp.where(cond, neg_inf, c["best_r"])
+    c["sec_r"] = jnp.where(cond, neg_inf, c["sec_r"])
+    c["aside"] = c["aside"] & ~cond
+    c["probed_for"] = jnp.where(cond, -1, c["probed_for"])
+    c["probe_done"] = c["probe_done"] & ~cond
+    if "held_valid" in c:
+        c["held_valid"] = c["held_valid"] & ~cond
+        c["mon_active"] = c["mon_active"] & ~cond
+        c["resets"] = c["resets"] + cond.astype(jnp.int32)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# CORAL step pieces (exact mirrors of repro.core.coral)
+# ---------------------------------------------------------------------------
+
+
+def _feasible(thr, tau, p, tau_target, p_budget):
+    """Feasibility under the current constraints; mode is traced data
+    (in throughput mode ``tau_target`` carries the +inf sentinel and is
+    never consulted — matching CORAL._feasible)."""
+    return jnp.where(thr, p <= p_budget, (tau >= tau_target) & (p <= p_budget))
+
+
+def _reward(thr, tau, p, tau_target, p_budget):
+    infeas = ~_feasible(thr, tau, p, tau_target, p_budget)
+    penalty = -(p / jnp.maximum(tau, 1e-9))
+    gain = jnp.where(thr, tau, tau / jnp.maximum(p, 1e-9))
+    return jnp.where(infeas, penalty, gain), infeas
+
+
+def _result(c: Dict, thr, tau_target, p_budget):
+    """CORAL.result(): best feasible epoch observation (dual: by τ/p,
+    throughput: by τ), falling back to the epoch best-by-reward."""
+    taus, powers = c["hist_sm"][:, -4], c["hist_sm"][:, -3]
+    rows = jnp.arange(taus.shape[0])
+    valid = (rows >= c["epoch_start"]) & (rows < c["n_obs"])
+    feas = valid & _feasible(thr, taus, powers, tau_target, p_budget)
+    val = jnp.where(thr, taus, taus / jnp.maximum(powers, 1e-9))
+    any_feas = feas.any()
+    pick = jnp.argmax(jnp.where(feas, val, -jnp.inf))
+    idx = jnp.where(
+        any_feas, c["hist_sm"][pick, -1].astype(jnp.int32), c["best_idx"]
+    )
+    tau = jnp.where(any_feas, taus[pick], c["best_tau"])
+    p = jnp.where(any_feas, powers[pick], c["best_p"])
+    return idx, tau, p, any_feas | c["best_valid"]
+
+
+def _propose(spec: EngineSpec, k: Dict, c: Dict, thr, tau_target, p_budget):
+    """CORAL.propose(): returns (row index, probe-bookkeeping updates)."""
+    w = spec.window
+    epoch_n = c["n_obs"] - c["epoch_start"]
+
+    # ---- Step 2: windowed correlations (same jitted math as scalar) ---
+    lo = jnp.maximum(c["epoch_start"], c["n_obs"] - w)
+    if spec.halflife is not None:
+        horizon = jnp.float32(3.0 * spec.halflife)
+        t_win = jax.lax.dynamic_slice(
+            c["hist_sm"], (lo, jnp.int32(spec.d + 2)), (w, 1)
+        )[:, 0]
+        in_win = jnp.arange(w) < (c["n_obs"] - lo)
+        fresh = (c["clock"].astype(jnp.float32) - t_win) <= horizon
+        lo = c["n_obs"] - (in_win & fresh).sum()
+    win = jax.lax.dynamic_slice(
+        c["hist_sm"], (lo, jnp.int32(0)), (w, spec.d + 2)
+    )
+    n_valid = c["n_obs"] - lo
+    corr = dcor_all_cols(win, jnp.maximum(n_valid, 1), spec.d)
+    uniform = n_valid < 3
+    alpha = jnp.where(uniform, 1.0, corr[:, 0])
+    beta = jnp.where(uniform, 1.0, corr[:, 1])
+
+    # ---- power-probe policy (CORAL.propose, budget_aware default) -----
+    probe_thr = (
+        jnp.isfinite(p_budget)
+        & (c["best_idx"] != c["probed_for"])
+        & (c["best_p"] > p_budget)
+    )
+    budget_aware = (
+        (c["best_idx"] != c["probed_for"])
+        & (c["best_tau"] > tau_target)
+        & (c["best_p"] > p_budget)
+    )
+    oneshot = (
+        ~c["probe_done"]
+        & (c["best_p"] > jnp.float32(spec.p_min))
+        & (c["best_tau"] > tau_target)
+    )
+    probe_dual = jnp.where(jnp.isfinite(p_budget), budget_aware, oneshot)
+    probe = jnp.where(thr, probe_thr, probe_dual)
+
+    # ---- Step 3: Alg. 2 via the shared float32 step -------------------
+    eff_target = jnp.where(
+        thr & (c["last_p"] > p_budget), jnp.float32(-jnp.inf), tau_target
+    )
+    down = (c["last_tau"] > eff_target) & (c["last_p"] >= jnp.float32(spec.p_min))
+    levels = search.alg2_levels(
+        jnp,
+        k["grid32"][c["best_idx"]],
+        k["grid32"][c["sec_idx"]],
+        jnp.maximum(alpha, beta),
+        k["notches"],
+        k["ladders"],
+        k["n_levels"],
+        c["aside"],
+        down,
+        probe,
+        c["best_tau"],
+        c["best_p"],
+        eff_target,
+        jnp.float32(spec.p_min),
+        k["cores_mask"],
+        k["conc_mask"],
+    )
+    cand2 = (levels * k["strides"]).sum().astype(jnp.int32)
+
+    # ---- iteration-0 / iteration-1 branches ---------------------------
+    cand1_thr = jnp.where(
+        c["last_valid"] & (c["last_p"] > p_budget), k["min_idx"], k["max_idx"]
+    )
+    cand1_dual = jnp.where(
+        c["last_valid"] & (c["last_tau"] < tau_target),
+        k["max_idx"],
+        k["min_idx"],
+    )
+    cand1 = jnp.where(thr, cand1_thr, cand1_dual)
+    searching = (epoch_n >= 2) & c["sec_valid"]
+    cand = jnp.where(
+        epoch_n == 0, k["mid_idx"], jnp.where(searching, cand2, cand1)
+    )
+
+    # ---- canonical prohibited/visited escape --------------------------
+    seen = c["seen_tag"] >= c["epoch_id"]
+    key = jnp.where(seen, _INT_MAX, k["key_tab"][k["sid"], cand])
+    cand = jnp.where(seen[cand], jnp.argmin(key).astype(jnp.int32), cand)
+
+    fired = searching & probe
+    probe_updates = {
+        "probe_done": c["probe_done"] | fired,
+        "probed_for": jnp.where(fired, c["best_idx"], c["probed_for"]),
+    }
+    return cand, probe_updates
+
+
+def _observe(k: Dict, c: Dict, cand, tau, p, thr, tau_target, p_budget, taken):
+    """CORAL.observe() gated by ``taken`` (same statement order as the
+    scalar method — ``aside`` reads the *old* best before the anchors
+    shift). (N,)- and history-sized state only sees O(1) scatters."""
+    c = dict(c)
+    r, infeas = _reward(thr, tau, p, tau_target, p_budget)
+    # one scatter covers both Alg. 1's prohibit (pin at INT_MAX forever)
+    # and the per-epoch revisit tag (raise to the current epoch_id)
+    tag = c["seen_tag"][cand]
+    c["seen_tag"] = c["seen_tag"].at[cand].set(
+        jnp.where(
+            infeas & taken,
+            jnp.int32(_INT_MAX),
+            jnp.where(taken, jnp.maximum(tag, c["epoch_id"]), tag),
+        )
+    )
+    c["aside"] = jnp.where(
+        taken, c["best_valid"] & (r <= c["best_r"]), c["aside"]
+    )
+    improves = taken & (~c["best_valid"] | (r > c["best_r"]))
+    to_second = taken & ~improves & (~c["sec_valid"] | (r > c["sec_r"]))
+    old_best = (c["best_idx"], c["best_tau"], c["best_p"], c["best_r"])
+    obs = (cand, tau, p, r)
+    for name, bval, oval in zip(
+        ("sec_idx", "sec_tau", "sec_p", "sec_r"), old_best, obs
+    ):
+        c[name] = jnp.where(improves, bval, jnp.where(to_second, oval, c[name]))
+    c["sec_valid"] = jnp.where(
+        improves, c["best_valid"], c["sec_valid"] | to_second
+    )
+    for name, oval in zip(("best_idx", "best_tau", "best_p", "best_r"), obs):
+        c[name] = jnp.where(improves, oval, c[name])
+    c["best_valid"] = c["best_valid"] | taken
+    for name, oval in zip(("last_idx", "last_tau", "last_p"), obs):
+        c[name] = jnp.where(taken, oval, c[name])
+    c["last_valid"] = c["last_valid"] | taken
+    n = c["n_obs"]
+    obs_row = jnp.concatenate(
+        [
+            k["grid32"][cand],
+            jnp.stack(
+                [
+                    tau,
+                    p,
+                    c["clock"].astype(jnp.float32),
+                    cand.astype(jnp.float32),
+                ]
+            ),
+        ]
+    )
+    c["hist_sm"] = c["hist_sm"].at[n].set(
+        jnp.where(taken, obs_row, c["hist_sm"][n])
+    )
+    c["n_obs"] = n + taken.astype(jnp.int32)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def _static_step(spec: EngineSpec, k: Dict, ep: Dict, tables: Dict):
+    """run_coral's loop body: propose → measure → observe. Measuring is
+    a point gather into the episode's (T, N) table slot — the tables
+    stay unbatched and are addressed by ``table_id``."""
+    thr, tau_target, p_budget = ep["throughput"], ep["tau_target"], ep["p_budget"]
+    tid = ep["table_id"]
+    always = jnp.bool_(True)
+
+    def step(c, t):
+        cand, probe_updates = _propose(spec, k, c, thr, tau_target, p_budget)
+        c = {**c, **probe_updates}
+        tau, p = tables["tau"][tid, t, cand], tables["p"][tid, t, cand]
+        c = _observe(k, c, cand, tau, p, thr, tau_target, p_budget, always)
+        c["clock"] = c["clock"] + 1
+        return c, cand
+
+    return step
+
+
+def _monitor_update(spec: EngineSpec, c: Dict, tau, p, gate):
+    """DriftMonitor.update gated by ``gate``: running-mean calibration,
+    then two-sided CUSUMs on the fractional (τ, p) residuals."""
+    c = dict(c)
+    calibrating = c["mon_calib"] < spec.calibration
+    upd = gate & calibrating
+    n = c["mon_calib"].astype(jnp.float32)
+    c["mon_ref_tau"] = jnp.where(
+        upd, (c["mon_ref_tau"] * n + tau) / (n + 1), c["mon_ref_tau"]
+    )
+    c["mon_ref_p"] = jnp.where(
+        upd, (c["mon_ref_p"] * n + p) / (n + 1), c["mon_ref_p"]
+    )
+    c["mon_calib"] = c["mon_calib"] + upd.astype(jnp.int32)
+    kk = jnp.float32(spec.k_sigma)
+    armed = gate & ~calibrating
+    z_tau = (tau / c["mon_ref_tau"] - 1.0) / c["mon_sigma"]
+    z_p = (p / c["mon_ref_p"] - 1.0) / c["mon_sigma"]
+    for name, z in (("tau", z_tau), ("p", z_p)):
+        pos = jnp.maximum(0.0, c[f"mon_pos_{name}"] + z - kk)
+        neg = jnp.maximum(0.0, c[f"mon_neg_{name}"] - z - kk)
+        c[f"mon_pos_{name}"] = jnp.where(armed, pos, c[f"mon_pos_{name}"])
+        c[f"mon_neg_{name}"] = jnp.where(armed, neg, c[f"mon_neg_{name}"])
+    h = jnp.float32(spec.h_sigma)
+    tripped = (
+        (c["mon_pos_tau"] > h)
+        | (c["mon_neg_tau"] > h)
+        | (c["mon_pos_p"] > h)
+        | (c["mon_neg_p"] > h)
+    )
+    return c, armed & tripped
+
+
+def _drift_step(spec: EngineSpec, k: Dict, ep: Dict, tables: Dict):
+    """run_drift_regime's loop body: commanded budget → next_config →
+    measure → record, with bounded re-exploration on CUSUM triggers.
+    ``ep["adaptive"]`` is traced data: the static ablation (monitor off,
+    budget commands ignored) shares the compiled program."""
+    thr, tau_target = ep["throughput"], ep["tau_target"]
+    adaptive = ep["adaptive"]
+    tid = ep["table_id"]
+
+    def step(c, t):
+        budget_t = ep["budgets"][t]
+        clock0 = c["clock"]
+
+        # ---- commanded budget change (CORAL.set_p_budget) + retry -----
+        # Both pre-measure resets are mutually exclusive (a budget
+        # trigger flips the loop back into exploration, which disarms
+        # the retry check), so one gated re_explore serves both.
+        changed = adaptive & (budget_t != c["p_budget"])
+        exploring0 = (c["n_obs"] - c["epoch_start"]) < spec.explore_budget
+        draw = jnp.where(c["mon_active"], c["mon_ref_p"], c["held_p"])
+        trigger_b = changed & ~exploring0 & c["held_valid"] & (draw > budget_t)
+        c = dict(c)
+        c["p_budget"] = jnp.where(adaptive, budget_t, c["p_budget"])
+        p_budget = c["p_budget"]
+
+        # infeasible-hold retry: an epoch that ends without a pick
+        # feasible under the *current* constraints spends another
+        # (bounded) exploration epoch instead of monitoring it
+        r_idx, r_tau, r_p, r_valid = _result(c, thr, tau_target, p_budget)
+        h_tau = jnp.where(r_valid, r_tau, c["last_tau"])
+        h_p = jnp.where(r_valid, r_p, c["last_p"])
+        h_exists = r_valid | c["last_valid"]
+        infeasible = ~h_exists | ~_feasible(thr, h_tau, h_p, tau_target, p_budget)
+        retry = (
+            adaptive
+            & ~trigger_b
+            & ~exploring0
+            & ~c["held_valid"]
+            & infeasible
+            & (c["retries"] < spec.max_retries)
+        )
+        c = _re_explore(c, trigger_b | retry)
+        c["retries"] = jnp.where(
+            trigger_b, 0, c["retries"] + retry.astype(jnp.int32)
+        )
+        exploring = (c["n_obs"] - c["epoch_start"]) < spec.explore_budget
+
+        cand_explore, probe_updates = _propose(
+            spec, k, c, thr, tau_target, p_budget
+        )
+
+        # hold_config: first non-exploring interval resolves the held
+        # config (epoch best feasible, else last) and arms the monitor.
+        # The retry path above flipped ``exploring`` back on, so the
+        # stale pre-reset result can never arm a hold.
+        h_idx = jnp.where(r_valid, r_idx, c["last_idx"])
+        arm = ~exploring & ~c["held_valid"]
+        c["held_idx"] = jnp.where(arm, h_idx, c["held_idx"])
+        c["held_tau"] = jnp.where(arm, h_tau, c["held_tau"])
+        c["held_p"] = jnp.where(arm, h_p, c["held_p"])
+        c["held_valid"] = c["held_valid"] | arm
+        arm_mon = arm & adaptive
+        c["mon_ref_tau"] = jnp.where(
+            arm_mon, jnp.maximum(h_tau, 1e-9), c["mon_ref_tau"]
+        )
+        c["mon_ref_p"] = jnp.where(arm_mon, jnp.maximum(h_p, 1e-9), c["mon_ref_p"])
+        c["mon_calib"] = jnp.where(arm_mon, 1, c["mon_calib"])
+        for nm in ("pos_tau", "neg_tau", "pos_p", "neg_p"):
+            c[f"mon_{nm}"] = jnp.where(arm_mon, 0.0, c[f"mon_{nm}"])
+        c["mon_active"] = c["mon_active"] | arm_mon
+
+        # probe bookkeeping belongs to the *taken* propose branch only
+        c["probe_done"] = jnp.where(
+            exploring, probe_updates["probe_done"], c["probe_done"]
+        )
+        c["probed_for"] = jnp.where(
+            exploring, probe_updates["probed_for"], c["probed_for"]
+        )
+        cand = jnp.where(exploring, cand_explore, c["held_idx"])
+
+        # ---- measure --------------------------------------------------
+        tau, p = tables["tau"][tid, t, cand], tables["p"][tid, t, cand]
+
+        # ---- record (CORAL.record) ------------------------------------
+        # calm hold: the monitor consumes the re-measurement
+        hold = ~exploring
+        c, tripped = _monitor_update(spec, c, tau, p, hold & c["mon_active"])
+        trig = hold & c["mon_active"] & tripped
+        c = _re_explore(c, trig)
+        c["retries"] = jnp.where(trig, 0, c["retries"])
+        # a trigger seeds the fresh epoch with the held config's just-
+        # taken measurement only if it is infeasible; both the seed and
+        # the exploration observation stamp the interval's clock
+        seed_obs = trig & ~_feasible(thr, tau, p, tau_target, p_budget)
+        c = _observe(
+            k, c, cand, tau, p, thr, tau_target, p_budget, exploring | seed_obs
+        )
+        c["clock"] = clock0 + 1
+        return c, (cand, exploring)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Compiled batch runners — one jit per EngineSpec, vmapped over episodes.
+# ---------------------------------------------------------------------------
+
+_FINAL_KEYS = ("n_obs", "epoch_start", "best_idx", "best_valid")
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_runner(spec: EngineSpec):
+    """jit(vmap(scan)) for one episode structure. Episode data — the
+    measurement tables, targets, mode/variant flags — ride the batch
+    axis; the padded space constants stay device-resident across calls
+    and are selected per episode by ``space_id``."""
+
+    def run(batch, tables, consts):
+        def one_episode(ep):
+            sid = ep["space_id"]
+            # per-episode materialized views are (N, ·)-sized; the
+            # (S, N, N) escape table is row-gathered per step instead
+            k = {
+                name: consts[name][sid]
+                for name in consts
+                if name != "key_tab"
+            }
+            k["key_tab"] = consts["key_tab"]
+            k["sid"] = sid
+            c = _init_carry(spec, ep, k["pad_mask"])
+            ts = jnp.arange(spec.iters)
+            # unroll=2 halves the while-loop's per-iteration fixed cost;
+            # beyond that, program size outweighs the gain on CPU
+            if spec.drift:
+                step = _drift_step(spec, k, ep, tables)
+                final, (idxs, exploring) = jax.lax.scan(step, c, ts, unroll=2)
+                out = {
+                    "idx": idxs,
+                    "exploring": exploring,
+                    "resets": final["resets"],
+                }
+            else:
+                step = _static_step(spec, k, ep, tables)
+                final, idxs = jax.lax.scan(step, c, ts, unroll=2)
+                out = {"idx": idxs}
+            out.update({name: final[name] for name in _FINAL_KEYS})
+            out["hist_idx"] = (
+                final["hist_sm"][: spec.iters, -1].astype(jnp.int32)
+            )
+            out["hist_t"] = (
+                final["hist_sm"][: spec.iters, -2].astype(jnp.int32)
+            )
+            return out
+
+        return jax.vmap(one_episode)(batch)
+
+    jitted = jax.jit(run)
+    return lambda batch, tables: jitted(batch, tables, _device_consts(spec))
+
+
+def measurement_noise(seed: int, sigma: float, steps: int) -> np.ndarray:
+    """(T, 2) noise block from the device RNG stream — bitwise the same
+    draws as T sequential scalar ``measure`` calls (τ draw, then p)."""
+    if sigma == 0.0:
+        return np.zeros((steps, 2))
+    return np.random.default_rng(seed).normal(0.0, sigma, size=(steps, 2))
+
+
+def _fill_tables(
+    meas_tau: np.ndarray,  # (B, T, N) float32 batch slot to fill at row b
+    meas_p: np.ndarray,
+    b: int,
+    land_tau: np.ndarray,  # (T, N0) or (N0,) float64 landscape
+    land_p: np.ndarray,
+    z: np.ndarray,  # (T, 2) float64 noise
+) -> None:
+    """Write episode b's float32 measurement tables: the float64
+    landscape × noise product, rounded once on assignment — the same
+    float64 values the scalar ``measure`` produces, cast to the scan's
+    working precision."""
+    t = z.shape[0]
+    if land_tau.ndim == 1:
+        land_tau = np.broadcast_to(land_tau, (t, land_tau.shape[0]))
+        land_p = np.broadcast_to(land_p, (t, land_p.shape[0]))
+    lt, lp = land_tau, land_p
+    n0 = lt.shape[1]
+    meas_tau[b, :, :n0] = np.maximum(lt * (1.0 + z[:, :1]), 1e-9)
+    meas_p[b, :, :n0] = np.maximum(lp * (1.0 + z[:, 1:]), 1e-9)
+
+
+def _fill_all(meas_tau, meas_p, reqs, steps) -> List[np.ndarray]:
+    """Noise draws + table fills for every request; the per-episode
+    float64 landscape×noise products run on a small thread pool (numpy
+    releases the GIL for the array work). Returns the noise blocks in
+    request order."""
+    noises = [
+        measurement_noise(r["seed"], r["noise"], steps) for r in reqs
+    ]
+    workers = min(len(reqs), os.cpu_count() or 1)
+    if workers > 1:
+        with concurrent.futures.ThreadPoolExecutor(workers) as pool:
+            list(
+                pool.map(
+                    lambda ib: _fill_tables(
+                        meas_tau,
+                        meas_p,
+                        ib,
+                        reqs[ib]["land_tau"],
+                        reqs[ib]["land_p"],
+                        noises[ib],
+                    ),
+                    range(len(reqs)),
+                )
+            )
+    else:
+        for i, r in enumerate(reqs):
+            _fill_tables(meas_tau, meas_p, i, r["land_tau"], r["land_p"], noises[i])
+    return noises
+
+
+def _trace_f64(
+    land_tau: np.ndarray, land_p: np.ndarray, z: np.ndarray, idxs: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Float64 measurement trace at the chosen configs — bitwise equal
+    to the scalar loop's ``measure`` returns (same product, same
+    clamp)."""
+    steps = np.arange(idxs.shape[0])
+    lt = land_tau[steps, idxs] if land_tau.ndim == 2 else land_tau[idxs]
+    lp = land_p[steps, idxs] if land_p.ndim == 2 else land_p[idxs]
+    taus = np.maximum(lt * (1.0 + z[:, 0]), 1e-9)
+    powers = np.maximum(lp * (1.0 + z[:, 1]), 1e-9)
+    return taus, powers
+
+
+def _engine_tau_target(mode: str, targets) -> np.float32:
+    """Throughput mode has no τ target: CORAL.__init__ replaces it with
+    the +inf sentinel so Alg. 2 stays in its climb direction — the
+    engine mirrors that here (the reward/feasibility paths are
+    mode-aware and never read it in throughput mode)."""
+    if mode == "throughput":
+        return np.float32(np.inf)
+    return np.float32(targets.tau_target)
+
+
+@dataclasses.dataclass
+class EpisodeResult:
+    """One episode's outcome + per-step float64 trace, reconstructed
+    host-side so τ/p match the scalar loop's measurements bitwise."""
+
+    configs: List[tuple]
+    taus: List[float]
+    powers: List[float]
+    rewards: List[float]
+    outcome: Outcome
+    exploring: Optional[List[bool]] = None
+    budgets: Optional[List[float]] = None
+    resets: int = 0
+    result_config: Optional[tuple] = None
+
+    def trace(self):
+        """The episode as an ``evaluate.Trace`` (scalar-loop shape)."""
+        from repro.core.evaluate import Trace
+
+        return Trace(
+            list(self.configs), list(self.taus), list(self.powers),
+            list(self.rewards),
+        )
+
+
+def _f64_reward(mode, tau, p, tau_target, p_budget):
+    infeas = (
+        (p > p_budget)
+        if mode == "throughput"
+        else (tau < tau_target) | (p > p_budget)
+    )
+    gain = tau if mode == "throughput" else tau / np.maximum(p, 1e-9)
+    return np.where(infeas, -(p / np.maximum(tau, 1e-9)), gain)
+
+
+def _f64_result(
+    mode,
+    idxs: np.ndarray,
+    taus: np.ndarray,
+    powers: np.ndarray,
+    rewards: np.ndarray,
+    tau_target: float,
+    p_budget: float,
+) -> Optional[int]:
+    """CORAL.result() over a float64 (sub-)history: position of the best
+    feasible observation, else best by reward; None for empty input."""
+    if idxs.size == 0:
+        return None
+    if mode == "throughput":
+        feas = powers <= p_budget
+        val = taus
+    else:
+        feas = (taus >= tau_target) & (powers <= p_budget)
+        val = taus / np.maximum(powers, 1e-9)
+    if feas.any():
+        return int(np.argmax(np.where(feas, val, -np.inf)))
+    return int(np.argmax(rewards))
+
+
+def _batch_spaces(reqs: List[dict]) -> Tuple[ConfigSpace, ...]:
+    """Ordered distinct spaces across a request batch (the EngineSpec
+    key). Mixed dimensionalities cannot share one program."""
+    spaces: List[ConfigSpace] = []
+    for r in reqs:
+        if r["space"] not in spaces:
+            spaces.append(r["space"])
+    d = len(spaces[0].dims)
+    for s in spaces:
+        if len(s.dims) != d:
+            raise ValueError("episode batch mixes grid dimensionalities")
+    return tuple(spaces)
+
+
+def run_coral_batch(
+    space: ConfigSpace,
+    land_tau: np.ndarray,  # (N,) float64 noise-free τ landscape
+    land_p: np.ndarray,  # (N,) float64 noise-free p landscape
+    targets,  # RegimeTargets (mode, tau_target, p_budget)
+    seeds: Sequence[int],
+    iters: int = 10,
+    window: int = 10,
+    noise: float = 0.02,
+) -> List[EpisodeResult]:
+    """Compiled twin of N× ``run_coral``: one vmapped scan over seeds."""
+    reqs = [
+        {
+            "space": space,
+            "land_tau": land_tau,
+            "land_p": land_p,
+            "targets": targets,
+            "seed": s,
+            "noise": noise,
+        }
+        for s in seeds
+    ]
+    return run_static_requests(reqs, iters=iters, window=window)
+
+
+def run_static_requests(
+    reqs: List[dict], iters: int = 10, window: int = 10
+) -> List[EpisodeResult]:
+    """Run a batch of static CORAL episodes through the compiled engine.
+
+    Each request: {space, land_tau, land_p, targets, seed, noise}. The
+    whole batch — every (cell × seed), any mix of spaces and modes —
+    is ONE compiled vmapped call; results return in input order.
+    """
+    if not reqs:
+        return []
+    spaces = _batch_spaces(reqs)
+    spec = EngineSpec(spaces=spaces, iters=iters, window=window)
+    b, n = len(reqs), spec.n
+    meas_tau = np.zeros((b, iters, n), np.float32)
+    meas_p = np.zeros((b, iters, n), np.float32)
+    noises = _fill_all(meas_tau, meas_p, reqs, iters)
+    ep = {
+        "space_id": np.empty(b, np.int32),
+        "table_id": np.arange(b, dtype=np.int32),
+        "tau_target": np.empty(b, np.float32),
+        "p_budget": np.empty(b, np.float32),
+        "throughput": np.empty(b, bool),
+    }
+    for i, r in enumerate(reqs):
+        ep["space_id"][i] = spaces.index(r["space"])
+        ep["tau_target"][i] = _engine_tau_target(r["targets"].mode, r["targets"])
+        ep["p_budget"][i] = np.float32(r["targets"].p_budget)
+        ep["throughput"][i] = r["targets"].mode == "throughput"
+    batch = {name: jnp.asarray(v) for name, v in ep.items()}
+    tables = {"tau": jnp.asarray(meas_tau), "p": jnp.asarray(meas_p)}
+    res = jax.device_get(_compiled_runner(spec)(batch, tables))
+    out: List[EpisodeResult] = []
+    for i, r in enumerate(reqs):
+        idxs = res["idx"][i]
+        taus, powers = _trace_f64(r["land_tau"], r["land_p"], noises[i], idxs)
+        mode = r["targets"].mode
+        rewards = _f64_reward(
+            mode, taus, powers, r["targets"].tau_target, r["targets"].p_budget
+        )
+        rows = space_rows(r["space"])
+        configs = [rows[int(j)] for j in idxs]
+        pick = _f64_result(
+            mode, idxs, taus, powers, rewards,
+            r["targets"].tau_target, r["targets"].p_budget,
+        )
+        outcome = Outcome(
+            configs[pick], float(taus[pick]), float(powers[pick]), iters
+        )
+        out.append(
+            EpisodeResult(
+                configs=configs,
+                taus=[float(v) for v in taus],
+                powers=[float(v) for v in powers],
+                rewards=[float(v) for v in rewards],
+                outcome=outcome,
+                result_config=configs[pick],
+            )
+        )
+    return out
+
+
+def run_drift_requests(
+    reqs: List[dict],
+    intervals: int,
+    explore_budget: int = 10,
+    window: int = 10,
+) -> List[EpisodeResult]:
+    """Run a batch of drift episodes through the compiled engine.
+
+    Each request: {space, land_tau (T, N), land_p (T, N), budget_scale
+    (T,), targets, seed, noise, adaptive}. The drift variant (adaptive
+    vs static ablation) is traced data, so the whole batch is ONE
+    compiled vmapped call.
+    """
+    if not reqs:
+        return []
+    spaces = _batch_spaces(reqs)
+    spec = EngineSpec(
+        spaces=spaces,
+        iters=intervals,
+        window=window,
+        drift=True,
+        explore_budget=explore_budget,
+        halflife=float(window),
+    )
+    b, n = len(reqs), spec.n
+    # the adaptive and static variants of a (cell, seed) read the same
+    # landscape × noise tables — fill and ship each unique table once,
+    # and let episodes address theirs by ``table_id``
+    def table_key(r):
+        return (id(r["land_tau"]), id(r["land_p"]), r["seed"], r["noise"])
+
+    uniq: Dict[tuple, int] = {}
+    table_ids = np.empty(b, np.int32)
+    uniq_reqs = []
+    for i, r in enumerate(reqs):
+        key = table_key(r)
+        if key not in uniq:
+            uniq[key] = len(uniq_reqs)
+            uniq_reqs.append(r)
+        table_ids[i] = uniq[key]
+    meas_tau = np.zeros((len(uniq_reqs), intervals, n), np.float32)
+    meas_p = np.zeros((len(uniq_reqs), intervals, n), np.float32)
+    uniq_noises = _fill_all(meas_tau, meas_p, uniq_reqs, intervals)
+    noises = [uniq_noises[table_ids[i]] for i in range(b)]
+    budgets64 = []
+    ep = {
+        "space_id": np.empty(b, np.int32),
+        "table_id": table_ids,
+        "tau_target": np.empty(b, np.float32),
+        "p_budget0": np.empty(b, np.float32),
+        "sigma": np.empty(b, np.float32),
+        "throughput": np.empty(b, bool),
+        "adaptive": np.empty(b, bool),
+        "budgets": np.empty((b, intervals), np.float32),
+    }
+    for i, r in enumerate(reqs):
+        b64 = r["targets"].p_budget * np.asarray(r["budget_scale"], np.float64)
+        budgets64.append(b64)
+        ep["space_id"][i] = spaces.index(r["space"])
+        ep["tau_target"][i] = _engine_tau_target(r["targets"].mode, r["targets"])
+        ep["p_budget0"][i] = np.float32(r["targets"].p_budget)
+        ep["sigma"][i] = np.float32(r.get("sigma", r["noise"]))
+        ep["throughput"][i] = r["targets"].mode == "throughput"
+        ep["adaptive"][i] = bool(r["adaptive"])
+        ep["budgets"][i] = b64
+    batch = {name: jnp.asarray(v) for name, v in ep.items()}
+    tables = {"tau": jnp.asarray(meas_tau), "p": jnp.asarray(meas_p)}
+    res = jax.device_get(_compiled_runner(spec)(batch, tables))
+    out: List[EpisodeResult] = []
+    for i, r in enumerate(reqs):
+        idxs = res["idx"][i]
+        taus, powers = _trace_f64(r["land_tau"], r["land_p"], noises[i], idxs)
+        mode = r["targets"].mode
+        rows = space_rows(r["space"])
+        configs = [rows[int(j)] for j in idxs]
+        # final result: epoch history rows re-read in float64. The
+        # history rows are (interval, config) pairs — an epoch row's
+        # measurement equals the trace value at its interval.
+        n_obs = int(res["n_obs"][i])
+        e0 = int(res["epoch_start"][i])
+        h_t = res["hist_t"][i][e0:n_obs]
+        h_idx = res["hist_idx"][i][e0:n_obs]
+        final_budget = (
+            float(budgets64[i][-1])
+            if r["adaptive"]
+            else float(r["targets"].p_budget)
+        )
+        ep_taus = taus[h_t]
+        ep_powers = powers[h_t]
+        ep_budgets = (
+            budgets64[i][h_t]
+            if r["adaptive"]
+            else np.full(h_t.shape, r["targets"].p_budget)
+        )
+        ep_rewards = _f64_reward(
+            mode, ep_taus, ep_powers, r["targets"].tau_target, ep_budgets
+        )
+        pick = _f64_result(
+            mode, h_idx, ep_taus, ep_powers, ep_rewards,
+            r["targets"].tau_target, final_budget,
+        )
+        if pick is not None:
+            result_config = rows[int(h_idx[pick])]
+            outcome = Outcome(
+                result_config,
+                float(ep_taus[pick]),
+                float(ep_powers[pick]),
+                intervals,
+            )
+        elif bool(res["best_valid"][i]):
+            result_config = rows[int(res["best_idx"][i])]
+            outcome = Outcome(result_config, 0.0, 0.0, intervals)
+        else:
+            result_config, outcome = None, Outcome(None, 0.0, 0.0, intervals)
+        out.append(
+            EpisodeResult(
+                configs=configs,
+                taus=[float(v) for v in taus],
+                powers=[float(v) for v in powers],
+                rewards=[],
+                outcome=outcome,
+                exploring=[bool(v) for v in res["exploring"][i]],
+                budgets=[float(v) for v in budgets64[i]],
+                resets=int(res["resets"][i]),
+                result_config=result_config,
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Open-loop baselines in the same harness.
+#
+# ALERT-Online and the presets have NO sequential dependence — the next
+# measurement never depends on the previous one — so their "scan step"
+# degenerates to a gather against the same measurement tables the CORAL
+# scan uses. Running them through lax.scan would add dispatch for zero
+# fusion benefit; they are deliberately evaluated as one table lookup
+# (EXPERIMENTS.md §Episode engine documents the boundary).
+# ---------------------------------------------------------------------------
+
+
+def preset_outcome(
+    space: ConfigSpace,
+    land_tau: np.ndarray,
+    land_p: np.ndarray,
+    kind: str,
+    noise: float,
+    seed: int,
+) -> Outcome:
+    """Bitwise twin of ``baselines.preset`` against a landscape table."""
+    idx = row_index(space, space.preset(kind))
+    z = measurement_noise(seed, noise, 1)
+    tau = max(float(land_tau[idx]) * (1.0 + z[0, 0]), 1e-9)
+    p = max(float(land_p[idx]) * (1.0 + z[0, 1]), 1e-9)
+    return Outcome(space.preset(kind), tau, p, 1)
+
+
+def alert_online_outcome(
+    space: ConfigSpace,
+    land_tau: np.ndarray,
+    land_p: np.ndarray,
+    targets,
+    noise: float,
+    seed: int,
+    iters: int = 10,
+) -> Outcome:
+    """Bitwise twin of ``baselines.alert_online``: the trial configs come
+    from the same config-RNG stream, the measurements from the same
+    device-noise stream, and the best-feasible-by-efficiency selection
+    runs in float64 — identical Outcome, no scan required."""
+    cfg_rng = np.random.default_rng(seed)
+    cfgs = [space.random(cfg_rng) for _ in range(iters)]
+    idxs = np.asarray([row_index(space, c) for c in cfgs])
+    z = measurement_noise(seed, noise, iters)
+    taus = np.maximum(land_tau[idxs] * (1.0 + z[:, 0]), 1e-9)
+    powers = np.maximum(land_p[idxs] * (1.0 + z[:, 1]), 1e-9)
+    feas = (taus >= targets.tau_target) & (powers <= targets.p_budget)
+    if feas.any():
+        eff = taus / np.maximum(powers, 1e-9)
+        best = int(np.argmax(np.where(feas, eff, -np.inf)))
+    elif targets.tau_target <= 0:
+        best = int(np.argmax(taus))
+    else:
+        return Outcome(None, 0.0, 0.0, iters)
+    return Outcome(cfgs[best], float(taus[best]), float(powers[best]), iters)

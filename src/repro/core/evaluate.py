@@ -193,3 +193,12 @@ def run_coral(
     if res is None:
         return Outcome(None, 0.0, 0.0, iters), tr
     return Outcome(res.config, res.tau, res.power, iters), tr
+
+
+# The interpreter loops above are the *equivalence baseline* for the
+# compiled episode engine (repro.core.episode) — the ``oracle_scalar``
+# pattern: the scalar path stays as the executable specification, the
+# scenario matrix routes through the engine by default, and
+# tests/test_episode.py pins the two together seed-for-seed.
+run_coral_scalar = run_coral
+run_drift_regime_scalar = run_drift_regime

@@ -31,11 +31,24 @@ so after ROUND, dimensions with strong correlation (γ_i ≳ 0.5) always move
 at least one level while weakly-correlated dimensions still "change
 minimally" (round back to their current value) — preserving the paper's
 stated semantics on a discrete grid.
+
+Canonical float32 arithmetic (episode-engine equivalence): the step is
+evaluated by ``alg2_levels`` — one function written against the shared
+numpy/jnp array API — in float32 throughout, because the correlation
+weights arrive as float32 from ``dcor_all`` and the compiled episode
+engine (repro.core.episode) traces the identical function under jax.
+Running the scalar loop through the same op sequence at the same
+precision is what makes compiled episodes reproduce scalar selections
+bit-for-bit: grid values are exactly representable in float32, so the
+only rounding happens in the γ-scaled step itself, identically on both
+paths (argmin ties snap to the lower level on both).
 """
 from __future__ import annotations
 
+import functools
 from typing import Sequence
 
+import numpy as np
 
 from repro.core.space import (
     CONCURRENCY_DIM,
@@ -43,6 +56,70 @@ from repro.core.space import (
     ConfigSpace,
     Config,
 )
+
+
+@functools.lru_cache(maxsize=None)
+def dim_notches(space: ConfigSpace, step_floor: bool = True) -> np.ndarray:
+    """(D,) float32 minimum grid gap per dimension (0 without the floor)."""
+    if not step_floor:
+        return np.zeros(len(space.dims), np.float32)
+    return np.asarray(
+        [
+            min(
+                (abs(b - a) for a, b in zip(d.values, d.values[1:])),
+                default=0.0,
+            )
+            for d in space.dims
+        ],
+        np.float32,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def padded_ladders(space: ConfigSpace) -> np.ndarray:
+    """(D, Lmax) float32 per-dim value ladders, padded with +inf so the
+    snap argmin never selects a padding level."""
+    lmax = max(len(d.values) for d in space.dims)
+    out = np.full((len(space.dims), lmax), np.inf, np.float32)
+    for i, d in enumerate(space.dims):
+        out[i, : len(d.values)] = np.asarray(d.values, np.float32)
+    return out
+
+
+def alg2_levels(
+    xp,
+    x,  # (D,) float32 best setting values
+    y,  # (D,) float32 second-best setting values
+    gamma,  # (D,) float32 correlation weights (line 3, already mode-resolved)
+    notches,  # (D,) float32 step floor per dim (0 disables)
+    ladders,  # (D, Lmax) float32 value ladders, +inf padded
+    n_levels,  # (D,) int32 live levels per dim
+    aside,  # bool scalar — flip (l, h) anchors (line 5)
+    down,  # bool scalar — power-saving direction (line 6)
+    probe,  # bool scalar — lines 14-17 requested by the caller's policy
+    tau_best,
+    p_best,
+    tau_target,
+    p_min,
+    cores_mask,  # (D,) bool — the CPU-cores dimension (lines 14-17)
+    conc_mask,  # (D,) bool — the concurrency dimension (lines 14-17)
+):
+    """Alg. 2 lines 3-17 on level indices, shared numpy/jnp (pass ``xp``).
+
+    Returns (D,) int32 level indices of MINMAX(ROUND(v)). Written once
+    against the common array API so the scalar loop (xp=numpy) and the
+    compiled episode scan (xp=jax.numpy) execute the identical float32
+    op sequence — the equivalence tests assert bitwise-equal proposals.
+    """
+    delta = xp.maximum(xp.float32(0.5) * xp.abs(x - y), notches) * gamma
+    lo = xp.where(aside, y, x)
+    hi = xp.where(aside, x, y)
+    v = xp.where(down, lo - delta, hi + delta)  # lines 7/9
+    levels = xp.argmin(xp.abs(ladders - v[:, None]), axis=1).astype(xp.int32)
+    probe_eff = probe & (p_best > p_min) & (tau_best > tau_target)
+    levels = xp.where(probe_eff & cores_mask, 0, levels)
+    levels = xp.where(probe_eff & conc_mask, n_levels - 1, levels)
+    return levels
 
 
 def next_config(
@@ -62,32 +139,38 @@ def next_config(
     step_floor: bool = True,
     gamma_mode: str = "max",  # max (paper Alg.2 line 3) | directional
 ) -> Config:
-    z = []
     down = tau_last > tau_target and p_last >= p_min  # line 6
-    for i, dim in enumerate(space.dims):
-        if gamma_mode == "directional":
-            # beyond-paper: weight the step by the correlation that matches
-            # the direction's objective — β (power) when descending to save
-            # power, α (throughput) when climbing toward the target
-            gamma = beta[i] if down else alpha[i]
-        else:
-            gamma = max(alpha[i], beta[i])  # line 3
-        notch = min(
-            (abs(b - a) for a, b in zip(dim.values, dim.values[1:])),
-            default=0.0,
-        ) if step_floor else 0.0
-        delta = max(0.5 * abs(x[i] - y[i]), notch) * gamma  # line 4 + floor
-        lo, hi = (y[i], x[i]) if aside else (x[i], y[i])  # line 5
-        v = (lo - delta) if down else (hi + delta)  # lines 7/9
-        z.append(v)
-    z = list(space.clamp_round(z))  # line 11
+    alpha32 = np.asarray(alpha, np.float32)
+    beta32 = np.asarray(beta, np.float32)
+    if gamma_mode == "directional":
+        # beyond-paper: weight the step by the correlation that matches
+        # the direction's objective — β (power) when descending to save
+        # power, α (throughput) when climbing toward the target
+        gamma = beta32 if down else alpha32
+    else:
+        gamma = np.maximum(alpha32, beta32)  # line 3
+    levels = alg2_levels(
+        np,
+        np.asarray(x, np.float32),
+        np.asarray(y, np.float32),
+        gamma,
+        dim_notches(space, step_floor),
+        padded_ladders(space),
+        np.asarray([len(d.values) for d in space.dims], np.int32),
+        np.bool_(aside),
+        np.bool_(down),
+        np.bool_(power_probe),
+        np.float32(tau_best),
+        np.float32(p_best),
+        np.float32(tau_target),
+        np.float32(p_min),
+        role_mask(space, CORES_DIM_CANDIDATES),
+        role_mask(space, (CONCURRENCY_DIM,)),
+    )
+    return tuple(d.values[int(j)] for d, j in zip(space.dims, levels))
 
-    if power_probe and p_best > p_min and tau_best > tau_target:  # lines 14-17
-        for cand in CORES_DIM_CANDIDATES:
-            if cand in space.names:
-                z[space.index(cand)] = space.dims[space.index(cand)].lo
-        if CONCURRENCY_DIM in space.names:
-            z[space.index(CONCURRENCY_DIM)] = space.dims[
-                space.index(CONCURRENCY_DIM)
-            ].hi
-    return tuple(z)
+
+@functools.lru_cache(maxsize=None)
+def role_mask(space: ConfigSpace, names: Sequence[str]) -> np.ndarray:
+    """(D,) bool mask of the dimensions whose name is in ``names``."""
+    return np.asarray([d.name in names for d in space.dims])

@@ -15,6 +15,7 @@ Alg. 2 does arithmetic on them and MINMAX/ROUND snaps back to the grid.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Iterable, List, Sequence, Tuple
 
@@ -200,3 +201,51 @@ def profile_space(kind: str) -> ConfigSpace:
 CORES_DIM_CANDIDATES = ("host_cores", "cpu_cores")
 CONCURRENCY_DIM = "concurrency"
 CPU_FREQ_DIM_CANDIDATES = ("host_cpu_freq", "cpu_freq")
+
+
+# ---------------------------------------------------------------------------
+# Cached array views of a space — the index-space twin of ``grid()``.
+#
+# The episode engine (repro.core.episode) represents configurations as
+# grid-row indices inside compiled scans; the scalar CORAL loop shares
+# these same cached arrays so the two paths resolve rows, level indices
+# and neighbor distances identically. ConfigSpace is a frozen (hashable)
+# dataclass, so an lru_cache keyed on the space itself is sound.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def space_grid(space: ConfigSpace) -> np.ndarray:
+    """Cached ``space.grid()`` — (N, D) float64, ``all_configs`` order."""
+    return space.grid()
+
+
+@functools.lru_cache(maxsize=None)
+def space_rows(space: ConfigSpace) -> Tuple[Config, ...]:
+    """Row index → config tuple, in ``all_configs`` order."""
+    return tuple(space.all_configs())
+
+
+@functools.lru_cache(maxsize=None)
+def index_coords(space: ConfigSpace) -> np.ndarray:
+    """(N, D) int32 per-dimension *level* indices for every grid row."""
+    sizes = [len(d.values) for d in space.dims]
+    mesh = np.meshgrid(*(np.arange(s) for s in sizes), indexing="ij")
+    return np.stack([m.reshape(-1) for m in mesh], axis=1).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def level_strides(space: ConfigSpace) -> np.ndarray:
+    """(D,) int32 strides mapping level indices to the grid-row index
+    (dim 0 outermost, matching ``all_configs``/``grid`` order)."""
+    sizes = [len(d.values) for d in space.dims]
+    strides = np.ones(len(sizes), np.int64)
+    for i in range(len(sizes) - 2, -1, -1):
+        strides[i] = strides[i + 1] * sizes[i + 1]
+    return strides.astype(np.int32)
+
+
+def row_index(space: ConfigSpace, cfg: Sequence[float]) -> int:
+    """Grid-row index of an on-grid config (exact value match)."""
+    levels = [d.values.index(v) for d, v in zip(space.dims, cfg)]
+    return int(np.dot(levels, level_strides(space)))

@@ -338,5 +338,24 @@ class DriftSchedule:
     def shift_end(self) -> int:
         return max((ev.end for ev in self.events), default=0)
 
+    def states_stacked(self, intervals: int) -> Dict[str, "object"]:
+        """Per-interval drift vectors for a compiled control loop.
+
+        Returns (intervals,)-shaped float64 numpy arrays of every
+        ``DriftState`` field — ``state_at(t)`` evaluated once per
+        interval up front, so a ``lax.scan`` episode body (and the
+        batched post-shift scoring) can index arrays instead of calling
+        back into Python per interval.
+        """
+        import numpy as np
+
+        states = [self.state_at(t) for t in range(intervals)]
+        return {
+            f.name: np.asarray(
+                [getattr(s, f.name) for s in states], np.float64
+            )
+            for f in dataclasses.fields(DriftState)
+        }
+
 
 NO_DRIFT = DriftSchedule(())

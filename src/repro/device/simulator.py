@@ -193,6 +193,36 @@ class DriftingSimulator:
         p = p + state.static_inflation * self._idle_power()
         return tau, p
 
+    def landscapes(
+        self, intervals: int, configs: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Stacked noise-free (τ, p) landscapes for intervals 0..T-1:
+        two (T, N) float64 arrays, row t bitwise-equal to ``set_time(t)``
+        + ``exact_all``. Drift schedules are piecewise constant (a ramp
+        holds after ``duration`` intervals), so the sweep runs once per
+        *unique* ``DriftState`` and rows are fanned back out — the
+        array-native replacement for per-interval ``set_time`` round
+        trips in both the compiled episode engine and post-shift
+        scoring. The drift clock is restored afterwards."""
+        t_saved = self.t
+        states = [self.schedule.state_at(t) for t in range(intervals)]
+        unique: Dict[DriftState, int] = {}
+        rows = np.empty(intervals, np.int64)
+        taus, ps = [], []
+        try:
+            for t, s in enumerate(states):
+                if s not in unique:
+                    unique[s] = len(taus)
+                    self.t = t
+                    self._state = s
+                    tau, p = self.exact_all(configs)
+                    taus.append(tau)
+                    ps.append(p)
+                rows[t] = unique[s]
+        finally:
+            self.set_time(t_saved)
+        return np.stack(taus)[rows], np.stack(ps)[rows]
+
     def exact(self, config: Config) -> Tuple[float, float]:
         tau, p = self.exact_all(np.asarray([config], np.float64))
         return float(tau[0]), float(p[0])

@@ -15,18 +15,38 @@ Each cell is scored on three axes (the paper's Table/Fig. §IV summary):
 All optimizer selections run against the *noisy* device (the 1-second
 tegrastats-style samples CORAL actually sees); all scoring runs against
 the noise-free twin.
+
+Episode engines: ``engine="compiled"`` (default) routes every CORAL
+episode through the array-native ``lax.scan`` engine
+(``repro.core.episode``) — one vmapped compiled call per (grid shape ×
+mode) group instead of nested interpreter loops — while
+``engine="scalar"`` keeps the original Python loops as the equivalence
+baseline (the ``oracle_scalar`` pattern). Both engines produce
+identical records: the equivalence suite (tests/test_episode.py) pins
+chosen configs per seed, and scoring is shared float64 array code.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.baselines import Outcome, alert, alert_online, oracle, preset
+from repro.core.episode import (
+    alert_online_outcome,
+    preset_outcome,
+    run_drift_requests,
+    run_static_requests,
+)
 from repro.core.evaluate import (
     RegimeTargets,
+    Trace,
     measurements_to_feasible,
     run_drift_regime,
     run_regime,
 )
+from repro.core.space import row_index
 from repro.experiments.scenarios import (
     DRIFT_INTERVALS,
     DRIFT_SHIFT_START,
@@ -69,27 +89,75 @@ def _violations(
     return tau_miss, power_bust
 
 
-def run_cell(
-    cell: Cell,
-    iters: int = 10,
-    seeds: Sequence[int] = (0, 1, 2),
-    window: int = 10,
-) -> dict:
-    """One cell → one JSON-ready record (see schema.MATRIX_SCHEMA)."""
-    sim0 = cell_simulator(cell, noise=0.0)
-    space = sim0.space
-    targets = resolve_targets(cell, sim0)
-    oracle_ref = oracle(space, sim0, targets.tau_target, targets.p_budget)
+# ---------------------------------------------------------------------------
+# Static (stationary) cells
+# ---------------------------------------------------------------------------
 
-    # ---- CORAL, one run per seed against the noisy device -------------
+
+def _prep_cell(cell: Cell) -> dict:
+    """Shared per-cell precompute: noise-free twin, resolved targets,
+    the float64 (τ, p) landscape over the grid, and the oracle."""
+    sim0 = cell_simulator(cell, noise=0.0)
+    targets = resolve_targets(cell, sim0)
+    land_tau, land_p = sim0.exact_all()
+    oracle_ref = oracle(sim0.space, sim0, targets.tau_target, targets.p_budget)
+    return {
+        "sim0": sim0,
+        "space": sim0.space,
+        "targets": targets,
+        "land_tau": land_tau,
+        "land_p": land_p,
+        "oracle": oracle_ref,
+        "noise": WORKLOADS[cell.workload].noise,
+    }
+
+
+def _static_requests(prep: dict, seeds: Sequence[int]) -> List[dict]:
+    return [
+        {
+            "space": prep["space"],
+            "land_tau": prep["land_tau"],
+            "land_p": prep["land_p"],
+            "targets": prep["targets"],
+            "seed": seed,
+            "noise": prep["noise"],
+        }
+        for seed in seeds
+    ]
+
+
+def _scalar_static_runs(
+    cell: Cell, prep: dict, seeds: Sequence[int], iters: int, window: int
+) -> List[Tuple[Outcome, Trace]]:
+    """The original per-seed Python loops (equivalence baseline)."""
+    runs = []
+    for seed in seeds:
+        dev = cell_simulator(cell, seed=seed)
+        runs.append(
+            run_regime(
+                prep["space"], dev, prep["targets"], iters=iters,
+                window=window, seed=seed,
+            )
+        )
+    return runs
+
+
+def _cell_record(
+    cell: Cell,
+    prep: dict,
+    runs: List[Tuple[Outcome, Trace]],
+    iters: int,
+    seeds: Sequence[int],
+    engine: str,
+) -> dict:
+    """Assemble one cell's JSON record from its per-seed episode runs."""
+    sim0, targets, oracle_ref = prep["sim0"], prep["targets"], prep["oracle"]
     scores: List[float] = []
     tau_misses: List[bool] = []
     power_busts: List[bool] = []
     m2f: List[Optional[int]] = []
     best: Optional[Tuple[float, float, float, tuple]] = None
-    for seed in seeds:
-        dev = cell_simulator(cell, seed=seed)
-        out, tr = run_regime(space, dev, targets, iters=iters, window=window, seed=seed)
+    for out, tr in runs:
         if out.config is None:
             # found nothing: a feasibility failure (τ miss), not a power
             # bust — no config ever drew power over the cap. Same mapping
@@ -157,7 +225,48 @@ def run_cell(
         }
 
     # ALERT prioritizes throughput (its published objective) — in capped
-    # regimes the budget is handed over but, faithfully, soft.
+    # regimes the budget is handed over but, faithfully, soft. Its
+    # offline profiling is already one batched ``measure_all`` sweep, so
+    # it runs the same way under both engines; ALERT-Online and the
+    # presets are open-loop and route through the episode harness's
+    # table twins under the compiled engine (bitwise-equal Outcomes).
+    space = prep["space"]
+    if engine == "compiled":
+        alert_online_out = alert_online_outcome(
+            space,
+            prep["land_tau"],
+            prep["land_p"],
+            targets,
+            prep["noise"],
+            _BASELINE_SEEDS["alert_online"],
+            iters=iters,
+        )
+        preset_outs = {
+            kind: preset_outcome(
+                space,
+                prep["land_tau"],
+                prep["land_p"],
+                kind,
+                prep["noise"],
+                _BASELINE_SEEDS[kind],
+            )
+            for kind in ("max_power", "default")
+        }
+    else:
+        alert_online_out = alert_online(
+            space,
+            cell_simulator(cell, seed=_BASELINE_SEEDS["alert_online"]),
+            targets.tau_target,
+            targets.p_budget,
+            iters=iters,
+            seed=_BASELINE_SEEDS["alert_online"],
+        )
+        preset_outs = {
+            kind: preset(
+                space, cell_simulator(cell, seed=_BASELINE_SEEDS[kind]), kind
+            )
+            for kind in ("max_power", "default")
+        }
     baselines = {
         "alert": _outcome_record(
             alert(
@@ -167,30 +276,9 @@ def run_cell(
                 targets.p_budget,
             )
         ),
-        "alert_online": _outcome_record(
-            alert_online(
-                space,
-                cell_simulator(cell, seed=_BASELINE_SEEDS["alert_online"]),
-                targets.tau_target,
-                targets.p_budget,
-                iters=iters,
-                seed=_BASELINE_SEEDS["alert_online"],
-            )
-        ),
-        "max_power": _outcome_record(
-            preset(
-                space,
-                cell_simulator(cell, seed=_BASELINE_SEEDS["max_power"]),
-                "max_power",
-            )
-        ),
-        "default": _outcome_record(
-            preset(
-                space,
-                cell_simulator(cell, seed=_BASELINE_SEEDS["default"]),
-                "default",
-            )
-        ),
+        "alert_online": _outcome_record(alert_online_out),
+        "max_power": _outcome_record(preset_outs["max_power"]),
+        "default": _outcome_record(preset_outs["default"]),
     }
 
     return {
@@ -203,15 +291,38 @@ def run_cell(
         "p_budget": targets.p_budget if targets.capped else None,
         "space_size": space.size(),
         "oracle": {
-            "config": list(oracle_ref.config) if oracle_ref.config else None,
-            "tau": oracle_ref.tau,
-            "power": oracle_ref.power,
-            "measurements": oracle_ref.measurements,
+            "config": list(prep["oracle"].config) if prep["oracle"].config else None,
+            "tau": prep["oracle"].tau,
+            "power": prep["oracle"].power,
+            "measurements": prep["oracle"].measurements,
         },
         "coral": coral,
         "baselines": baselines,
     }
 
+
+def run_cell(
+    cell: Cell,
+    iters: int = 10,
+    seeds: Sequence[int] = (0, 1, 2),
+    window: int = 10,
+    engine: str = "compiled",
+) -> dict:
+    """One cell → one JSON-ready record (see schema.MATRIX_SCHEMA)."""
+    prep = _prep_cell(cell)
+    if engine == "compiled":
+        eps = run_static_requests(
+            _static_requests(prep, seeds), iters=iters, window=window
+        )
+        runs = [(ep.outcome, ep.trace()) for ep in eps]
+    else:
+        runs = _scalar_static_runs(cell, prep, seeds, iters, window)
+    return _cell_record(cell, prep, runs, iters, seeds, engine)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic (drift) cells
+# ---------------------------------------------------------------------------
 
 # Drift-cell acceptance levels (gated in benchmarks/matrix_bench.py):
 # drift-adaptive CORAL must average ≥ this fraction of the post-shift
@@ -222,6 +333,239 @@ DRIFT_STATIC_CEILING = 0.5
 DRIFT_SEPARATION = 0.3
 
 
+def _prep_drift_cell(cell: Cell, intervals: int) -> dict:
+    """Per-cell drift precompute: the stacked per-interval landscapes
+    (one sweep per *unique* drift state), per-interval budget scales,
+    and the post-shift oracle — everything scoring and the compiled
+    episode engine share."""
+    regime = REGIMES[cell.regime]
+    schedule = DRIFTS[regime.drift]
+    sim0 = cell_simulator(cell, noise=0.0)
+    targets = resolve_targets(cell, sim0)
+
+    from repro.device.simulator import DriftingSimulator
+
+    twin = DriftingSimulator(sim0, schedule)
+    land_tau, land_p = twin.landscapes(intervals)
+    budget_scale = schedule.states_stacked(intervals)["budget_scale"]
+    twin.set_time(intervals - 1)
+    p_budget_post = targets.p_budget * twin.state.budget_scale
+    post_oracle = oracle(sim0.space, twin, targets.tau_target, p_budget_post)
+    return {
+        "sim0": sim0,
+        "space": sim0.space,
+        "targets": targets,
+        "schedule": schedule,
+        "regime": regime,
+        "land_tau": land_tau,
+        "land_p": land_p,
+        "budget_scale": budget_scale,
+        "p_budget_post": p_budget_post,
+        "post_oracle": post_oracle,
+        "noise": WORKLOADS[cell.workload].noise,
+    }
+
+
+def _drift_requests(
+    prep: dict, seeds: Sequence[int], adaptive: bool
+) -> List[dict]:
+    return [
+        {
+            "space": prep["space"],
+            "land_tau": prep["land_tau"],
+            "land_p": prep["land_p"],
+            "budget_scale": prep["budget_scale"],
+            "targets": prep["targets"],
+            "seed": seed,
+            "noise": prep["noise"],
+            "adaptive": adaptive,
+        }
+        for seed in seeds
+    ]
+
+
+def _scalar_drift_runs(
+    cell: Cell,
+    prep: dict,
+    seeds: Sequence[int],
+    adaptive: bool,
+    intervals: int,
+    explore_budget: int,
+    window: int,
+) -> List[dict]:
+    """Original Python drift loops, normalized to the engine's run shape."""
+    runs = []
+    space = prep["space"]
+    for seed in seeds:
+        dev = drifting_cell_simulator(cell, seed=seed)
+        opt, tr = run_drift_regime(
+            space,
+            dev,
+            prep["targets"],
+            prep["schedule"],
+            intervals,
+            explore_budget=explore_budget,
+            window=window,
+            seed=seed,
+            adaptive=adaptive,
+            sigma=prep["noise"],
+        )
+        res = opt.result()
+        runs.append(
+            {
+                "idxs": np.asarray(
+                    [row_index(space, cfg) for cfg in tr.configs]
+                ),
+                "exploring": list(tr.exploring),
+                "resets": tr.resets,
+                "result_idx": (
+                    row_index(space, res.config) if res is not None else None
+                ),
+            }
+        )
+    return runs
+
+
+def _compiled_drift_runs(eps: List, space) -> List[dict]:
+    return [
+        {
+            "idxs": np.asarray([row_index(space, cfg) for cfg in ep.configs]),
+            "exploring": ep.exploring,
+            "resets": ep.resets,
+            "result_idx": (
+                row_index(space, ep.result_config)
+                if ep.result_config is not None
+                else None
+            ),
+        }
+        for ep in eps
+    ]
+
+
+def _drift_variant_record(
+    prep: dict,
+    runs: List[dict],
+    seeds: Sequence[int],
+    intervals: int,
+    shift_start: int,
+) -> dict:
+    """Score one variant (adaptive or static) from per-seed run shapes —
+    batched twin sweeps over the precomputed per-interval landscapes
+    instead of ``set_time`` round-trips per interval per seed."""
+    targets = prep["targets"]
+    post_oracle = prep["post_oracle"]
+    p_budget_post = prep["p_budget_post"]
+    lt_post, lp_post = prep["land_tau"][-1], prep["land_p"][-1]
+
+    def final_state_scores(idxs: np.ndarray) -> np.ndarray:
+        """Normalized-vs-post-oracle scores at the fully-shifted state
+        for a vector of config rows (violating → 0)."""
+        if post_oracle.config is None:
+            return np.zeros(idxs.shape[0])
+        tau, p = lt_post[idxs], lp_post[idxs]
+        ok = (tau >= targets.tau_target * (1 - 1e-9)) & (
+            p <= p_budget_post * (1 + 1e-9)
+        )
+        if targets.mode == "throughput":
+            score = tau / max(post_oracle.tau, 1e-9)
+        else:
+            score = (tau / np.maximum(p, 1e-9)) / max(
+                post_oracle.efficiency, 1e-9
+            )
+        return np.where(ok, score, 0.0)
+
+    finals: List[float] = []
+    recoveries: List[Optional[int]] = []
+    transients: List[float] = []
+    resets: List[int] = []
+    post = np.arange(shift_start, intervals)
+    for run in runs:
+        idxs = run["idxs"]
+        ridx = run["result_idx"]
+        finals.append(
+            float(final_state_scores(np.asarray([ridx]))[0])
+            if ridx is not None
+            else 0.0
+        )
+        resets.append(run["resets"])
+        # recovery: first post-shift interval from which every *held*
+        # interval onward scores ≥ the adaptive gate (exploration probes
+        # between holds don't break the streak — they are the search,
+        # not the operating point). The streak check is a suffix-min
+        # over hold scores — O(holds), not the O(holds²) rescan.
+        holds = np.asarray(
+            [t for t in post if not run["exploring"][t]], np.int64
+        )
+        rec = None
+        if holds.size:
+            scores = final_state_scores(idxs[holds])
+            suffix_min = np.minimum.accumulate(scores[::-1])[::-1]
+            clears = np.nonzero(suffix_min >= DRIFT_ADAPTIVE_GATE)[0]
+            if clears.size:
+                rec = int(holds[clears[0]]) - shift_start
+        recoveries.append(rec)
+        # transient violations, against the constraints in force at t —
+        # one gather over the stacked landscapes
+        tau_t = prep["land_tau"][post, idxs[post]]
+        p_t = prep["land_p"][post, idxs[post]]
+        cap_t = targets.p_budget * prep["budget_scale"][post]
+        viol = (tau_t < targets.tau_target * (1 - 1e-9)) | (
+            p_t > cap_t * (1 + 1e-9)
+        )
+        transients.append(float(viol.sum()) / (intervals - shift_start))
+    n = len(seeds)
+    recovered = [r for r in recoveries if r is not None]
+    mean_final = sum(finals) / n
+    return {
+        "final_score": mean_final,
+        "final_score_min": min(finals),
+        "final_score_max": max(finals),
+        "score_floor": round(max(0.0, mean_final - SCORE_FLOOR_MARGIN), 4),
+        "recovered_rate": len(recovered) / n,
+        "recovery_intervals": (
+            sum(recovered) / len(recovered) if recovered else None
+        ),
+        "transient_violation_rate": sum(transients) / n,
+        "resets": sum(resets) / n,
+    }
+
+
+def _drift_cell_record(
+    cell: Cell,
+    prep: dict,
+    adaptive: dict,
+    static: dict,
+    intervals: int,
+    shift_start: int,
+) -> dict:
+    targets = prep["targets"]
+    post_oracle = prep["post_oracle"]
+    return {
+        "device": cell.device,
+        "model": cell.model,
+        "workload": cell.workload,
+        "regime": cell.regime,
+        "mode": targets.mode,
+        "tau_target": targets.tau_target,
+        "p_budget": targets.p_budget if targets.capped else None,
+        "p_budget_post": prep["p_budget_post"] if targets.capped else None,
+        "space_size": prep["space"].size(),
+        "drift": {
+            "schedule": prep["regime"].drift,
+            "shift_start": shift_start,
+            "shift_end": prep["schedule"].shift_end,
+            "intervals": intervals,
+        },
+        "post_oracle": {
+            "config": list(post_oracle.config) if post_oracle.config else None,
+            "tau": post_oracle.tau,
+            "power": post_oracle.power,
+        },
+        "adaptive": adaptive,
+        "static": static,
+    }
+
+
 def run_drift_cell(
     cell: Cell,
     seeds: Sequence[int] = (0, 1, 2),
@@ -229,6 +573,7 @@ def run_drift_cell(
     explore_budget: int = 10,
     intervals: int = DRIFT_INTERVALS,
     shift_start: int = DRIFT_SHIFT_START,
+    engine: str = "compiled",
 ) -> dict:
     """One dynamic (non-stationary) cell → one JSON-ready record.
 
@@ -248,128 +593,32 @@ def run_drift_cell(
                          included: re-exploration's price is visible);
       resets           — exploration epochs spent after the shift.
     """
-    regime = REGIMES[cell.regime]
-    schedule = DRIFTS[regime.drift]
-    sim0 = cell_simulator(cell, noise=0.0)
-    space = sim0.space
-    targets = resolve_targets(cell, sim0)
-    sigma = WORKLOADS[cell.workload].noise
-
-    from repro.device.simulator import DriftingSimulator
-
-    twin = DriftingSimulator(sim0, schedule)
-    twin.set_time(intervals - 1)
-    p_budget_post = targets.p_budget * twin.state.budget_scale
-    post_oracle = oracle(space, twin, targets.tau_target, p_budget_post)
-
-    def final_state_score(cfg) -> float:
-        """Normalized-vs-post-oracle score at the fully-shifted state."""
-        if cfg is None or post_oracle.config is None:
-            return 0.0
-        twin.set_time(intervals - 1)
-        tau, p = twin.exact(cfg)
-        if (
-            tau < targets.tau_target * (1 - 1e-9)
-            or p > p_budget_post * (1 + 1e-9)
-        ):
-            return 0.0
-        if targets.mode == "throughput":
-            return tau / max(post_oracle.tau, 1e-9)
-        return (tau / max(p, 1e-9)) / max(post_oracle.efficiency, 1e-9)
-
-    def variant(adaptive: bool) -> dict:
-        finals: List[float] = []
-        recoveries: List[Optional[int]] = []
-        transients: List[float] = []
-        resets: List[int] = []
-        for seed in seeds:
-            dev = drifting_cell_simulator(cell, seed=seed)
-            opt, tr = run_drift_regime(
-                space,
-                dev,
-                targets,
-                schedule,
-                intervals,
+    prep = _prep_drift_cell(cell, intervals)
+    variants = {}
+    for adaptive in (True, False):
+        if engine == "compiled":
+            eps = run_drift_requests(
+                _drift_requests(prep, seeds, adaptive),
+                intervals=intervals,
                 explore_budget=explore_budget,
                 window=window,
-                seed=seed,
-                adaptive=adaptive,
-                sigma=sigma,
             )
-            res = opt.result()
-            finals.append(final_state_score(res.config if res else None))
-            resets.append(tr.resets)
-            # recovery: first post-shift interval from which every *held*
-            # interval onward scores ≥ the adaptive gate (exploration
-            # probes between holds don't break the streak — they are the
-            # search, not the operating point)
-            holds = [
-                t
-                for t in range(shift_start, intervals)
-                if not tr.exploring[t]
-            ]
-            rec = None
-            scores = {t: final_state_score(tr.configs[t]) for t in holds}
-            for t in holds:
-                if all(scores[u] >= DRIFT_ADAPTIVE_GATE for u in holds if u >= t):
-                    rec = t - shift_start
-                    break
-            recoveries.append(rec)
-            # transient violations, against the constraints in force at t
-            viol = 0
-            for t in range(shift_start, intervals):
-                twin.set_time(t)
-                tau, p = twin.exact(tr.configs[t])
-                cap_t = targets.p_budget * schedule.state_at(t).budget_scale
-                if (
-                    tau < targets.tau_target * (1 - 1e-9)
-                    or p > cap_t * (1 + 1e-9)
-                ):
-                    viol += 1
-            transients.append(viol / (intervals - shift_start))
-        n = len(seeds)
-        recovered = [r for r in recoveries if r is not None]
-        mean_final = sum(finals) / n
-        return {
-            "final_score": mean_final,
-            "final_score_min": min(finals),
-            "final_score_max": max(finals),
-            "score_floor": round(max(0.0, mean_final - SCORE_FLOOR_MARGIN), 4),
-            "recovered_rate": len(recovered) / n,
-            "recovery_intervals": (
-                sum(recovered) / len(recovered) if recovered else None
-            ),
-            "transient_violation_rate": sum(transients) / n,
-            "resets": sum(resets) / n,
-        }
+            runs = _compiled_drift_runs(eps, prep["space"])
+        else:
+            runs = _scalar_drift_runs(
+                cell, prep, seeds, adaptive, intervals, explore_budget, window
+            )
+        variants[adaptive] = _drift_variant_record(
+            prep, runs, seeds, intervals, shift_start
+        )
+    return _drift_cell_record(
+        cell, prep, variants[True], variants[False], intervals, shift_start
+    )
 
-    adaptive = variant(True)
-    static = variant(False)
-    twin.set_time(intervals - 1)
-    return {
-        "device": cell.device,
-        "model": cell.model,
-        "workload": cell.workload,
-        "regime": cell.regime,
-        "mode": targets.mode,
-        "tau_target": targets.tau_target,
-        "p_budget": targets.p_budget if targets.capped else None,
-        "p_budget_post": p_budget_post if targets.capped else None,
-        "space_size": space.size(),
-        "drift": {
-            "schedule": regime.drift,
-            "shift_start": shift_start,
-            "shift_end": schedule.shift_end,
-            "intervals": intervals,
-        },
-        "post_oracle": {
-            "config": list(post_oracle.config) if post_oracle.config else None,
-            "tau": post_oracle.tau,
-            "power": post_oracle.power,
-        },
-        "adaptive": adaptive,
-        "static": static,
-    }
+
+# ---------------------------------------------------------------------------
+# The full matrix
+# ---------------------------------------------------------------------------
 
 
 def run_matrix(
@@ -378,6 +627,8 @@ def run_matrix(
     seeds: Sequence[int] = (0, 1, 2),
     regenerate: str = "PYTHONPATH=src python -m benchmarks.matrix_bench",
     quick: bool = False,
+    engine: str = "compiled",
+    window: int = 10,
 ) -> dict:
     """Run every cell and assemble the schema'd BENCH_matrix record.
 
@@ -385,19 +636,107 @@ def run_matrix(
     loop (``run_drift_cell``, adaptive vs. static ablation) and land in
     the record's ``drift_cells`` array; stationary cells keep the
     CORAL-vs-baselines shape in ``cells``.
+
+    Under the compiled engine every CORAL episode across all cells ×
+    seeds (× drift variants) is submitted as one request batch — the
+    engine groups them by (grid shape, mode) and runs each group as a
+    single vmapped ``lax.scan`` call. ``wall_clock_s`` records the
+    per-phase split (schema v3) so the nightly run tracks where time
+    goes.
     """
     if cells is None:
         cells = enumerate_cells()
     static_cells = [c for c in cells if not REGIMES[c.regime].dynamic]
     dynamic_cells = [c for c in cells if REGIMES[c.regime].dynamic]
-    records = [run_cell(c, iters=iters, seeds=seeds) for c in static_cells]
-    drift_records = [run_drift_cell(c, seeds=seeds) for c in dynamic_cells]
+    wall: Dict[str, float] = {}
+
+    # ---- static cells --------------------------------------------------
+    t0 = time.perf_counter()
+    preps = {c: _prep_cell(c) for c in static_cells}
+    wall["static_prep_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    runs_by_cell: Dict[Cell, list] = {}
+    if engine == "compiled":
+        reqs, owners = [], []
+        for c in static_cells:
+            cell_reqs = _static_requests(preps[c], seeds)
+            owners.extend([c] * len(cell_reqs))
+            reqs.extend(cell_reqs)
+        eps = run_static_requests(reqs, iters=iters, window=window)
+        for c, ep in zip(owners, eps):
+            runs_by_cell.setdefault(c, []).append((ep.outcome, ep.trace()))
+    else:
+        for c in static_cells:
+            runs_by_cell[c] = _scalar_static_runs(c, preps[c], seeds, iters, window)
+    wall["static_episodes_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    records = [
+        _cell_record(c, preps[c], runs_by_cell[c], iters, seeds, engine)
+        for c in static_cells
+    ]
+    wall["static_score_s"] = time.perf_counter() - t0
+
+    # ---- drift cells ---------------------------------------------------
+    t0 = time.perf_counter()
+    dpreps = {c: _prep_drift_cell(c, DRIFT_INTERVALS) for c in dynamic_cells}
+    wall["drift_prep_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    drift_runs: Dict[Tuple[Cell, bool], list] = {}
+    if engine == "compiled":
+        reqs, owners = [], []
+        for c in dynamic_cells:
+            for adaptive in (True, False):
+                cell_reqs = _drift_requests(dpreps[c], seeds, adaptive)
+                owners.extend([(c, adaptive)] * len(cell_reqs))
+                reqs.extend(cell_reqs)
+        eps = run_drift_requests(reqs, intervals=DRIFT_INTERVALS, window=window)
+        by_owner: Dict[Tuple[Cell, bool], list] = {}
+        for owner, ep in zip(owners, eps):
+            by_owner.setdefault(owner, []).append(ep)
+        for owner, cell_eps in by_owner.items():
+            drift_runs[owner] = _compiled_drift_runs(
+                cell_eps, dpreps[owner[0]]["space"]
+            )
+    else:
+        for c in dynamic_cells:
+            for adaptive in (True, False):
+                drift_runs[(c, adaptive)] = _scalar_drift_runs(
+                    c, dpreps[c], seeds, adaptive, DRIFT_INTERVALS, 10, window
+                )
+    wall["drift_episodes_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    drift_records = []
+    for c in dynamic_cells:
+        variants = {
+            adaptive: _drift_variant_record(
+                dpreps[c],
+                drift_runs[(c, adaptive)],
+                seeds,
+                DRIFT_INTERVALS,
+                DRIFT_SHIFT_START,
+            )
+            for adaptive in (True, False)
+        }
+        drift_records.append(
+            _drift_cell_record(
+                c, dpreps[c], variants[True], variants[False],
+                DRIFT_INTERVALS, DRIFT_SHIFT_START,
+            )
+        )
+    wall["drift_score_s"] = time.perf_counter() - t0
+
     return {
-        "schema_version": 2,
+        "schema_version": 3,
         "regenerate": regenerate,
         "quick": quick,
+        "engine": engine,
         "iters": iters,
         "seeds": list(seeds),
+        "wall_clock_s": {k: round(v, 4) for k, v in wall.items()},
         "grid": {
             "devices": sorted({c.device for c in cells}),
             "models": sorted({c.model for c in cells}),

@@ -200,6 +200,63 @@ _DRIFT_CELL = {
     },
 }
 
+# Per-phase wall-clock accounting (schema v3): where a matrix run spends
+# its time. All fields in seconds; ``static_episodes_s`` and
+# ``drift_episodes_s`` are the episode *control loops* — the part the
+# compiled engine replaces.
+_WALL_CLOCK = {
+    "type": "object",
+    "required": [
+        "static_prep_s",
+        "static_episodes_s",
+        "static_score_s",
+        "drift_prep_s",
+        "drift_episodes_s",
+        "drift_score_s",
+    ],
+    "properties": {
+        k: {"type": "number", "minimum": 0}
+        for k in (
+            "static_prep_s",
+            "static_episodes_s",
+            "static_score_s",
+            "drift_prep_s",
+            "drift_episodes_s",
+            "drift_score_s",
+        )
+    },
+}
+
+# Compiled-vs-scalar episode-engine speedup probe (benchmarks only —
+# optional because plain ``run_matrix`` records don't re-run the scalar
+# layer). ``compile_s`` is the one-time jit cost, amortized by the
+# persistent compilation cache in CI.
+_EPISODE_ENGINE = {
+    "type": "object",
+    "required": ["static", "drift", "compile_s"],
+    "properties": {
+        "static": {
+            "type": "object",
+            "required": ["scalar_s", "compiled_s", "speedup"],
+            "properties": {
+                "scalar_s": {"type": "number", "minimum": 0},
+                "compiled_s": {"type": "number", "minimum": 0},
+                "speedup": {"type": "number", "minimum": 0},
+            },
+        },
+        "drift": {
+            "type": "object",
+            "required": ["scalar_s", "compiled_s", "speedup"],
+            "properties": {
+                "scalar_s": {"type": "number", "minimum": 0},
+                "compiled_s": {"type": "number", "minimum": 0},
+                "speedup": {"type": "number", "minimum": 0},
+            },
+        },
+        "compile_s": {"type": "number", "minimum": 0},
+    },
+}
+
 MATRIX_SCHEMA = {
     "$schema": "https://json-schema.org/draft/2020-12/schema",
     "title": "BENCH_matrix",
@@ -208,17 +265,22 @@ MATRIX_SCHEMA = {
         "schema_version",
         "regenerate",
         "quick",
+        "engine",
         "iters",
         "seeds",
+        "wall_clock_s",
         "grid",
         "cells",
         "drift_cells",
         "summary",
     ],
     "properties": {
-        "schema_version": {"type": "integer", "enum": [2]},
+        "schema_version": {"type": "integer", "enum": [3]},
         "regenerate": {"type": "string"},
         "quick": {"type": "boolean"},
+        "engine": {"type": "string", "enum": ["compiled", "scalar"]},
+        "wall_clock_s": _WALL_CLOCK,
+        "episode_engine": _EPISODE_ENGINE,
         "iters": {"type": "integer", "minimum": 1},
         "seeds": {
             "type": "array",

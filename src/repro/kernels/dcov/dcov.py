@@ -55,6 +55,28 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# VMEM working-set budget for one (block, block, cpad) tile family. The
+# gram pass keeps ~3 such float32 intermediates live (the |xi−xj| tile,
+# the centered tile and the flattened matmul operand), so the block edge
+# is sized to keep 3·b²·cpad·4B within budget — half of a v5e core's
+# ~16 MB VMEM, leaving headroom for the row-sum operands and Mosaic's
+# own buffers.
+_VMEM_BUDGET = 8 << 20
+
+
+def _auto_block(n: int, cpad: int) -> int:
+    """Largest power-of-two block edge whose tile family fits the VMEM
+    budget (never larger than n, never smaller than 8). Callers that
+    pass an explicit ``block`` keep it — this only drives the default,
+    so window/grid sizes beyond one VMEM tile run the real blocked
+    kernel instead of degrading to an oversized single tile."""
+    edge = int((_VMEM_BUDGET / (12 * cpad)) ** 0.5)
+    block = 8
+    while block * 2 <= min(edge, max(n, 8)) and block < 1024:
+        block *= 2
+    return block
+
+
 def _row_sum_batch_kernel(ci_ref, cj_ref, rs_ref, *, n, b):
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -98,7 +120,7 @@ def _gram_batch_kernel(
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def dcov_gram_pallas(
-    cols, block: int = 256, interpret: Optional[bool] = None
+    cols, block: Optional[int] = None, interpret: Optional[bool] = None
 ):
     """Gram matrix of double-centered distance matrices for a column batch.
 
@@ -106,10 +128,16 @@ def dcov_gram_pallas(
     returns: (C, C) where [c, c'] = Σ_ij A_c,ij · A_c',ij. Diagonal entries
     are the dVar sums; off-diagonals the dCov sums (both unnormalized — the
     caller divides by n² or cancels it in the dCor ratio).
+
+    ``block=None`` picks the largest tile edge whose working set fits
+    the VMEM budget for this column count (see ``_auto_block``), so
+    ORACLE-scale n (thousands of rows) runs the real blocked kernel.
     """
     if interpret is None:
         interpret = default_interpret()
     n, c = cols.shape
+    if block is None:
+        block = _auto_block(n, pl.cdiv(c, _COL_PAD) * _COL_PAD)
     nb = pl.cdiv(n, block)
     npad = nb * block
     cpad = pl.cdiv(c, _COL_PAD) * _COL_PAD
@@ -150,7 +178,9 @@ def dcov_gram_pallas(
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def dcov_sums_pallas(x, y, block: int = 256, interpret: Optional[bool] = None):
+def dcov_sums_pallas(
+    x, y, block: Optional[int] = None, interpret: Optional[bool] = None
+):
     """Returns (Σ A·B, Σ A², Σ B²) for double-centered distance matrices.
 
     x, y: (n,) float32. Thin two-column wrapper over ``dcov_gram_pallas``.

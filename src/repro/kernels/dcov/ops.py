@@ -21,7 +21,7 @@ from repro.kernels.dcov.dcov import dcov_gram_pallas, dcov_sums_pallas
 def dcor_pallas(
     x: jax.Array,
     y: jax.Array,
-    block: int = 256,
+    block: Optional[int] = None,
     interpret: Optional[bool] = None,
     eps: float = 1e-12,
 ) -> jax.Array:
@@ -34,7 +34,7 @@ def dcor_pallas(
 def dcor_all_pallas(
     settings: jax.Array,
     metrics: jax.Array,
-    block: int = 256,
+    block: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """TPU twin of ``repro.core.dcov.dcor_all`` (full windows only).

@@ -1,0 +1,168 @@
+"""Episode-engine equivalence: compiled lax.scan episodes must replay
+the scalar interpreter loops' selections exactly.
+
+The contract (see repro/core/episode.py): same seeds ⇒ identical chosen
+configs at every step, identical final picks, and τ/p traces equal to
+the scalar measurements (reconstructed in float64 from the same
+landscape × noise products, so equality is exact — the tolerance in the
+assertions is pure paranoia). Three cell families are pinned: a strict
+dual-constraint cell, a throughput-mode cell, and a thermal-ramp drift
+cell (adaptive + static ablation)."""
+
+import numpy as np
+import pytest
+
+from repro.core.episode import (
+    alert_online_outcome,
+    preset_outcome,
+    run_coral_batch,
+    run_drift_requests,
+)
+from repro.core.evaluate import run_drift_regime, run_regime
+from repro.core.baselines import alert_online, preset
+from repro.experiments.scenarios import (
+    DRIFT_INTERVALS,
+    DRIFTS,
+    REGIMES,
+    WORKLOADS,
+    Cell,
+    cell_simulator,
+    drifting_cell_simulator,
+    resolve_targets,
+)
+
+SEEDS = (0, 1, 2)
+
+DUAL_CELL = Cell("edge-xavier-nx", "qwen2.5-3b", "decode_steady", "strict_dual")
+THROUGHPUT_CELL = Cell(
+    "edge-orin-nano", "granite-8b", "decode_steady", "max_throughput"
+)
+DRIFT_CELL = Cell("edge-orin-nx", "qwen2.5-3b", "decode_steady", "thermal-ramp")
+
+
+def _static_equiv(cell):
+    sim0 = cell_simulator(cell, noise=0.0)
+    targets = resolve_targets(cell, sim0)
+    land_tau, land_p = sim0.exact_all()
+    noise = WORKLOADS[cell.workload].noise
+    eps = run_coral_batch(
+        sim0.space, land_tau, land_p, targets, SEEDS, noise=noise
+    )
+    for seed, ep in zip(SEEDS, eps):
+        dev = cell_simulator(cell, seed=seed)
+        out, tr = run_regime(sim0.space, dev, targets, seed=seed)
+        assert [tuple(c) for c in tr.configs] == [
+            tuple(c) for c in ep.configs
+        ], f"seed {seed}: chosen configs diverge"
+        np.testing.assert_allclose(tr.taus, ep.taus, rtol=1e-12)
+        np.testing.assert_allclose(tr.powers, ep.powers, rtol=1e-12)
+        np.testing.assert_allclose(tr.rewards, ep.rewards, rtol=1e-12)
+        assert tuple(out.config) == tuple(ep.outcome.config)
+        assert out.tau == pytest.approx(ep.outcome.tau, rel=1e-12)
+        assert out.power == pytest.approx(ep.outcome.power, rel=1e-12)
+
+
+def test_compiled_matches_scalar_on_dual_cell():
+    _static_equiv(DUAL_CELL)
+
+
+def test_compiled_matches_scalar_on_throughput_cell():
+    _static_equiv(THROUGHPUT_CELL)
+
+
+@pytest.mark.parametrize("adaptive", [True, False])
+def test_compiled_matches_scalar_on_thermal_ramp_drift_cell(adaptive):
+    cell = DRIFT_CELL
+    regime = REGIMES[cell.regime]
+    sched = DRIFTS[regime.drift]
+    sim0 = cell_simulator(cell, noise=0.0)
+    targets = resolve_targets(cell, sim0)
+    noise = WORKLOADS[cell.workload].noise
+
+    from repro.device.simulator import DriftingSimulator
+
+    twin = DriftingSimulator(cell_simulator(cell, noise=0.0), sched)
+    land_tau, land_p = twin.landscapes(DRIFT_INTERVALS)
+    scale = sched.states_stacked(DRIFT_INTERVALS)["budget_scale"]
+    reqs = [
+        dict(
+            space=sim0.space,
+            land_tau=land_tau,
+            land_p=land_p,
+            budget_scale=scale,
+            targets=targets,
+            seed=seed,
+            noise=noise,
+            adaptive=adaptive,
+        )
+        for seed in SEEDS
+    ]
+    eps = run_drift_requests(reqs, intervals=DRIFT_INTERVALS)
+    for seed, ep in zip(SEEDS, eps):
+        dev = drifting_cell_simulator(cell, seed=seed)
+        opt, tr = run_drift_regime(
+            sim0.space, dev, targets, sched, DRIFT_INTERVALS,
+            seed=seed, adaptive=adaptive, sigma=noise,
+        )
+        assert [tuple(c) for c in tr.configs] == [
+            tuple(c) for c in ep.configs
+        ], f"seed {seed}: applied configs diverge"
+        assert tr.exploring == ep.exploring
+        assert tr.resets == ep.resets
+        np.testing.assert_allclose(tr.taus, ep.taus, rtol=1e-12)
+        np.testing.assert_allclose(tr.powers, ep.powers, rtol=1e-12)
+        np.testing.assert_allclose(tr.budgets, ep.budgets, rtol=1e-12)
+        res = opt.result()
+        scalar_pick = tuple(res.config) if res is not None else None
+        engine_pick = (
+            tuple(ep.result_config) if ep.result_config is not None else None
+        )
+        assert scalar_pick == engine_pick
+
+
+def test_open_loop_baselines_match_scalar():
+    """ALERT-Online and the presets route through the engine's table
+    twins under the compiled engine — Outcomes must be bitwise equal."""
+    cell = DUAL_CELL
+    sim0 = cell_simulator(cell, noise=0.0)
+    targets = resolve_targets(cell, sim0)
+    land_tau, land_p = sim0.exact_all()
+    noise = WORKLOADS[cell.workload].noise
+    ref = alert_online(
+        sim0.space,
+        cell_simulator(cell, seed=102),
+        targets.tau_target,
+        targets.p_budget,
+        iters=10,
+        seed=102,
+    )
+    got = alert_online_outcome(
+        sim0.space, land_tau, land_p, targets, noise, 102, iters=10
+    )
+    assert (ref.config is None) == (got.config is None)
+    if ref.config is not None:
+        assert tuple(ref.config) == tuple(got.config)
+        assert ref.tau == got.tau and ref.power == got.power
+    for kind, seed in (("max_power", 103), ("default", 104)):
+        ref = preset(sim0.space, cell_simulator(cell, seed=seed), kind)
+        got = preset_outcome(sim0.space, land_tau, land_p, kind, noise, seed)
+        assert tuple(ref.config) == tuple(got.config)
+        assert ref.tau == got.tau and ref.power == got.power
+
+
+def test_run_cell_records_identical_across_engines():
+    """The whole per-cell record — scores, violation flags, baselines —
+    is engine-independent."""
+    from repro.experiments.matrix import run_cell
+
+    a = run_cell(DUAL_CELL, seeds=(0, 1), engine="compiled")
+    b = run_cell(DUAL_CELL, seeds=(0, 1), engine="scalar")
+    assert a == b
+
+
+def test_drift_cell_records_identical_across_engines():
+    from repro.experiments.matrix import run_drift_cell
+
+    a = run_drift_cell(DRIFT_CELL, seeds=(0,), engine="compiled")
+    b = run_drift_cell(DRIFT_CELL, seeds=(0,), engine="scalar")
+    assert a == b

@@ -77,6 +77,41 @@ def test_property_simulator_outputs_positive(idx):
 # ---------------------------------------------------------------------------
 
 
+# ------------------------------------------------- episode engine windows
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(10.0, 5000.0), st.floats(0.0, 0.08))
+def test_property_compiled_episode_matches_scalar_on_random_windows(
+    seed, tau_target, noise
+):
+    """Engine-vs-scalar equivalence as a property: on a random synthetic
+    landscape, random τ target/budget and random measurement noise, the
+    compiled episode replays the scalar loop's selections exactly and
+    its float64 trace equals the scalar measurements."""
+    from repro.core.episode import run_coral_batch
+    from repro.core.evaluate import RegimeTargets, run_coral
+    from repro.device import jetson_like_simulator
+    from repro.core.space import jetson_like_space
+
+    space = jetson_like_space("xavier_nx")
+    dev0 = jetson_like_simulator(space, 1.0, noise=0.0)
+    land_tau, land_p = dev0.exact_all()
+    p_budget = float(np.quantile(land_p, 0.7))
+    targets = RegimeTargets(mode="dual", tau_target=tau_target, p_budget=p_budget)
+    dev = jetson_like_simulator(space, 1.0, seed=seed, noise=noise)
+    out, tr = run_coral(
+        space, dev, tau_target, p_budget, iters=10, seed=seed
+    )
+    (ep,) = run_coral_batch(
+        space, land_tau, land_p, targets, [seed], iters=10, noise=noise
+    )
+    assert [tuple(c) for c in tr.configs] == [tuple(c) for c in ep.configs]
+    np.testing.assert_allclose(tr.taus, ep.taus, rtol=1e-12)
+    np.testing.assert_allclose(tr.powers, ep.powers, rtol=1e-12)
+    assert (out.config is None) == (ep.outcome.config is None)
+    if out.config is not None:
+        assert tuple(out.config) == tuple(ep.outcome.config)
+
+
 @settings(max_examples=25, deadline=None)
 @given(
     st.lists(
