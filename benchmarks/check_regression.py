@@ -19,7 +19,15 @@ Fails (exit 1) on
     whose adaptive-static separation collapses below 0.3;
   - a kernel record whose max |err| vs the reference implementation grew
     past 10x its baseline, with an absolute floor of 1e-5 for near-exact
-    baselines (interpret-mode wall time is never gated);
+    baselines (interpret-mode wall time is never gated). Kernel records
+    carry backend/pallas_interpret provenance; when fresh and baseline
+    provenance differ (e.g. interpret-mode CPU vs compiled TPU) the
+    comparison is refused with a visible note rather than gated — a
+    ~100ms interpret-mode grid walk must never gate a compiled run, and
+    vice versa;
+  - a fleet record (--records fleet) whose feasible rate or warm-start
+    gain drops below the absolute floors, or — when fresh and baseline
+    ran the same fleet (n_twins, seed) — below 75%-of-baseline;
   - a fresh record that is missing or fails schema validation.
 
 Serving gates depend on host pipelining headroom and are therefore only
@@ -180,11 +188,33 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
 # real precision regression (a low-precision accumulation lands ~1e-4+).
 KERNEL_ERR_FLOOR = 1e-5
 
+# Kernel-speedup floor: per-step ratios of two jitted microkernels swing
+# with machine state (the same incremental-dCor build measured 2.2x–5.1x
+# across runs of identical code), so %-of-baseline would flake — but an
+# asymptotic regression (e.g. an accidental O(W²) push) lands at ~1x,
+# which an absolute floor catches on any runner, QUICK or full.
+KERNEL_SPEEDUP_FLOOR = 1.3
+
+
+def _kernel_provenance(rec: dict) -> tuple:
+    return (rec.get("backend"), rec.get("pallas_interpret"))
+
 
 def check_kernels(fresh: dict, base: dict, errors: List[str]) -> None:
     """Kernel records gate on *correctness* (max |err| vs the reference
-    implementations), not interpret-mode wall time — CPU interpret
-    timings are noise, numerical drift is a real regression."""
+    implementations) and same-machine speedup ratios, not interpret-mode
+    wall time — CPU interpret timings are noise, numerical drift is a
+    real regression. Cross-backend comparisons are refused outright:
+    both sides must have matching backend + pallas_interpret provenance."""
+    fp, bp = _kernel_provenance(fresh), _kernel_provenance(base)
+    if fp != bp:
+        print(
+            f"  [skip] kernels: provenance mismatch — fresh "
+            f"backend={fp[0]}/interpret={fp[1]} vs baseline "
+            f"backend={bp[0]}/interpret={bp[1]}; cross-backend "
+            "comparison refused (re-baseline on this backend to gate)"
+        )
+        return
     for name, brec in base["results"].items():
         frec = fresh["results"].get(name)
         if frec is None:
@@ -201,6 +231,71 @@ def check_kernels(fresh: dict, base: dict, errors: List[str]) -> None:
                     f"kernels:{name}: err_vs_ref {err:.2e} > bound "
                     f"{bound:.2e} (10x baseline, floor {KERNEL_ERR_FLOOR:.0e})"
                 )
+        # speedup entries (e.g. incremental dCor vs full recompute) gate
+        # on the absolute floor, not %-of-baseline — see the floor note
+        if "speedup" in brec and "speedup" in frec:
+            if frec["speedup"] < KERNEL_SPEEDUP_FLOOR:
+                errors.append(
+                    f"kernels:{name}: speedup {frec['speedup']:.2f}x < "
+                    f"absolute floor {KERNEL_SPEEDUP_FLOOR}x"
+                )
+
+
+# Fleet absolute floors — hold for any fleet size/seed because twin i's
+# perturbation draw is independent of the fleet size (the 64-twin smoke
+# fleet is a prefix of the 1024-twin nightly fleet).
+FLEET_FEASIBLE_FLOOR = 0.85  # fraction of twins that find a feasible config
+FLEET_WARM_GAIN_FLOOR = 1.2  # cold/warm measurements-to-feasible ratio
+
+
+def check_fleet(fresh: dict, base: dict, errors: List[str]) -> None:
+    """Fleet records gate on the deterministic quality metrics only (the
+    ``engine`` wall-clock block is machine telemetry): absolute floors
+    always, plus 75%-of-baseline ratios when fresh and baseline ran the
+    identical fleet."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.experiments.schema import validate_fleet_record
+
+    try:
+        validate_fleet_record(fresh)
+    except ValueError as e:
+        errors.append(f"fleet: schema validation failed: {e}")
+        return
+    fr, br = fresh["results"], base["results"]
+    if fr["feasible_rate"] < FLEET_FEASIBLE_FLOOR:
+        errors.append(
+            f"fleet: feasible_rate {fr['feasible_rate']:.3f} < floor "
+            f"{FLEET_FEASIBLE_FLOOR}"
+        )
+    if fr["warm_matched"] == 0:
+        errors.append("fleet: no warm-start twin was matched to a source")
+    gain = fr["warm_gain"]
+    if gain is None or gain < FLEET_WARM_GAIN_FLOOR:
+        errors.append(
+            f"fleet: warm_gain {gain} < floor {FLEET_WARM_GAIN_FLOOR} "
+            "(warm starts must reach feasibility in measurably fewer "
+            "measurements than cold)"
+        )
+    fleet_key = ("n_twins", "seed", "iters", "window")
+    if any(fr[k] != br[k] for k in fleet_key):
+        print(
+            f"  [note] fleet: fresh ran {fr['n_twins']} twins (seed "
+            f"{fr['seed']}) vs baseline {br['n_twins']} (seed {br['seed']})"
+            " — only absolute floors gated"
+        )
+        return
+    if fr["feasible_rate"] < br["feasible_rate"] - 0.05:
+        errors.append(
+            f"fleet: feasible_rate {fr['feasible_rate']:.3f} dropped >5pp "
+            f"below baseline {br['feasible_rate']:.3f}"
+        )
+    if gain is not None and br["warm_gain"] is not None:
+        required = SLOWDOWN_FACTOR * br["warm_gain"]
+        if gain < required:
+            errors.append(
+                f"fleet: warm_gain {gain:.2f}x < {required:.2f}x "
+                f"(75% of baseline {br['warm_gain']:.2f}x)"
+            )
 
 
 CHECKS = {
@@ -208,6 +303,7 @@ CHECKS = {
     "serving": ("BENCH_serving.json", check_serving),
     "matrix": ("BENCH_matrix.json", check_matrix),
     "kernels": ("BENCH_kernels.json", check_kernels),
+    "fleet": ("BENCH_fleet.json", check_fleet),
 }
 
 
@@ -216,7 +312,8 @@ def main(argv: List[str] | None = None) -> int:
     ap.add_argument(
         "--records",
         default="analytics,serving,matrix,kernels",
-        help="comma-separated subset of: analytics, serving, matrix, kernels",
+        help="comma-separated subset of: analytics, serving, matrix, "
+        "kernels, fleet (fleet is opt-in: its bench is a separate job)",
     )
     ap.add_argument("--fresh-dir", type=Path, default=ROOT)
     ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)

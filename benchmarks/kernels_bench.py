@@ -8,12 +8,22 @@ from __future__ import annotations
 
 from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit_json, quick, row, timeit
-from repro.core.dcov import dcor, dcor_all, dcor_numpy
+from repro.core.dcov import (
+    dcor,
+    dcor_all,
+    dcor_all_cols,
+    dcor_numpy,
+    dcor_state_corr,
+    dcor_state_from_window,
+    dcor_state_push,
+)
 from repro.kernels.dcov import dcor_all_pallas, dcor_pallas, dcor_ref
+from repro.kernels.dcov.dcov import default_interpret
 from repro.kernels.flash_attention import attention_ref, flash_attention_bhsd
 from repro.kernels.ssd_scan import ssd, ssd_ref
 
@@ -92,6 +102,62 @@ def bench_ssd_kernel(record: dict | None = None):
     row("ssd_scan_s256", us, f"err_vs_ref={err:.1e} (interpret mode)")
     if record is not None:
         record["ssd_scan_s256"] = {"us": us, "err_vs_ref": err}
+
+
+def bench_incremental_dcor(record: dict | None = None):
+    """Fleet-path windowed dCor: O(W·C) rank-1 ring update + O(C²) readout
+    per observation vs the O(W²·C) full recompute (``dcor_all_cols``).
+    Both sides are jitted jnp on the same backend, so the speedup ratio is
+    machine-stable and gated by check_regression like the other ratios."""
+    w, d, m = 64, 5, 2
+    c = d + m
+    rng = np.random.default_rng(3)
+    rows = jnp.asarray(rng.normal(size=(w + 40, c)), jnp.float32)
+    n32 = jnp.int32(w)
+
+    full = jax.jit(lambda cols: dcor_all_cols(cols, n32, d))
+    push = jax.jit(lambda st, new, slot: dcor_state_push(st, new, slot, n32))
+    corr = jax.jit(lambda st: dcor_state_corr(st, n32, d))
+
+    st = {k: v.block_until_ready() for k, v in
+          dcor_state_from_window(rows[:w], n32).items()}
+    new_row, slot = rows[w], jnp.int32(0)
+
+    def per_step_incremental():
+        return corr(push(st, new_row, slot)).block_until_ready()
+
+    def per_step_full():
+        return full(rows[:w]).block_until_ready()
+
+    iters = 3 if QUICK else 30
+    us_full = timeit(per_step_full, iters=iters)
+    us_incr = timeit(per_step_incremental, iters=iters)
+    speedup = us_full / max(us_incr, 1e-9)
+
+    # Correctness over a 40-push ring replay (wrap-around included):
+    # incremental readout vs a full recompute of the reassembled window.
+    win = np.asarray(rows[:w]).copy()
+    err = 0.0
+    for t in range(40):
+        s = (w + t) % w
+        st = push(st, rows[w + t], jnp.int32(s))
+        win[s] = np.asarray(rows[w + t])
+        err = max(err, float(np.abs(
+            np.asarray(corr(st)) - np.asarray(full(jnp.asarray(win)))
+        ).max()))
+
+    row(
+        f"dcor_incremental_W{w}_D{d}",
+        us_incr,
+        f"full={us_full:.0f}us speedup={speedup:.1f}x err={err:.1e}",
+    )
+    if record is not None:
+        record[f"dcor_incremental_W{w}_D{d}"] = {
+            "full_us": us_full,
+            "incremental_us": us_incr,
+            "speedup": speedup,
+            "err_vs_ref": err,
+        }
 
 
 def bench_coral_iteration_overhead():
@@ -244,9 +310,18 @@ def bench_kernels_suite():
     bench_dcov_kernel(record)
     bench_flash_attention_kernel(record)
     bench_ssd_kernel(record)
+    bench_incremental_dcor(record)
     bench_coral_iteration_overhead()
     payload = {
         "regenerate": "PYTHONPATH=src python -m benchmarks.kernels_bench",
+        # Timing provenance: interpret-mode CPU numbers (e.g. the ~100ms
+        # dcov_pallas_n2048 walk) must never be compared against compiled
+        # accelerator numbers — check_regression refuses records whose
+        # backend/interpret provenance differs from the baseline's.
+        "backend": jax.default_backend(),
+        "pallas_interpret": bool(default_interpret()),
+        # timing-depth provenance: QUICK runs use 3 timing iterations
+        "quick": QUICK,
         "results": record,
     }
     emit_json(KERNELS_JSON, payload)

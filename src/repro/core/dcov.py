@@ -135,3 +135,105 @@ def dcor_all_cols(cols: jax.Array, n_valid: jax.Array, d: int) -> jax.Array:
 def dcor_numpy(x: np.ndarray, y: np.ndarray) -> float:
     """Convenience wrapper for host-side (optimizer-loop) use."""
     return float(dcor_jit(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Incremental windowed dCor (fleet hot path)
+#
+# ``dcor_all_cols`` rebuilds the full (W, W, C) distance stack every call
+# — O(W²·C) per optimizer step. A sliding window only ever changes by one
+# observation, and replacing ring slot k touches exactly row k and column
+# k of every (symmetric) distance matrix, so the three sums dCor needs
+# can be maintained instead of recomputed:
+#
+#     cross_ab = Σ_ij d^a_ij · d^b_ij          (C, C)
+#     rows_i   = Σ_j  d_ij                     (W, C)   (row sums)
+#     S        = Σ_ij d_ij = Σ_i rows_i        (C,)
+#
+# because for double-centered A (the masked Eq. 2 matrices):
+#
+#     Σ_ij A^a_ij A^b_ij
+#       = cross_ab − (2/n)·Σ_i rows^a_i rows^b_i + S^a S^b / n²
+#
+# the standard dCov computing formula — every term is scale-consistent,
+# and ``dcor_from_sums`` takes ratios, so the unnormalized sums feed it
+# directly. One push is O(W·C) distance work plus two (W, C)ᵀ(W, C)
+# matmuls: O(W·C²) total, independent of how the window got here. The
+# (W, W, C) distance tensor rides along only so the *removed* row is
+# available without recomputation.
+# ---------------------------------------------------------------------------
+
+
+def dcor_state_init(window: int, c: int) -> dict:
+    """Empty incremental-dCor state for a (window, c)-shaped column block."""
+    f32 = jnp.float32
+    return {
+        "win": jnp.zeros((window, c), f32),
+        "dist": jnp.zeros((window, window, c), f32),
+        "rows": jnp.zeros((window, c), f32),
+        "cross": jnp.zeros((c, c), f32),
+    }
+
+
+def dcor_state_from_window(cols: jax.Array, n_valid: jax.Array) -> dict:
+    """Full O(W²·C) build — warm-start seeding and the test reference.
+
+    cols: (W, C) column block; rows at index >= n_valid are padding.
+    The result is bitwise what ``n_valid`` sequential pushes of the same
+    rows into ``dcor_state_init`` produce (same masked |·| distances).
+    """
+    w, c = cols.shape
+    cols = cols.astype(jnp.float32)
+    valid = jnp.arange(w) < n_valid
+    mask = (valid[:, None] & valid[None, :]).astype(jnp.float32)
+    dist = jnp.abs(cols[:, None, :] - cols[None, :, :]) * mask[:, :, None]
+    flat = dist.reshape(w * w, c)
+    return {
+        "win": cols * valid[:, None],
+        "dist": dist,
+        "rows": dist.sum(axis=1),
+        "cross": flat.T @ flat,
+    }
+
+
+def dcor_state_push(state: dict, row: jax.Array, slot, n_filled) -> dict:
+    """Replace ring slot ``slot`` with observation ``row`` — O(W·C²).
+
+    ``n_filled`` is the number of filled slots *before* this push (the
+    sequential ring discipline: slot = step mod W, n_filled = min(step,
+    W), so the replaced slot is either the first empty one or the oldest
+    filled one). Removing old row/column k subtracts its pair sums;
+    adding the new one is a masked (W, C) distance row plus rank-1-style
+    updates to the row sums and the (C, C) cross products.
+    """
+    w = state["win"].shape[0]
+    idx = jnp.arange(w)
+    keep = ((idx < n_filled) & (idx != slot)).astype(jnp.float32)[:, None]
+    old = state["dist"][slot]  # (W, C); zero at unfilled slots
+    new = jnp.abs(row[None, :].astype(jnp.float32) - state["win"]) * keep
+    cross = state["cross"] - 2.0 * (old.T @ old) + 2.0 * (new.T @ new)
+    rows = state["rows"] - old + new
+    rows = rows.at[slot].set(new.sum(axis=0))
+    dist = state["dist"].at[slot].set(new)
+    dist = dist.at[:, slot].set(new)
+    return {
+        "win": state["win"].at[slot].set(row.astype(jnp.float32)),
+        "dist": dist,
+        "rows": rows,
+        "cross": cross,
+    }
+
+
+def dcor_state_corr(state: dict, n_valid: jax.Array, d: int) -> jax.Array:
+    """The (D, M) dCor matrix from maintained sums — what ``dcor_all``
+    returns for the same window contents, without touching (W, W)."""
+    n = jnp.maximum(n_valid, 1).astype(jnp.float32)
+    rows = state["rows"]
+    grand = rows.sum(axis=0)
+    sums = (
+        state["cross"]
+        - (2.0 / n) * (rows.T @ rows)
+        + grand[:, None] * grand[None, :] / (n * n)
+    )
+    diag = jnp.diagonal(sums)
+    return dcor_from_sums(sums[:d, d:], diag[:d, None], diag[None, d:])

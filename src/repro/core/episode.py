@@ -68,6 +68,7 @@ import concurrent.futures
 import dataclasses
 import functools
 import os
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -76,7 +77,12 @@ import numpy as np
 
 from repro.core import search
 from repro.core.baselines import Outcome
-from repro.core.dcov import dcor_all_cols
+from repro.core.dcov import (
+    dcor_all_cols,
+    dcor_state_corr,
+    dcor_state_from_window,
+    dcor_state_push,
+)
 from repro.core.space import (
     CONCURRENCY_DIM,
     CORES_DIM_CANDIDATES,
@@ -89,6 +95,14 @@ from repro.core.space import (
 )
 
 _INT_MAX = np.int32(np.iinfo(np.int32).max)
+
+# The episode jits donate their per-call operands (batch + measurement
+# tables). Buffers whose shapes don't line up with an output can't be
+# *reused* by XLA, and jax warns about that — but donation still drops
+# the host reference so the backing memory is released at dispatch
+# instead of surviving the whole call, which is the effect the fleet
+# path needs. The warning is expected, per-compile, and non-actionable.
+warnings.filterwarnings("ignore", message="Some donated buffers were not usable")
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +122,13 @@ class EngineSpec:
     iters: int  # episode length T (intervals for drift episodes)
     window: int  # dCor sliding window W
     drift: bool = False  # epoch-structured drift episode
+    # fleet episodes trade the dense (T, N) measurement tables for a
+    # factored form — (U, N) landscapes × per-episode (T, 2) noise, an
+    # outer product evaluated inside the scan — and run the windowed
+    # dCor incrementally (O(W·C²) per step instead of O(W²·C)). They
+    # also accept warm-start state. No scalar twin exists for this path:
+    # its contract is determinism, not bitwise equivalence.
+    fleet: bool = False
     explore_budget: int = 10
     halflife: Optional[float] = None  # dCor age horizon (drift: window)
     calibration: int = 8
@@ -250,6 +271,37 @@ def _init_carry(spec: EngineSpec, ep: Dict, pad_mask) -> Dict[str, jnp.ndarray]:
         "probed_for": i32(-1),
         "probe_done": jnp.bool_(False),
     }
+    if spec.fleet:
+        # Warm-started twins inherit a converged neighbor's context —
+        # dCor window rows, prohibited set, anchors — as *data*, gated
+        # per episode by the ``warm`` flag so cold twins share the
+        # program. The inherited rows live at history rows [0, warm_n)
+        # and ring slots [0, warm_n), so the sequential slot discipline
+        # (slot = n_obs mod W) continues seamlessly.
+        warm = ep["warm"]
+        warm_n = jnp.where(warm, ep["warm_n"], 0).astype(i32)
+        wh = jnp.where(warm, ep["warm_hist"], 0.0).astype(f32)  # (W, D+4)
+        c["hist_sm"] = c["hist_sm"].at[:w].set(wh)
+        c["n_obs"] = warm_n
+        c["seen_tag"] = jnp.where(
+            warm & ep["warm_prohibit"], jnp.int32(_INT_MAX), c["seen_tag"]
+        )
+        for nm in ("best", "sec"):
+            for fld, dtype in (("idx", i32), ("tau", f32), ("p", f32), ("r", f32)):
+                c[f"{nm}_{fld}"] = jnp.where(
+                    warm, ep[f"warm_{nm}_{fld}"].astype(dtype), c[f"{nm}_{fld}"]
+                )
+            c[f"{nm}_valid"] = warm & ep[f"warm_{nm}_valid"]
+        for fld, dtype in (("idx", i32), ("tau", f32), ("p", f32)):
+            c[f"last_{fld}"] = jnp.where(
+                warm, ep[f"warm_last_{fld}"].astype(dtype), c[f"last_{fld}"]
+            )
+        c["last_valid"] = warm & ep["warm_last_valid"]
+        # incremental dCor accumulators, seeded from the warm window
+        # (cold twins: n_valid = 0 builds the all-zero state)
+        st = dcor_state_from_window(wh[:, : d + 2], warm_n)
+        for nm, v in st.items():
+            c[f"dc_{nm}"] = v
     if spec.drift:
         c.update(
             p_budget=jnp.asarray(ep["p_budget0"], f32),
@@ -337,6 +389,20 @@ def _propose(spec: EngineSpec, k: Dict, c: Dict, thr, tau_target, p_budget):
     epoch_n = c["n_obs"] - c["epoch_start"]
 
     # ---- Step 2: windowed correlations (same jitted math as scalar) ---
+    if spec.fleet:
+        # fleet hot path: the window's three dCor sums are maintained
+        # incrementally (dcov.dcor_state_push), so the correlations fall
+        # out of (C, C)-sized contractions — no (W, W, C) rebuild here
+        n_valid = jnp.minimum(epoch_n, w)
+        corr = dcor_state_corr(
+            {nm: c[f"dc_{nm}"] for nm in ("win", "dist", "rows", "cross")},
+            jnp.maximum(n_valid, 1),
+            spec.d,
+        )
+        uniform = n_valid < 3
+        alpha = jnp.where(uniform, 1.0, corr[:, 0])
+        beta = jnp.where(uniform, 1.0, corr[:, 1])
+        return _propose_tail(spec, k, c, thr, tau_target, p_budget, alpha, beta)
     lo = jnp.maximum(c["epoch_start"], c["n_obs"] - w)
     if spec.halflife is not None:
         horizon = jnp.float32(3.0 * spec.halflife)
@@ -354,6 +420,15 @@ def _propose(spec: EngineSpec, k: Dict, c: Dict, thr, tau_target, p_budget):
     uniform = n_valid < 3
     alpha = jnp.where(uniform, 1.0, corr[:, 0])
     beta = jnp.where(uniform, 1.0, corr[:, 1])
+    return _propose_tail(spec, k, c, thr, tau_target, p_budget, alpha, beta)
+
+
+def _propose_tail(
+    spec: EngineSpec, k: Dict, c: Dict, thr, tau_target, p_budget, alpha, beta
+):
+    """Steps 3+ of CORAL.propose — everything downstream of the window
+    correlations, shared by the full-recompute and incremental paths."""
+    epoch_n = c["n_obs"] - c["epoch_start"]
 
     # ---- power-probe policy (CORAL.propose, budget_aware default) -----
     probe_thr = (
@@ -502,6 +577,37 @@ def _static_step(spec: EngineSpec, k: Dict, ep: Dict, tables: Dict):
         c = {**c, **probe_updates}
         tau, p = tables["tau"][tid, t, cand], tables["p"][tid, t, cand]
         c = _observe(k, c, cand, tau, p, thr, tau_target, p_budget, always)
+        c["clock"] = c["clock"] + 1
+        return c, cand
+
+    return step
+
+
+def _fleet_step(spec: EngineSpec, k: Dict, ep: Dict, tables: Dict):
+    """Fleet twin of ``_static_step`` with the factored measurement
+    model: the per-twin (N,) float32 landscape row (deduped by
+    ``table_id``) times the episode's own (T, 2) noise stream — the
+    outer product a dense (T, N) table would materialize, evaluated as
+    two scalars inside the scan. After each observation the incremental
+    dCor accumulators absorb the new window row in O(W·C²)."""
+    thr, tau_target, p_budget = ep["throughput"], ep["tau_target"], ep["p_budget"]
+    tid = ep["table_id"]
+    always = jnp.bool_(True)
+    w = spec.window
+
+    def step(c, t):
+        cand, probe_updates = _propose(spec, k, c, thr, tau_target, p_budget)
+        c = {**c, **probe_updates}
+        z = ep["noise"][t]
+        tau = jnp.maximum(tables["tau"][tid, cand] * (1.0 + z[0]), 1e-9)
+        p = jnp.maximum(tables["p"][tid, cand] * (1.0 + z[1]), 1e-9)
+        n0 = c["n_obs"]
+        c = _observe(k, c, cand, tau, p, thr, tau_target, p_budget, always)
+        row = jnp.concatenate([k["grid32"][cand], jnp.stack([tau, p])])
+        st = {nm: c[f"dc_{nm}"] for nm in ("win", "dist", "rows", "cross")}
+        st = dcor_state_push(st, row, n0 % w, jnp.minimum(n0, w))
+        for nm, v in st.items():
+            c[f"dc_{nm}"] = v
         c["clock"] = c["clock"] + 1
         return c, cand
 
@@ -670,7 +776,15 @@ def _compiled_runner(spec: EngineSpec):
             }
             k["key_tab"] = consts["key_tab"]
             k["sid"] = sid
-            c = _init_carry(spec, ep, k["pad_mask"])
+            pad = k["pad_mask"]
+            if spec.fleet:
+                # firmware-locked DVFS rows are born prohibited, exactly
+                # like grid padding; the iteration-0/1 presets can be
+                # warm-start overrides (a neighbor's observed extremes)
+                pad = pad | ep["banned"]
+                k["min_idx"] = ep["min_idx"]
+                k["max_idx"] = ep["max_idx"]
+            c = _init_carry(spec, ep, pad)
             ts = jnp.arange(spec.iters)
             # unroll=2 halves the while-loop's per-iteration fixed cost;
             # beyond that, program size outweighs the gain on CPU
@@ -682,6 +796,40 @@ def _compiled_runner(spec: EngineSpec):
                     "exploring": exploring,
                     "resets": final["resets"],
                 }
+            elif spec.fleet:
+                step = _fleet_step(spec, k, ep, tables)
+                final, idxs = jax.lax.scan(step, c, ts, unroll=2)
+                start = jnp.maximum(final["n_obs"] - spec.window, 0)
+                # dtype-slimmed fleet outputs: int16 row traces (grids
+                # are < 32k rows), bool prohibited masks, and only the
+                # last-W window rows (the warm-start seed for a next
+                # wave) instead of the whole history block
+                out = {
+                    "idx": idxs.astype(jnp.int16),
+                    "prohibited": final["seen_tag"] == jnp.int32(_INT_MAX),
+                    "window": jax.lax.dynamic_slice(
+                        final["hist_sm"],
+                        (start, jnp.int32(0)),
+                        (spec.window, spec.d + 4),
+                    ),
+                }
+                for nm in (
+                    "best_tau",
+                    "best_p",
+                    "best_r",
+                    "sec_idx",
+                    "sec_tau",
+                    "sec_p",
+                    "sec_r",
+                    "sec_valid",
+                    "last_idx",
+                    "last_tau",
+                    "last_p",
+                    "last_valid",
+                ):
+                    out[nm] = final[nm]
+                out.update({name: final[name] for name in _FINAL_KEYS})
+                return out
             else:
                 step = _static_step(spec, k, ep, tables)
                 final, idxs = jax.lax.scan(step, c, ts, unroll=2)
@@ -697,7 +845,12 @@ def _compiled_runner(spec: EngineSpec):
 
         return jax.vmap(one_episode)(batch)
 
-    jitted = jax.jit(run)
+    # Donating the per-call operands (the measurement tables dominate)
+    # lets XLA reuse or at least immediately release their buffers —
+    # at fleet scale that is the difference between O(B·(N+T)) and
+    # 2× that in transient peak memory. The space constants (argument 2)
+    # are cached across calls and must NOT be donated.
+    jitted = jax.jit(run, donate_argnums=(0, 1))
     return lambda batch, tables: jitted(batch, tables, _device_consts(spec))
 
 
@@ -1072,6 +1225,154 @@ def run_drift_requests(
                 result_config=result_config,
             )
         )
+    return out
+
+
+def run_fleet_requests(
+    reqs: List[dict],
+    iters: int = 30,
+    window: int = 12,
+    stats: Optional[dict] = None,
+) -> List[dict]:
+    """Run a fleet of static CORAL episodes — one compiled vmapped scan
+    over heterogeneous device twins, with the factored measurement model
+    (``EngineSpec.fleet``).
+
+    Each request::
+
+        {space, land_tau (N0,) float64, land_p, targets, seed, noise,
+         banned:  optional (N0,) bool — firmware-locked grid rows,
+         warm:    optional dict — converged-neighbor context:
+                  {hist (w, D+4) float32 window rows (w <= window),
+                   prohibit (N0,) bool,
+                   best/sec/last anchor scalars (+ *_valid flags),
+                   min_idx, max_idx}}
+
+    Landscape tables are deduped by array identity (``table_id``) — a
+    warm re-run of a twin ships its (N,) float32 landscapes once. The
+    per-request result dict carries the chosen-row trace, the final
+    prohibited mask and window rows (the warm-start seed for a next
+    wave), and the anchor scalars. When ``stats`` is a dict it receives
+    the shipped-bytes accounting (tables / batch / device constants).
+    """
+    if not reqs:
+        return []
+    spaces = _batch_spaces(reqs)
+    spec = EngineSpec(spaces=spaces, iters=iters, window=window, fleet=True)
+    b, n, d, w = len(reqs), spec.n, spec.d, spec.window
+    if w > iters:
+        raise ValueError("fleet window must not exceed iters")
+
+    uniq: Dict[tuple, int] = {}
+    table_ids = np.empty(b, np.int32)
+    uniq_reqs: List[dict] = []
+    for i, r in enumerate(reqs):
+        key = (id(r["land_tau"]), id(r["land_p"]))
+        if key not in uniq:
+            uniq[key] = len(uniq_reqs)
+            uniq_reqs.append(r)
+        table_ids[i] = uniq[key]
+    land_tau32 = np.zeros((len(uniq_reqs), n), np.float32)
+    land_p32 = np.zeros((len(uniq_reqs), n), np.float32)
+    for u, r in enumerate(uniq_reqs):
+        n0 = r["land_tau"].shape[0]
+        land_tau32[u, :n0] = r["land_tau"]
+        land_p32[u, :n0] = r["land_p"]
+
+    noises = np.zeros((b, iters, 2), np.float32)
+    f32, i32 = np.float32, np.int32
+    ep: Dict[str, np.ndarray] = {
+        "space_id": np.empty(b, i32),
+        "table_id": table_ids,
+        "tau_target": np.empty(b, f32),
+        "p_budget": np.empty(b, f32),
+        "throughput": np.empty(b, bool),
+        "banned": np.zeros((b, n), bool),
+        "min_idx": np.empty(b, i32),
+        "max_idx": np.empty(b, i32),
+        "warm": np.zeros(b, bool),
+        "warm_n": np.zeros(b, i32),
+        "warm_hist": np.zeros((b, w, d + 4), f32),
+        "warm_prohibit": np.zeros((b, n), bool),
+        "warm_last_valid": np.zeros(b, bool),
+    }
+    for nm in ("best", "sec"):
+        ep[f"warm_{nm}_idx"] = np.full(b, -1, i32)
+        ep[f"warm_{nm}_tau"] = np.zeros(b, f32)
+        ep[f"warm_{nm}_p"] = np.zeros(b, f32)
+        ep[f"warm_{nm}_r"] = np.full(b, -np.inf, f32)
+        ep[f"warm_{nm}_valid"] = np.zeros(b, bool)
+    ep["warm_last_idx"] = np.full(b, -1, i32)
+    ep["warm_last_tau"] = np.zeros(b, f32)
+    ep["warm_last_p"] = np.zeros(b, f32)
+
+    for i, r in enumerate(reqs):
+        sp = r["space"]
+        n0 = sp.size()
+        consts = _space_consts(sp)
+        ep["space_id"][i] = spaces.index(sp)
+        ep["tau_target"][i] = _engine_tau_target(r["targets"].mode, r["targets"])
+        ep["p_budget"][i] = np.float32(r["targets"].p_budget)
+        ep["throughput"][i] = r["targets"].mode == "throughput"
+        noises[i] = measurement_noise(r["seed"], r["noise"], iters)
+        banned = r.get("banned")
+        if banned is not None:
+            ep["banned"][i, :n0] = banned
+        ep["min_idx"][i] = consts["min_idx"]
+        ep["max_idx"][i] = consts["max_idx"]
+        warm = r.get("warm")
+        if warm is not None:
+            rows = np.asarray(warm["hist"], f32)[-w:]
+            ep["warm"][i] = True
+            ep["warm_n"][i] = rows.shape[0]
+            ep["warm_hist"][i, : rows.shape[0]] = rows
+            ep["warm_prohibit"][i, :n0] = warm["prohibit"]
+            for nm in ("best", "sec", "last"):
+                for fld in ("idx", "tau", "p", "r", "valid"):
+                    key = f"{nm}_{fld}"
+                    if key in warm:
+                        ep[f"warm_{key}"][i] = warm[key]
+            ep["min_idx"][i] = warm.get("min_idx", consts["min_idx"])
+            ep["max_idx"][i] = warm.get("max_idx", consts["max_idx"])
+
+    ep["noise"] = noises
+    batch = {name: jnp.asarray(v) for name, v in ep.items()}
+    tables = {"tau": jnp.asarray(land_tau32), "p": jnp.asarray(land_p32)}
+    if stats is not None:
+        stats["table_bytes"] = int(land_tau32.nbytes + land_p32.nbytes)
+        stats["batch_bytes"] = int(sum(v.nbytes for v in ep.values()))
+        stats["consts_bytes"] = int(
+            sum(int(v.nbytes) for v in _device_consts(spec).values())
+        )
+        stats["episodes"] = b
+    res = jax.device_get(_compiled_runner(spec)(batch, tables))
+    out: List[dict] = []
+    for i, r in enumerate(reqs):
+        n0 = r["space"].size()
+        one = {
+            "idx": res["idx"][i].astype(np.int64),
+            "prohibited": res["prohibited"][i][:n0].copy(),
+            "window": res["window"][i],
+            "n_obs": int(res["n_obs"][i]),
+        }
+        for nm in (
+            "best_idx",
+            "best_tau",
+            "best_p",
+            "best_r",
+            "best_valid",
+            "sec_idx",
+            "sec_tau",
+            "sec_p",
+            "sec_r",
+            "sec_valid",
+            "last_idx",
+            "last_tau",
+            "last_p",
+            "last_valid",
+        ):
+            one[nm] = res[nm][i].item()
+        out.append(one)
     return out
 
 

@@ -13,7 +13,21 @@ from repro.experiments.matrix import (  # noqa: F401
     run_drift_cell,
     run_matrix,
 )
-from repro.experiments.report import markdown_report  # noqa: F401
+from repro.experiments.fleet import (  # noqa: F401
+    FLEET_ITERS,
+    FLEET_WINDOW,
+    FleetTwin,
+    build_fleet,
+    build_twin,
+    ladder_banned_rows,
+    match_neighbor,
+    run_fleet,
+    warm_context,
+)
+from repro.experiments.report import (  # noqa: F401
+    fleet_convergence_figure,
+    markdown_report,
+)
 from repro.experiments.scenarios import (  # noqa: F401
     DRIFT_INTERVALS,
     DRIFT_SHIFT_START,
@@ -35,6 +49,8 @@ from repro.experiments.scenarios import (  # noqa: F401
     resolve_targets,
 )
 from repro.experiments.schema import (  # noqa: F401
+    FLEET_SCHEMA,
     MATRIX_SCHEMA,
+    validate_fleet_record,
     validate_matrix_record,
 )

@@ -1,9 +1,10 @@
 """Markdown summary of a BENCH_matrix record, mirroring the paper's
 table layout: one table per constraint regime, rows = device × model ×
-workload, columns = CORAL vs every baseline."""
+workload, columns = CORAL vs every baseline — plus the fleet-convergence
+figure for BENCH_fleet records (matplotlib optional)."""
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 
 def _fmt_score(s) -> str:
@@ -135,3 +136,55 @@ def markdown_report(record: dict) -> str:
     )
     lines.append("")
     return "\n".join(lines)
+
+
+def fleet_convergence_figure(record: dict, path: str) -> Optional[str]:
+    """Fraction-of-twins-feasible vs measurement count, cold vs warm, one
+    panel per device family (plus the all-families panel) from a
+    BENCH_fleet record. Returns the written path, or None when matplotlib
+    is unavailable (the figure is a nicety; the JSON record is the
+    artifact of record)."""
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return None
+
+    res = record["results"]
+    curves = res["convergence"]
+    names = ["all"] + [f for f in res["families"] if f in curves]
+    names = list(dict.fromkeys(n for n in names if n in curves))
+    fig, axes = plt.subplots(
+        1, len(names), figsize=(3.4 * len(names), 3.2), sharey=True
+    )
+    if len(names) == 1:
+        axes = [axes]
+    for ax, name in zip(axes, names):
+        c = curves[name]
+        xs = range(1, len(c["cold"]) + 1)
+        ax.plot(xs, c["cold"], label="cold", color="tab:blue")
+        if c["warm"]:
+            ax.plot(
+                range(1, len(c["warm"]) + 1),
+                c["warm"],
+                label="warm",
+                color="tab:orange",
+            )
+        ax.set_title(name, fontsize=9)
+        ax.set_xlabel("measurements")
+        ax.set_ylim(0, 1.02)
+        ax.grid(alpha=0.3)
+    axes[0].set_ylabel("fraction of twins feasible")
+    axes[0].legend(loc="lower right", fontsize=8)
+    gain = res["warm_gain"]
+    gain_txt = "—" if gain is None else f"{gain:.2f}×"
+    fig.suptitle(
+        f"Fleet convergence — {res['n_twins']} twins, warm gain {gain_txt}",
+        fontsize=10,
+    )
+    fig.tight_layout()
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path

@@ -1,10 +1,11 @@
-"""JSON schema for BENCH_matrix.json and a dependency-free validator.
+"""JSON schemas for BENCH_matrix.json / BENCH_fleet.json and a
+dependency-free validator.
 
-``MATRIX_SCHEMA`` is standard JSON Schema (draft 2020-12 subset). When
-the ``jsonschema`` package is importable it is used directly; otherwise
-``validate_matrix_record`` falls back to a built-in structural checker
-covering the same constraints (type, required, enum, bounds) — CI and
-air-gapped containers validate either way.
+``MATRIX_SCHEMA`` and ``FLEET_SCHEMA`` are standard JSON Schema (draft
+2020-12 subset). When the ``jsonschema`` package is importable it is
+used directly; otherwise the validators fall back to a built-in
+structural checker covering the same constraints (type, required, enum,
+bounds) — CI and air-gapped containers validate either way.
 """
 from __future__ import annotations
 
@@ -330,6 +331,133 @@ MATRIX_SCHEMA = {
     },
 }
 
+# ---------------------------------------------------------------------------
+# BENCH_fleet.json — fleet-scale heterogeneous-twin tuning record.
+#
+# The ``results`` block is deterministic for a given (n_twins, seed,
+# iters, window): twin sampling, noise streams and the compiled engine
+# are all seeded, so two runs on the same software stack must agree
+# byte-for-byte (tests/test_fleet.py enforces this). The ``engine``
+# block is machine-dependent wall-clock/memory telemetry and is never
+# part of the determinism contract.
+# ---------------------------------------------------------------------------
+
+_FLEET_FAMILY = {
+    "type": "object",
+    "required": ["n_twins", "feasible_rate", "mean_m2f", "mean_score"],
+    "properties": {
+        "n_twins": {"type": "integer", "minimum": 0},
+        "feasible_rate": {"type": "number", "minimum": 0, "maximum": 1},
+        "mean_m2f": {"type": ["number", "null"], "minimum": 0},
+        "mean_score": {"type": ["number", "null"], "minimum": 0},
+    },
+}
+
+_FLEET_CURVE = {
+    "type": "object",
+    "required": ["cold", "warm"],
+    "properties": {
+        k: {
+            "type": "array",
+            "items": {"type": "number", "minimum": 0, "maximum": 1},
+        }
+        for k in ("cold", "warm")
+    },
+}
+
+FLEET_SCHEMA = {
+    "$schema": "https://json-schema.org/draft/2020-12/schema",
+    "title": "BENCH_fleet",
+    "type": "object",
+    "required": ["schema_version", "regenerate", "quick", "results", "engine"],
+    "properties": {
+        "schema_version": {"type": "integer", "enum": [1]},
+        "regenerate": {"type": "string"},
+        "quick": {"type": "boolean"},
+        "results": {
+            "type": "object",
+            "required": [
+                "n_twins",
+                "seed",
+                "iters",
+                "window",
+                "families",
+                "model",
+                "workload",
+                "feasible_rate",
+                "mean_m2f_cold",
+                "mean_score",
+                "warm_cohort",
+                "warm_matched",
+                "mean_m2f_cold_cohort",
+                "mean_m2f_warm_cohort",
+                "warm_gain",
+                "per_family",
+                "convergence",
+            ],
+            "properties": {
+                "n_twins": {"type": "integer", "minimum": 1},
+                "seed": {"type": "integer"},
+                "iters": {"type": "integer", "minimum": 1},
+                "window": {"type": "integer", "minimum": 2},
+                "families": {
+                    "type": "array",
+                    "items": {"type": "string"},
+                    "minItems": 1,
+                },
+                "model": {"type": "string"},
+                "workload": {"type": "string"},
+                "feasible_rate": {"type": "number", "minimum": 0, "maximum": 1},
+                "mean_m2f_cold": {"type": ["number", "null"], "minimum": 0},
+                "mean_score": {"type": ["number", "null"], "minimum": 0},
+                "warm_cohort": {"type": "integer", "minimum": 0},
+                "warm_matched": {"type": "integer", "minimum": 0},
+                "mean_m2f_cold_cohort": {
+                    "type": ["number", "null"],
+                    "minimum": 0,
+                },
+                "mean_m2f_warm_cohort": {
+                    "type": ["number", "null"],
+                    "minimum": 0,
+                },
+                "warm_gain": {"type": ["number", "null"], "minimum": 0},
+                "per_family": {
+                    "type": "object",
+                    "additionalProperties": _FLEET_FAMILY,
+                },
+                "convergence": {
+                    "type": "object",
+                    "additionalProperties": _FLEET_CURVE,
+                },
+            },
+        },
+        "engine": {
+            "type": "object",
+            "required": [
+                "backend",
+                "prep_s",
+                "cold_wall_s",
+                "warm_wall_s",
+                "table_bytes",
+                "batch_bytes",
+                "consts_bytes",
+            ],
+            "properties": {
+                "backend": {"type": "string"},
+                "prep_s": {"type": "number", "minimum": 0},
+                "cold_wall_s": {"type": "number", "minimum": 0},
+                "warm_wall_s": {"type": "number", "minimum": 0},
+                "steady_wall_s": {"type": ["number", "null"], "minimum": 0},
+                "twins_per_s": {"type": ["number", "null"], "minimum": 0},
+                "table_bytes": {"type": "integer", "minimum": 0},
+                "batch_bytes": {"type": "integer", "minimum": 0},
+                "consts_bytes": {"type": "integer", "minimum": 0},
+                "peak_device_bytes": {"type": ["integer", "null"], "minimum": 0},
+            },
+        },
+    },
+}
+
 _TYPES = {
     "object": dict,
     "array": list,
@@ -384,21 +512,30 @@ def _check(node: Any, schema: dict, path: str, errors: List[str]) -> None:
                 _check(v, item_schema, f"{path}[{i}]", errors)
 
 
-def validate_matrix_record(record: dict) -> None:
-    """Raise ValueError if the record does not conform to MATRIX_SCHEMA."""
+def _validate(record: dict, schema: dict, title: str) -> None:
     try:
         import jsonschema
     except ImportError:
         jsonschema = None
     if jsonschema is not None:
         try:
-            jsonschema.validate(record, MATRIX_SCHEMA)
+            jsonschema.validate(record, schema)
         except jsonschema.ValidationError as e:
-            raise ValueError(f"BENCH_matrix record invalid: {e.message}") from e
+            raise ValueError(f"{title} record invalid: {e.message}") from e
         return
     errors: List[str] = []
-    _check(record, MATRIX_SCHEMA, "$", errors)
+    _check(record, schema, "$", errors)
     if errors:
         raise ValueError(
-            "BENCH_matrix record invalid:\n  " + "\n  ".join(errors[:20])
+            f"{title} record invalid:\n  " + "\n  ".join(errors[:20])
         )
+
+
+def validate_matrix_record(record: dict) -> None:
+    """Raise ValueError if the record does not conform to MATRIX_SCHEMA."""
+    _validate(record, MATRIX_SCHEMA, "BENCH_matrix")
+
+
+def validate_fleet_record(record: dict) -> None:
+    """Raise ValueError if the record does not conform to FLEET_SCHEMA."""
+    _validate(record, FLEET_SCHEMA, "BENCH_fleet")

@@ -75,3 +75,67 @@ def test_dcor_all_padded_window_matches_unpadded():
         dcor_all(jnp.asarray(s[:n]), jnp.asarray(m[:n]), np.int32(n))
     )
     np.testing.assert_allclose(padded, exact, atol=1e-5)
+
+
+# ------------------------------------------------------- incremental dCor
+def _replay(rows, w, d):
+    """Push rows through the incremental state one at a time, returning
+    (incremental corr, full-recompute corr) at each step."""
+    from repro.core.dcov import (
+        dcor_all_cols,
+        dcor_state_corr,
+        dcor_state_init,
+        dcor_state_push,
+    )
+
+    c = rows.shape[1]
+    st = dcor_state_init(w, c)
+    win = np.zeros((w, c), np.float32)
+    out = []
+    for t, r in enumerate(rows):
+        slot, n_filled = t % w, min(t, w)
+        st = dcor_state_push(st, jnp.asarray(r), jnp.int32(slot),
+                             jnp.int32(n_filled))
+        win[slot] = r
+        n_valid = min(t + 1, w)
+        incr = np.asarray(dcor_state_corr(st, jnp.int32(n_valid), d))
+        full = np.asarray(dcor_all_cols(jnp.asarray(win), jnp.int32(n_valid), d))
+        out.append((incr, full))
+    return out
+
+
+def test_incremental_dcor_matches_full_recompute():
+    """Ring-buffer rank-1 updates track dcor_all_cols through fill-up AND
+    wrap-around (the O(W·C) path the fleet engine runs per observation)."""
+    rng = np.random.default_rng(5)
+    w, d, m = 8, 4, 2
+    rows = rng.normal(size=(3 * w, d + m)).astype(np.float32)
+    for incr, full in _replay(rows, w, d):
+        np.testing.assert_allclose(incr, full, atol=2e-3)
+
+
+def test_incremental_dcor_from_window_seed():
+    """Warm-start path: a state built from an existing (possibly padded)
+    window must read out the same correlations as the full recompute."""
+    from repro.core.dcov import (
+        dcor_all_cols,
+        dcor_state_corr,
+        dcor_state_from_window,
+    )
+
+    rng = np.random.default_rng(6)
+    w, d, m, n = 10, 3, 2, 6
+    cols = np.zeros((w, d + m), np.float32)
+    cols[:n] = rng.normal(size=(n, d + m))
+    st = dcor_state_from_window(jnp.asarray(cols), jnp.int32(n))
+    incr = np.asarray(dcor_state_corr(st, jnp.int32(n), d))
+    full = np.asarray(dcor_all_cols(jnp.asarray(cols), jnp.int32(n), d))
+    np.testing.assert_allclose(incr, full, atol=1e-4)
+    assert incr.shape == (d, m)
+
+
+def test_incremental_dcor_values_in_unit_interval():
+    rng = np.random.default_rng(7)
+    rows = rng.normal(size=(20, 6)).astype(np.float32)
+    for incr, _ in _replay(rows, 6, 4):
+        assert (incr >= -1e-5).all() and (incr <= 1 + 1e-5).all()

@@ -1,0 +1,135 @@
+"""Fleet-scale tuning tests: twin sampling determinism, firmware-ladder
+bans, the one-compiled-call fleet engine (warm starts, byte-identical
+results blocks) and the episode jit's buffer donation."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.device.hw import (
+    FLEET_FAMILIES,
+    perturbed_profile,
+    sample_perturbations,
+)
+from repro.experiments.fleet import (
+    build_twin,
+    ladder_banned_rows,
+    run_fleet,
+)
+
+# Shared fleet shape across tests — one compiled engine spec per module.
+ITERS, WINDOW = 12, 6
+
+
+def test_sample_perturbations_prefix_stable():
+    """Twin i's draw depends only on (seed, i): a small fleet is an exact
+    prefix of a larger one, so smoke floors transfer to the nightly run."""
+    small = sample_perturbations(6, seed=9)
+    large = sample_perturbations(24, seed=9)
+    assert small == large[:6]
+    assert sample_perturbations(6, seed=10) != small
+
+
+def test_sample_perturbations_ranges():
+    perts = sample_perturbations(64, seed=0)
+    for p in perts:
+        assert p.family in FLEET_FAMILIES
+        assert 0.85 <= p.compute_scale <= 1.15
+        assert 0.88 <= p.mem_scale <= 1.12
+        assert 0.0 <= p.ambient_derate <= 0.12
+        assert p.ladder_variant in (0, 1, 2)
+
+
+def test_perturbed_profile_scales_applied():
+    pert = sample_perturbations(1, seed=3)[0]
+    prof = perturbed_profile(pert)
+    assert prof.name.endswith("#00000")
+    base = perturbed_profile(
+        type(pert)(family=pert.family, twin_id=pert.twin_id)
+    )
+    assert prof.compute_eff == base.compute_eff * pert.compute_scale
+
+
+def test_ladder_banned_rows():
+    twin = build_twin(sample_perturbations(1, seed=0)[0])
+    space = twin.space
+    assert not ladder_banned_rows(space, 0).any()
+    for variant in (1, 2):
+        banned = ladder_banned_rows(space, variant)
+        assert banned.any()
+        assert not banned.all()  # a locked ladder still leaves rows
+
+
+def test_fleet_results_deterministic():
+    """Same (n_twins, seed, iters, window) ⇒ byte-identical results block
+    — the determinism contract BENCH_fleet.json's schema documents."""
+    a = run_fleet(n_twins=8, seed=3, iters=ITERS, window=WINDOW)
+    b = run_fleet(n_twins=8, seed=3, iters=ITERS, window=WINDOW)
+    assert json.dumps(a["results"], sort_keys=True) == json.dumps(
+        b["results"], sort_keys=True
+    )
+
+
+def test_fleet_warm_start_beats_cold():
+    rec = run_fleet(n_twins=12, seed=0, iters=ITERS, window=WINDOW)
+    res = rec["results"]
+    assert res["feasible_rate"] > 0.5
+    assert res["warm_matched"] >= 1
+    assert res["warm_gain"] is not None and res["warm_gain"] > 1.0
+    for fam, curves in res["convergence"].items():
+        assert len(curves["cold"]) == ITERS
+        # convergence curves are cumulative — monotone non-decreasing
+        assert all(
+            x <= y for x, y in zip(curves["cold"], curves["cold"][1:])
+        )
+    eng = rec["engine"]
+    assert eng["table_bytes"] > 0 and eng["batch_bytes"] > 0
+
+
+def test_episode_jit_donates_per_call_buffers():
+    """donate_argnums on the episode jit: per-call operands (batch +
+    measurement tables) are offered to XLA, which deletes every donated
+    input it can alias to an output (dtype/shape-compatible; e.g. the
+    int32 batch columns alias the int32 final-state outputs). The cached
+    space constants (argument 2) are never donated and stay alive."""
+    from repro.core.episode import EngineSpec, _compiled_runner, _device_consts
+    from repro.core.space import jetson_like_space
+
+    space = jetson_like_space("xavier_nx")
+    spec = EngineSpec(spaces=(space,), iters=4, window=4)
+    n = spec.n
+    batch = {
+        "space_id": jnp.zeros(1, jnp.int32),
+        "table_id": jnp.zeros(1, jnp.int32),
+        "tau_target": jnp.full(1, 5.0, jnp.float32),
+        "p_budget": jnp.full(1, 1e9, jnp.float32),
+        "throughput": jnp.zeros(1, bool),
+    }
+    tables = {
+        "tau": jnp.ones((1, 4, n), jnp.float32),
+        "p": jnp.ones((1, 4, n), jnp.float32),
+    }
+    sid_ref, tid_ref = batch["space_id"], batch["table_id"]
+    res = _compiled_runner(spec)(batch, tables)
+    jax.block_until_ready(res)
+    assert sid_ref.is_deleted()
+    assert tid_ref.is_deleted()
+    consts = _device_consts(spec)
+    assert not any(v.is_deleted() for v in consts.values())
+
+
+def test_fleet_banned_rows_never_chosen():
+    """Firmware-locked rows are born prohibited: no twin with a ladder
+    variant ever measures a banned configuration."""
+    from repro.core.episode import run_fleet_requests
+    from repro.experiments.fleet import _request
+
+    perts = sample_perturbations(9, seed=1)
+    twins = [build_twin(p) for p in perts if p.ladder_variant != 0]
+    assert twins, "sampler produced no ladder variants in 9 draws"
+    reqs = [_request(t) for t in twins]
+    results = run_fleet_requests(reqs, iters=ITERS, window=WINDOW)
+    for twin, res in zip(twins, results):
+        banned = np.flatnonzero(twin.banned)
+        assert not np.isin(res["idx"], banned).any()

@@ -149,3 +149,39 @@ def test_property_coral_invariants(measurements, tau_target, p_budget):
             if o.tau >= tau_target and o.power <= p_budget]
     if feas:
         assert res.tau >= tau_target and res.power <= p_budget
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(4, 12),
+    st.integers(2, 5),
+    st.integers(1, 30),
+    st.integers(0, 2**31 - 1),
+)
+def test_property_incremental_dcor_matches_full(w, d, steps, seed):
+    """The fleet engine's O(W·C) ring update reads out the same window
+    correlations as the O(W²·C) full recompute, at every fill level
+    (padded rows masked by n_valid) and through wrap-around."""
+    from repro.core.dcov import (
+        dcor_all_cols,
+        dcor_state_corr,
+        dcor_state_init,
+        dcor_state_push,
+    )
+
+    rng = np.random.default_rng(seed)
+    m = 2
+    c = d + m
+    state = dcor_state_init(w, c)
+    win = np.zeros((w, c), np.float32)
+    for t in range(steps):
+        row = rng.normal(size=c).astype(np.float32)
+        slot = t % w
+        state = dcor_state_push(
+            state, jnp.asarray(row), jnp.int32(slot), jnp.int32(min(t, w))
+        )
+        win[slot] = row
+    n_valid = min(steps, w)
+    incr = np.asarray(dcor_state_corr(state, jnp.int32(n_valid), d))
+    full = np.asarray(dcor_all_cols(jnp.asarray(win), jnp.int32(n_valid), d))
+    np.testing.assert_allclose(incr, full, atol=5e-3)
