@@ -19,17 +19,14 @@ import time
 from pathlib import Path
 from typing import Callable, Optional
 
-_FALSY = ("", "0", "false", "no")
-
-
 def env_flag(name: str, default: bool = False) -> bool:
     """Truthiness of an env var: unset → ``default``; "", 0, false, no →
-    False; anything else → True. Every flag goes through here so "QUICK="
-    and "QUICK=0" mean the same thing in every entry point."""
-    raw = os.environ.get(name)
-    if raw is None:
-        return default
-    return raw.strip().lower() not in _FALSY
+    False; anything else → True. Delegates to ``repro.envflags`` — the
+    single shared truthy-parser — so "QUICK=" and "QUICK=0" mean the same
+    thing in every entry point, bench or kernel."""
+    from repro.envflags import env_flag as _env_flag
+
+    return _env_flag(name, default)
 
 
 def quick() -> bool:
@@ -45,9 +42,11 @@ def serving_perf_strict() -> bool:
 
 def pallas_interpret() -> Optional[bool]:
     """Explicit PALLAS_INTERPRET override, or None for backend-auto.
-    Delegates to the kernel's own parser so the helper and
-    ``repro.kernels.dcov.dcov.default_interpret`` cannot drift."""
-    from repro.kernels.dcov.dcov import parse_interpret_env
+    Delegates to the kernels' canonical routing point
+    (``repro.kernels.runtime``, built on the same ``repro.envflags``
+    parser) so the harness helper and ``default_interpret`` cannot
+    drift."""
+    from repro.kernels.runtime import parse_interpret_env
 
     return parse_interpret_env(os.environ.get("PALLAS_INTERPRET"))
 

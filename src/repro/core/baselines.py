@@ -18,8 +18,29 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.kalman import ScalarKalman
 from repro.core.space import Config, ConfigSpace
+
+
+@dataclasses.dataclass
+class ScalarKalman:
+    """Scalar Kalman filter for ALERT's global slowdown factor ξ
+    (Wan et al., ATC'20): observed = ξ · profiled + noise. Lives here —
+    inlined from the former core/kalman.py — because ``alert()`` is its
+    only consumer (``alert_online`` replaces it with direct trials)."""
+
+    x: float = 1.0  # state estimate (slowdown factor)
+    p: float = 1.0  # estimate covariance
+    q: float = 1e-3  # process noise
+    r: float = 1e-2  # measurement noise
+
+    def update(self, measured_ratio: float) -> float:
+        # predict
+        self.p += self.q
+        # update
+        k = self.p / (self.p + self.r)
+        self.x += k * (measured_ratio - self.x)
+        self.p *= 1.0 - k
+        return self.x
 
 
 @dataclasses.dataclass

@@ -1,0 +1,246 @@
+"""Shape/dtype contracts for the fixed-size engine state containers.
+
+The episode carry, the incremental dCor state and the fleet batch are
+the engine's load-bearing data structures: every field has a pinned
+dtype (float32/int32/bool — never float64) and a shape that is a pure
+function of the compile-time EngineSpec. The tables below write those
+invariants down once, jaxtyping-style (``Float32[Array, "T+W D+4"]``),
+and three consumers keep them honest:
+
+- runtime: ``REPRO_CONTRACTS=1`` makes ``_init_carry``, the dcov state
+  constructors and ``run_fleet_requests`` validate their containers at
+  trace/build time (zero cost when the flag is off, and zero cost per
+  scan step when on — checks run once per trace);
+- static: repro-lint rule RL04 cross-checks the carry fields written in
+  ``core/episode.py::_init_carry`` against these tables, so a new carry
+  field without a contract fails lint;
+- docs: the tables are the authoritative field list for EXPERIMENTS.md
+  §Episode engine.
+
+Dimension symbols: T episode iters, W dCor window, D config dims,
+N padded grid rows, C = D+2 dCor columns, B batch (fleet requests).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Mapping
+
+from repro.envflags import env_flag
+
+# ------------------------------------------------------------------ tables
+
+# base carry — every episode flavor (core/episode.py::_init_carry)
+CARRY_CONTRACT: Dict[str, str] = {
+    "hist_sm": 'Float32[Array, "T+W D+4"]',
+    "n_obs": 'Int32[Array, ""]',
+    "epoch_start": 'Int32[Array, ""]',
+    "epoch_id": 'Int32[Array, ""]',
+    "clock": 'Int32[Array, ""]',
+    "seen_tag": 'Int32[Array, "N"]',
+    "best_idx": 'Int32[Array, ""]',
+    "best_tau": 'Float32[Array, ""]',
+    "best_p": 'Float32[Array, ""]',
+    "best_r": 'Float32[Array, ""]',
+    "best_valid": 'Bool[Array, ""]',
+    "sec_idx": 'Int32[Array, ""]',
+    "sec_tau": 'Float32[Array, ""]',
+    "sec_p": 'Float32[Array, ""]',
+    "sec_r": 'Float32[Array, ""]',
+    "sec_valid": 'Bool[Array, ""]',
+    "last_idx": 'Int32[Array, ""]',
+    "last_tau": 'Float32[Array, ""]',
+    "last_p": 'Float32[Array, ""]',
+    "last_valid": 'Bool[Array, ""]',
+    "aside": 'Bool[Array, ""]',
+    "probed_for": 'Int32[Array, ""]',
+    "probe_done": 'Bool[Array, ""]',
+}
+
+# fleet episodes add the incremental dCor accumulators (carried instead
+# of recomputed from the window — O(W·C²) per step)
+FLEET_CARRY_CONTRACT: Dict[str, str] = {
+    "dc_win": 'Float32[Array, "W C"]',
+    "dc_dist": 'Float32[Array, "W W C"]',
+    "dc_rows": 'Float32[Array, "W C"]',
+    "dc_cross": 'Float32[Array, "C C"]',
+}
+
+# drift episodes add the budget schedule slot + CUSUM monitor state
+DRIFT_CARRY_CONTRACT: Dict[str, str] = {
+    "p_budget": 'Float32[Array, ""]',
+    "mon_sigma": 'Float32[Array, ""]',
+    "held_idx": 'Int32[Array, ""]',
+    "held_tau": 'Float32[Array, ""]',
+    "held_p": 'Float32[Array, ""]',
+    "held_valid": 'Bool[Array, ""]',
+    "mon_ref_tau": 'Float32[Array, ""]',
+    "mon_ref_p": 'Float32[Array, ""]',
+    "mon_calib": 'Int32[Array, ""]',
+    "mon_pos_tau": 'Float32[Array, ""]',
+    "mon_neg_tau": 'Float32[Array, ""]',
+    "mon_pos_p": 'Float32[Array, ""]',
+    "mon_neg_p": 'Float32[Array, ""]',
+    "mon_active": 'Bool[Array, ""]',
+    "retries": 'Int32[Array, ""]',
+    "resets": 'Int32[Array, ""]',
+}
+
+# incremental dCor state (core/dcov.py::dcor_state_*)
+DCOR_STATE_CONTRACT: Dict[str, str] = {
+    "win": 'Float32[Array, "W C"]',
+    "dist": 'Float32[Array, "W W C"]',
+    "rows": 'Float32[Array, "W C"]',
+    "cross": 'Float32[Array, "C C"]',
+}
+
+# the host-built fleet request batch (episode.py::run_fleet_requests);
+# leading B is the vmapped episode axis
+FLEET_BATCH_CONTRACT: Dict[str, str] = {
+    "space_id": 'Int32[Array, "B"]',
+    "table_id": 'Int32[Array, "B"]',
+    "tau_target": 'Float32[Array, "B"]',
+    "p_budget": 'Float32[Array, "B"]',
+    "throughput": 'Bool[Array, "B"]',
+    "banned": 'Bool[Array, "B N"]',
+    "min_idx": 'Int32[Array, "B"]',
+    "max_idx": 'Int32[Array, "B"]',
+    "warm": 'Bool[Array, "B"]',
+    "warm_n": 'Int32[Array, "B"]',
+    "warm_hist": 'Float32[Array, "B W D+4"]',
+    "warm_prohibit": 'Bool[Array, "B N"]',
+    "warm_best_idx": 'Int32[Array, "B"]',
+    "warm_best_tau": 'Float32[Array, "B"]',
+    "warm_best_p": 'Float32[Array, "B"]',
+    "warm_best_r": 'Float32[Array, "B"]',
+    "warm_best_valid": 'Bool[Array, "B"]',
+    "warm_sec_idx": 'Int32[Array, "B"]',
+    "warm_sec_tau": 'Float32[Array, "B"]',
+    "warm_sec_p": 'Float32[Array, "B"]',
+    "warm_sec_r": 'Float32[Array, "B"]',
+    "warm_sec_valid": 'Bool[Array, "B"]',
+    "warm_last_idx": 'Int32[Array, "B"]',
+    "warm_last_tau": 'Float32[Array, "B"]',
+    "warm_last_p": 'Float32[Array, "B"]',
+    "warm_last_valid": 'Bool[Array, "B"]',
+    "noise": 'Float32[Array, "B T 2"]',
+}
+
+# the unpadded per-twin ground truth (experiments/fleet.py::FleetTwin);
+# N0 is the twin's own grid size, float64 on purpose — this is the
+# noise-free oracle landscape, rounded to f32 only at the device boundary
+TWIN_CONTRACT: Dict[str, str] = {
+    "banned": 'Bool[Array, "N0"]',
+    "land_tau": 'Float64[Array, "N0"]',
+    "land_p": 'Float64[Array, "N0"]',
+}
+
+_DTYPES = {"Float32": "float32", "Float64": "float64", "Int32": "int32",
+           "Bool": "bool"}
+_SPEC_RE = re.compile(r'^(\w+)\[Array, "(.*)"\]$')
+
+
+class ContractError(AssertionError):
+    """A container violated its shape/dtype contract."""
+
+
+def contracts_enabled() -> bool:
+    """The REPRO_CONTRACTS=1 runtime lane (single parser: envflags)."""
+    return env_flag("REPRO_CONTRACTS")
+
+
+def _parse(spec: str):
+    m = _SPEC_RE.match(spec)
+    if m is None:
+        raise ContractError(f"malformed contract spec {spec!r}")
+    return _DTYPES[m.group(1)], m.group(2)
+
+
+def _expect_shape(dims_expr: str, dims: Mapping[str, int]):
+    if not dims_expr:
+        return ()
+    env = {"__builtins__": {}}
+    return tuple(
+        int(eval(tok, env, dict(dims)))  # tokens like "T+W" — repo-authored
+        for tok in dims_expr.split()
+    )
+
+
+def check_container(
+    name: str,
+    container: Mapping[str, object],
+    contract: Mapping[str, str],
+    dims: Mapping[str, int],
+) -> None:
+    """Exact-key, dtype and shape validation of one state container.
+    Works on tracers (trace-time check under jit/vmap) and on host
+    numpy arrays alike — both expose .dtype/.shape."""
+    got, want = set(container), set(contract)
+    if got != want:
+        missing, extra = sorted(want - got), sorted(got - want)
+        raise ContractError(
+            f"{name}: field set mismatch (missing={missing}, extra={extra})"
+        )
+    for field, spec in contract.items():
+        dtype, dims_expr = _parse(spec)
+        arr = container[field]
+        actual = str(arr.dtype)
+        if actual != dtype:
+            raise ContractError(
+                f"{name}.{field}: dtype {actual}, contract says {dtype}"
+            )
+        shape = _expect_shape(dims_expr, dims)
+        if tuple(arr.shape) != shape:
+            raise ContractError(
+                f"{name}.{field}: shape {tuple(arr.shape)}, contract says "
+                f"{shape} ({spec})"
+            )
+
+
+def carry_contract(fleet: bool, drift: bool) -> Dict[str, str]:
+    table = dict(CARRY_CONTRACT)
+    if fleet:
+        table.update(FLEET_CARRY_CONTRACT)
+    if drift:
+        table.update(DRIFT_CARRY_CONTRACT)
+    return table
+
+
+def check_carry(spec, carry: Mapping[str, object]) -> None:
+    """Validate an episode carry against its EngineSpec (trace-time)."""
+    dims = {"T": spec.iters, "W": spec.window, "D": spec.d, "N": spec.n,
+            "C": spec.d + 2}
+    check_container(
+        "carry", carry, carry_contract(spec.fleet, spec.drift), dims
+    )
+
+
+def check_dcor_state(state: Mapping[str, object]) -> None:
+    """Validate an incremental dCor state dict; W and C are taken from
+    the ``win`` field (the constructors fix them)."""
+    win = state.get("win")
+    if win is None:
+        raise ContractError("dcor state: missing 'win' field")
+    w, c = win.shape
+    check_container(
+        "dcor_state", state, DCOR_STATE_CONTRACT, {"W": w, "C": c}
+    )
+
+
+def check_twin(twin) -> None:
+    """Validate a FleetTwin's ground-truth arrays against its space."""
+    check_container(
+        "fleet_twin",
+        {"banned": twin.banned, "land_tau": twin.land_tau,
+         "land_p": twin.land_p},
+        TWIN_CONTRACT,
+        {"N0": twin.space.size()},
+    )
+
+
+def check_fleet_batch(ep: Mapping[str, object], *, b: int, n: int, w: int,
+                      d: int, t: int) -> None:
+    """Validate the host-built fleet batch before device upload."""
+    check_container(
+        "fleet_batch", ep, FLEET_BATCH_CONTRACT,
+        {"B": b, "N": n, "W": w, "D": d, "T": t},
+    )

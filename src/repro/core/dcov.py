@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.contracts import check_dcor_state, contracts_enabled
+
 
 def _pairwise_dist(x: jax.Array) -> jax.Array:
     """x: (n,) or (n,d) -> (n,n) euclidean distance matrix."""
@@ -63,7 +65,7 @@ def centered_distance_stack(cols: jax.Array, n_valid: jax.Array) -> jax.Array:
           unpadded computation exactly.
     """
     w = cols.shape[0]
-    valid = jnp.arange(w) < n_valid
+    valid = jnp.arange(w, dtype=jnp.int32) < n_valid
     mask = (valid[:, None] & valid[None, :]).astype(jnp.float32)
     d = jnp.abs(cols.astype(jnp.float32)[:, None, :] - cols[None, :, :])
     d = d * mask[:, :, None]
@@ -119,7 +121,7 @@ def dcor_all_cols(cols: jax.Array, n_valid: jax.Array, d: int) -> jax.Array:
     w, c = cols.shape
     cols = cols.astype(jnp.float32)
     n = jnp.asarray(n_valid)
-    valid = jnp.arange(w) < n
+    valid = jnp.arange(w, dtype=jnp.int32) < n
     mask = (valid[:, None] & valid[None, :]).astype(jnp.float32)
     dist = jnp.abs(cols[:, None, :] - cols[None, :, :]) * mask[:, :, None]
     inv_n = 1.0 / n.astype(jnp.float32)
@@ -165,14 +167,21 @@ def dcor_numpy(x: np.ndarray, y: np.ndarray) -> float:
 
 
 def dcor_state_init(window: int, c: int) -> dict:
-    """Empty incremental-dCor state for a (window, c)-shaped column block."""
+    """Empty incremental-dCor state for a (window, c)-shaped column
+    block. Contract (core/contracts.py::DCOR_STATE_CONTRACT, enforced
+    under REPRO_CONTRACTS=1): ``win: Float32[Array, "W C"]``, ``dist:
+    Float32[Array, "W W C"]``, ``rows: Float32[Array, "W C"]``,
+    ``cross: Float32[Array, "C C"]``."""
     f32 = jnp.float32
-    return {
+    state = {
         "win": jnp.zeros((window, c), f32),
         "dist": jnp.zeros((window, window, c), f32),
         "rows": jnp.zeros((window, c), f32),
         "cross": jnp.zeros((c, c), f32),
     }
+    if contracts_enabled():  # trace-time check only
+        check_dcor_state(state)
+    return state
 
 
 def dcor_state_from_window(cols: jax.Array, n_valid: jax.Array) -> dict:
@@ -184,16 +193,19 @@ def dcor_state_from_window(cols: jax.Array, n_valid: jax.Array) -> dict:
     """
     w, c = cols.shape
     cols = cols.astype(jnp.float32)
-    valid = jnp.arange(w) < n_valid
+    valid = jnp.arange(w, dtype=jnp.int32) < n_valid
     mask = (valid[:, None] & valid[None, :]).astype(jnp.float32)
     dist = jnp.abs(cols[:, None, :] - cols[None, :, :]) * mask[:, :, None]
     flat = dist.reshape(w * w, c)
-    return {
+    state = {
         "win": cols * valid[:, None],
         "dist": dist,
         "rows": dist.sum(axis=1),
         "cross": flat.T @ flat,
     }
+    if contracts_enabled():  # trace-time check only
+        check_dcor_state(state)
+    return state
 
 
 def dcor_state_push(state: dict, row: jax.Array, slot, n_filled) -> dict:
@@ -207,7 +219,7 @@ def dcor_state_push(state: dict, row: jax.Array, slot, n_filled) -> dict:
     updates to the row sums and the (C, C) cross products.
     """
     w = state["win"].shape[0]
-    idx = jnp.arange(w)
+    idx = jnp.arange(w, dtype=jnp.int32)
     keep = ((idx < n_filled) & (idx != slot)).astype(jnp.float32)[:, None]
     old = state["dist"][slot]  # (W, C); zero at unfilled slots
     new = jnp.abs(row[None, :].astype(jnp.float32) - state["win"]) * keep
@@ -216,12 +228,15 @@ def dcor_state_push(state: dict, row: jax.Array, slot, n_filled) -> dict:
     rows = rows.at[slot].set(new.sum(axis=0))
     dist = state["dist"].at[slot].set(new)
     dist = dist.at[:, slot].set(new)
-    return {
+    out = {
         "win": state["win"].at[slot].set(row.astype(jnp.float32)),
         "dist": dist,
         "rows": rows,
         "cross": cross,
     }
+    if contracts_enabled():  # trace-time check only
+        check_dcor_state(out)
+    return out
 
 
 def dcor_state_corr(state: dict, n_valid: jax.Array, d: int) -> jax.Array:

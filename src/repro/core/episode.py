@@ -75,7 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import search
+from repro.core import contracts, sanitize, search
 from repro.core.baselines import Outcome
 from repro.core.dcov import (
     dcor_all_cols,
@@ -234,6 +234,12 @@ def _device_consts(spec: EngineSpec) -> Dict[str, jnp.ndarray]:
 
 
 def _init_carry(spec: EngineSpec, ep: Dict, pad_mask) -> Dict[str, jnp.ndarray]:
+    """Fixed-size episode carry. Contract (core/contracts.py, enforced
+    under REPRO_CONTRACTS=1, cross-checked statically by lint rule
+    RL04): ``hist_sm: Float32[Array, "T+W D+4"]``, ``seen_tag:
+    Int32[Array, "N"]`` plus f32/i32/bool anchor scalars; fleet adds the
+    ``dc_*`` dCor accumulators (``Float32[Array, "W C"]``, C = D+2),
+    drift adds the budget/CUSUM-monitor scalars."""
     t, w, d = spec.iters, spec.window, spec.d
     f32, i32 = jnp.float32, jnp.int32
     c = {
@@ -321,6 +327,11 @@ def _init_carry(spec: EngineSpec, ep: Dict, pad_mask) -> Dict[str, jnp.ndarray]:
             retries=i32(0),
             resets=i32(0),
         )
+    # REPRO_CONTRACTS=1: validate against core/contracts.py (trace-time
+    # only — nothing runs per scan step); rule RL04 cross-checks the
+    # same tables statically
+    if contracts.contracts_enabled():
+        contracts.check_carry(spec, c)
     return c
 
 
@@ -369,7 +380,7 @@ def _result(c: Dict, thr, tau_target, p_budget):
     """CORAL.result(): best feasible epoch observation (dual: by τ/p,
     throughput: by τ), falling back to the epoch best-by-reward."""
     taus, powers = c["hist_sm"][:, -4], c["hist_sm"][:, -3]
-    rows = jnp.arange(taus.shape[0])
+    rows = jnp.arange(taus.shape[0], dtype=jnp.int32)
     valid = (rows >= c["epoch_start"]) & (rows < c["n_obs"])
     feas = valid & _feasible(thr, taus, powers, tau_target, p_budget)
     val = jnp.where(thr, taus, taus / jnp.maximum(powers, 1e-9))
@@ -409,7 +420,7 @@ def _propose(spec: EngineSpec, k: Dict, c: Dict, thr, tau_target, p_budget):
         t_win = jax.lax.dynamic_slice(
             c["hist_sm"], (lo, jnp.int32(spec.d + 2)), (w, 1)
         )[:, 0]
-        in_win = jnp.arange(w) < (c["n_obs"] - lo)
+        in_win = jnp.arange(w, dtype=jnp.int32) < (c["n_obs"] - lo)
         fresh = (c["clock"].astype(jnp.float32) - t_win) <= horizon
         lo = c["n_obs"] - (in_win & fresh).sum()
     win = jax.lax.dynamic_slice(
@@ -757,8 +768,16 @@ def _drift_step(spec: EngineSpec, k: Dict, ep: Dict, tables: Dict):
 _FINAL_KEYS = ("n_obs", "epoch_start", "best_idx", "best_valid")
 
 
-@functools.lru_cache(maxsize=None)
 def _compiled_runner(spec: EngineSpec):
+    """jit(vmap(scan)) runner for ``spec``, checkify-wrapped when the
+    REPRO_CHECKIFY=1 sanitizer lane is on. The flag is part of the cache
+    key (not read inside the cached build) so flipping it mid-process
+    can never serve a stale program."""
+    return _compiled_runner_impl(spec, sanitize.checkify_enabled())
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_runner_impl(spec: EngineSpec, checkified: bool):
     """jit(vmap(scan)) for one episode structure. Episode data — the
     measurement tables, targets, mode/variant flags — ride the batch
     axis; the padded space constants stay device-resident across calls
@@ -785,7 +804,7 @@ def _compiled_runner(spec: EngineSpec):
                 k["min_idx"] = ep["min_idx"]
                 k["max_idx"] = ep["max_idx"]
             c = _init_carry(spec, ep, pad)
-            ts = jnp.arange(spec.iters)
+            ts = jnp.arange(spec.iters, dtype=jnp.int32)
             # unroll=2 halves the while-loop's per-iteration fixed cost;
             # beyond that, program size outweighs the gain on CPU
             if spec.drift:
@@ -850,6 +869,17 @@ def _compiled_runner(spec: EngineSpec):
     # at fleet scale that is the difference between O(B·(N+T)) and
     # 2× that in transient peak memory. The space constants (argument 2)
     # are cached across calls and must NOT be donated.
+    if checkified:
+        # checkify preserves argument positions (it returns (err, out)),
+        # so the same donate_argnums apply to the wrapped function
+        jitted = jax.jit(sanitize.wrap_checkify(run), donate_argnums=(0, 1))
+
+        def _checked(ep_batch, meas_tables):
+            err, out = jitted(ep_batch, meas_tables, _device_consts(spec))
+            err.throw()  # raises JaxRuntimeError on NaN/OOB/div poison
+            return out
+
+        return _checked
     jitted = jax.jit(run, donate_argnums=(0, 1))
     return lambda batch, tables: jitted(batch, tables, _device_consts(spec))
 
@@ -1154,6 +1184,7 @@ def run_drift_requests(
         "budgets": np.empty((b, intervals), np.float32),
     }
     for i, r in enumerate(reqs):
+        # repro-lint: disable=RL04 — host f64 mirrors the oracle budget trace
         b64 = r["targets"].p_budget * np.asarray(r["budget_scale"], np.float64)
         budgets64.append(b64)
         ep["space_id"][i] = spaces.index(r["space"])
@@ -1336,6 +1367,8 @@ def run_fleet_requests(
             ep["max_idx"][i] = warm.get("max_idx", consts["max_idx"])
 
     ep["noise"] = noises
+    if contracts.contracts_enabled():
+        contracts.check_fleet_batch(ep, b=b, n=n, w=w, d=d, t=iters)
     batch = {name: jnp.asarray(v) for name, v in ep.items()}
     tables = {"tau": jnp.asarray(land_tau32), "p": jnp.asarray(land_p32)}
     if stats is not None:

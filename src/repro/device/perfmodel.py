@@ -135,7 +135,9 @@ class PerfModel:
     hw: TPUv5eSpec = DEFAULT_HW
     contention_kappa: float = 0.06  # HBM contention per extra stream
 
-    def device_time(self, tpu_freq: float, hbm_freq: float, concurrency: float) -> float:
+    def device_time(
+        self, tpu_freq: float, hbm_freq: float, concurrency: float
+    ) -> float:
         t_c = self.terms.t_compute * (self.hw.nominal_tpu_freq / tpu_freq)
         t_m = self.terms.t_memory * (self.hw.nominal_hbm_freq / hbm_freq)
         t_l = self.terms.t_collective

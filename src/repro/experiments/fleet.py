@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.registry import get_config
+from repro.core.contracts import check_twin, contracts_enabled
 from repro.core.episode import _f64_reward, run_fleet_requests
 from repro.core.evaluate import RegimeTargets
 from repro.core.space import ConfigSpace, space_grid
@@ -90,7 +91,10 @@ def ladder_banned_rows(space: ConfigSpace, variant: int) -> np.ndarray:
 @dataclasses.dataclass
 class FleetTwin:
     """One unit: its perturbation, resolved hardware, ground truth and
-    per-twin absolute targets (over its *allowed* rows only)."""
+    per-twin absolute targets (over its *allowed* rows only). Contract
+    (core/contracts.py::TWIN_CONTRACT, checked under REPRO_CONTRACTS=1):
+    ``banned: Bool[Array, "N0"]``, ``land_tau / land_p: Float64[Array,
+    "N0"]`` with N0 = space.size()."""
 
     pert: FleetPerturbation
     space: ConfigSpace
@@ -136,7 +140,7 @@ def build_twin(
     feas = allowed & (land_tau >= tau_target)
     p_budget = float(land_p[feas].min()) * p_slack
     noise_seed = int(np.random.SeedSequence((pert.twin_id, 7, 0)).generate_state(1)[0])
-    return FleetTwin(
+    twin = FleetTwin(
         pert=pert,
         space=space,
         banned=banned,
@@ -146,6 +150,11 @@ def build_twin(
         noise=w.noise,
         noise_seed=noise_seed,
     )
+    # REPRO_CONTRACTS=1: the ground-truth arrays must match the twin's
+    # own grid (contracts.TWIN_CONTRACT — Float64 on purpose here)
+    if contracts_enabled():
+        check_twin(twin)
+    return twin
 
 
 def build_fleet(

@@ -33,26 +33,13 @@ from jax.experimental import pallas as pl
 _COL_PAD = 8
 
 
-def parse_interpret_env(raw) -> "bool | None":
-    """The one parser for PALLAS_INTERPRET: None for unset/empty
-    (backend-auto), False for "0"/"false"/"no", True otherwise.
-    ``benchmarks.common.pallas_interpret`` calls this too, so the harness
-    helper and the kernel can never disagree."""
-    raw = (raw or "").strip().lower()
-    if not raw:
-        return None
-    return raw not in ("0", "false", "no")
-
-
-def default_interpret() -> bool:
-    """Interpret mode unless running on an actual TPU backend; the
-    PALLAS_INTERPRET env flag overrides the backend-derived default."""
-    import os
-
-    env = parse_interpret_env(os.environ.get("PALLAS_INTERPRET"))
-    if env is not None:
-        return env
-    return jax.default_backend() != "tpu"
+# Canonical interpret-mode routing lives in repro.kernels.runtime; the
+# names are re-exported here because this module hosted them first and
+# benchmarks.common / tests still import them from this path.
+from repro.kernels.runtime import (  # noqa: F401
+    default_interpret,
+    parse_interpret_env,
+)
 
 
 # VMEM working-set budget for one (block, block, cpad) tile family. The

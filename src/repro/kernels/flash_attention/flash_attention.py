@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -91,8 +93,10 @@ def flash_attention_bhsd(
     window: int | None = None,
     block_q: int = 512,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:  # static param: resolved at trace time
+        interpret = default_interpret()
     b, hq, sq, d = q.shape
     hkv, sk, dv = k.shape[1], k.shape[2], v.shape[3]
     assert hq % hkv == 0

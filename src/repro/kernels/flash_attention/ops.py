@@ -1,5 +1,6 @@
 """Jit'd public wrapper matching the model-side call convention
-(B, S, H, D) ⇄ the kernel's (B, H, S, D)."""
+(B, S, H, D) ⇄ the kernel's (B, H, S, D). ``interpret=None`` routes
+through ``repro.kernels.runtime.default_interpret`` inside the kernel."""
 from __future__ import annotations
 
 import jax
@@ -18,7 +19,7 @@ def flash_attention(
     window: int | None = None,
     block_q: int = 512,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     b, sq, hkv, g, d = qg.shape
     q = qg.reshape(b, sq, hkv * g, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Canonical interpret-mode routing for every Pallas kernel in the repo.
+
+A kernel must never derive its own ``interpret=`` value (that is lint
+rule RL05): the decision lives here, in one place, so the dcov, flash
+attention and SSD-scan entry points — and the bench harness view
+``benchmarks.common.pallas_interpret`` — can never disagree about
+whether the Mosaic compiler or the interpreter runs a kernel.
+
+Resolution order:
+
+1. ``PALLAS_INTERPRET`` env var, parsed by the repo's single truthy
+   parser (:mod:`repro.envflags`): "0"/"false"/"no" forces compiled
+   mode, any other non-empty value forces interpret mode.
+2. Backend auto-detect: interpret everywhere except a real TPU backend.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.envflags import parse_tristate
+
+
+def parse_interpret_env(raw: Optional[str]) -> Optional[bool]:
+    """The one parser for PALLAS_INTERPRET: ``None`` for unset/empty
+    (backend-auto), else :func:`repro.envflags.truthy`."""
+    return parse_tristate(raw)
+
+
+def default_interpret() -> bool:
+    """Interpret mode unless running on an actual TPU backend; the
+    PALLAS_INTERPRET env flag overrides the backend-derived default."""
+    env = parse_interpret_env(os.environ.get("PALLAS_INTERPRET"))
+    if env is not None:
+        return env
+    return jax.default_backend() != "tpu"

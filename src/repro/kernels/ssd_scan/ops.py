@@ -1,7 +1,8 @@
-"""Jit'd public wrapper for the SSD Pallas kernel."""
+"""Jit'd public wrapper for the SSD Pallas kernel. ``interpret=None``
+routes through ``repro.kernels.runtime.default_interpret``."""
 from repro.kernels.ssd_scan.ssd_scan import ssd_pallas
 
 
-def ssd(x, dt, A, Bm, Cm, chunk=256, initial_state=None, interpret=True):
+def ssd(x, dt, A, Bm, Cm, chunk=256, initial_state=None, interpret=None):
     return ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk,
                       initial_state=initial_state, interpret=interpret)

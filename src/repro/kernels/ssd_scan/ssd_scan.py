@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import default_interpret
+
 
 def _ssd_kernel(
     x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sfin_ref, state_ref,
@@ -86,9 +88,11 @@ def ssd_pallas(
     Cm: jax.Array,  # (B, S, N)
     chunk: int = 256,
     initial_state=None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (y (B,S,NH,hd), final_state (B,NH,hd,N))."""
+    if interpret is None:  # static param: resolved at trace time
+        interpret = default_interpret()
     b, s, nh, hd = x.shape
     n = Bm.shape[-1]
     pad = (-s) % chunk

@@ -1,0 +1,14 @@
+"""Golden RL01 fixture: Python branching on a traced value.
+
+`decide` is jit-decorated, so its parameters are tracers; the `if` and
+the float() both force concrete values at trace time.
+"""
+import jax
+
+
+@jax.jit
+def decide(x, lo):
+    y = x - lo
+    if y > 0:  # RL01: Python `if` on a traced value
+        return float(y)  # RL01: float() on a traced value
+    return y

@@ -1,0 +1,18 @@
+"""Golden RL02 fixture: reading a buffer after donating it.
+
+`step` donates its first argument; `loop` reads `params` again after
+the donating call, when its buffer may already be aliased.
+"""
+import jax
+
+
+def add(a, b):
+    return a + b
+
+
+step = jax.jit(add, donate_argnums=(0,))
+
+
+def loop(params, grads):
+    out = step(params, grads)
+    return out + params  # RL02: `params` was donated on the line above

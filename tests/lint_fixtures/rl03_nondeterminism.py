@@ -1,0 +1,13 @@
+"""Golden RL03 fixture: nondeterminism in a benchmark results writer.
+
+A wall-clock stamp inside the results payload and an unsorted
+json.dump both break the byte-identical-results contract.
+"""
+import json
+import time
+
+
+def write_results(results, path):
+    results["stamp"] = time.time()  # RL03: wall clock in results
+    with open(path, "w") as fh:
+        json.dump(results, fh)  # RL03: no sort_keys=True

@@ -1,0 +1,11 @@
+"""Golden RL04 fixture: dtype-unannotated constructor + float64 leak
+in engine-state-shaped code.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_state(w):
+    hist = jnp.zeros((w, 4))  # RL04: no explicit dtype
+    budget = np.float64(0.0)  # RL04: float64 in engine state
+    return hist, budget

@@ -1,0 +1,16 @@
+"""Golden RL05 fixture: kernel wrapper deriving interpret mode locally
+instead of routing through repro.kernels.runtime.default_interpret.
+"""
+import os
+
+import jax
+
+
+def run_kernel(x, interpret=True):  # RL05: hardcoded interpret default
+    return x
+
+
+def local_resolve():
+    if os.environ.get("PALLAS_INTERPRET"):  # RL05: forked env parsing
+        return True
+    return jax.default_backend() != "tpu"  # RL05: backend-derived mode

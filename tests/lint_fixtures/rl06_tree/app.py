@@ -1,0 +1,3 @@
+from pkg.used import live
+
+print(live())

@@ -1,0 +1,3 @@
+"""Golden RL06 fixture package: `used` is imported by app.py, `orphan`
+is reachable from no entry point.
+"""

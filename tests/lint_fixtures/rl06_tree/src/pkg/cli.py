@@ -1,0 +1,9 @@
+"""A __main__-guarded module is its own entry point — never dead."""
+
+
+def main():
+    return 2
+
+
+if __name__ == "__main__":
+    main()

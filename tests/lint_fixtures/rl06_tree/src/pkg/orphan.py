@@ -1,0 +1,2 @@
+def dead():
+    return 0

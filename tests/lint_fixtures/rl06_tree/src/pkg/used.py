@@ -1,0 +1,2 @@
+def live():
+    return 1

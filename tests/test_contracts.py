@@ -1,0 +1,141 @@
+"""Tier-1 tests for the shape/dtype contract lane (core/contracts.py):
+the tables parse, check_container catches every class of violation, the
+REPRO_CONTRACTS=1 lane validates a real engine run, and a corrupted
+container fails loudly.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import contracts
+from repro.core.contracts import (
+    CARRY_CONTRACT,
+    ContractError,
+    check_container,
+    check_twin,
+    contracts_enabled,
+)
+from repro.core.dcov import dcor_state_init
+from repro.core.episode import run_coral_batch
+from repro.core.evaluate import RegimeTargets
+from repro.core.space import jetson_like_space
+from repro.device import jetson_like_simulator
+
+CONTRACT = {
+    "hist": 'Float32[Array, "T+W D"]',
+    "count": 'Int32[Array, ""]',
+    "mask": 'Bool[Array, "N"]',
+}
+DIMS = {"T": 4, "W": 2, "D": 3, "N": 5}
+
+
+def _good():
+    return {
+        "hist": np.zeros((6, 3), np.float32),
+        "count": np.int32(0),
+        "mask": np.zeros(5, bool),
+    }
+
+
+def test_every_committed_spec_parses():
+    for table in (
+        contracts.CARRY_CONTRACT,
+        contracts.FLEET_CARRY_CONTRACT,
+        contracts.DRIFT_CARRY_CONTRACT,
+        contracts.DCOR_STATE_CONTRACT,
+        contracts.FLEET_BATCH_CONTRACT,
+        contracts.TWIN_CONTRACT,
+    ):
+        for spec in table.values():
+            dtype, dims_expr = contracts._parse(spec)
+            assert dtype in ("float32", "float64", "int32", "bool")
+            contracts._expect_shape(
+                dims_expr, {"T": 4, "W": 2, "D": 3, "N": 5, "C": 5, "B": 2,
+                            "N0": 7},
+            )
+
+
+def test_check_container_accepts_valid():
+    check_container("c", _good(), CONTRACT, DIMS)
+
+
+def test_check_container_rejects_missing_and_extra_fields():
+    c = _good()
+    del c["mask"]
+    with pytest.raises(ContractError, match="missing=\\['mask'\\]"):
+        check_container("c", c, CONTRACT, DIMS)
+    c = _good()
+    c["stray"] = np.zeros(1, np.float32)
+    with pytest.raises(ContractError, match="extra=\\['stray'\\]"):
+        check_container("c", c, CONTRACT, DIMS)
+
+
+def test_check_container_rejects_wrong_dtype():
+    c = _good()
+    c["hist"] = c["hist"].astype(np.float64)
+    with pytest.raises(ContractError, match="dtype float64"):
+        check_container("c", c, CONTRACT, DIMS)
+
+
+def test_check_container_rejects_wrong_shape():
+    c = _good()
+    c["hist"] = np.zeros((6, 4), np.float32)  # D is 3
+    with pytest.raises(ContractError, match="shape"):
+        check_container("c", c, CONTRACT, DIMS)
+
+
+def test_carry_contract_layering():
+    base = set(contracts.carry_contract(fleet=False, drift=False))
+    fleet = set(contracts.carry_contract(fleet=True, drift=False))
+    drift = set(contracts.carry_contract(fleet=False, drift=True))
+    assert base == set(CARRY_CONTRACT)
+    assert fleet - base == set(contracts.FLEET_CARRY_CONTRACT)
+    assert drift - base == set(contracts.DRIFT_CARRY_CONTRACT)
+
+
+def test_lane_is_off_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_CONTRACTS", raising=False)
+    assert not contracts_enabled()
+    monkeypatch.setenv("REPRO_CONTRACTS", "1")
+    assert contracts_enabled()
+    monkeypatch.setenv("REPRO_CONTRACTS", "")
+    assert not contracts_enabled()
+
+
+def test_contracts_lane_engine_smoke(monkeypatch):
+    # with the lane on, _init_carry and the dcov constructors validate
+    # at trace time — a drifted field would raise before compilation
+    monkeypatch.setenv("REPRO_CONTRACTS", "1")
+    sp = jetson_like_space()
+    sim = jetson_like_simulator(sp)
+    lt, lp = sim.exact_all()
+    tg = RegimeTargets(
+        mode="dual",
+        tau_target=float(np.percentile(lt, 70)),
+        p_budget=float(np.percentile(lp, 60)),
+    )
+    (ep,) = run_coral_batch(sp, lt, lp, tg, seeds=(0,), iters=8, window=6)
+    assert len(ep.taus) == 8
+
+
+def test_dcor_state_checked_under_lane(monkeypatch):
+    monkeypatch.setenv("REPRO_CONTRACTS", "1")
+    state = dcor_state_init(window=4, c=5)
+    assert state["win"].shape == (4, 5)
+
+
+def test_check_twin_rejects_f32_landscape():
+    # TWIN_CONTRACT pins the oracle landscape to float64 — a float32
+    # twin would silently halve the measurement precision
+    n0 = 7
+    twin = SimpleNamespace(
+        space=SimpleNamespace(size=lambda: n0),
+        banned=np.zeros(n0, bool),
+        land_tau=np.ones(n0, np.float32),
+        land_p=np.ones(n0, np.float64),
+    )
+    with pytest.raises(ContractError, match="land_tau"):
+        check_twin(twin)
+    twin.land_tau = twin.land_tau.astype(np.float64)
+    check_twin(twin)

@@ -1,0 +1,221 @@
+"""Tier-1 tests for tools/repro_lint: every golden fixture trips its
+rule, the committed tree is clean, and the disable-pragma escape hatch
+works (and demands a reason). Stdlib + pytest only — the lint tool must
+stay runnable in the jax-less CI lint job.
+"""
+from pathlib import Path
+
+import pytest
+
+from tools.repro_lint.engine import REPO_ROOT, lint_paths
+from tools.repro_lint.importgraph import dead_modules
+
+FIXTURES = Path(__file__).parent / "lint_fixtures"
+
+
+def _codes(violations):
+    return {v.code for v in violations}
+
+
+@pytest.mark.parametrize(
+    "fixture, code, min_hits",
+    [
+        ("rl01_traced_branch.py", "RL01", 2),  # the `if` and the float()
+        ("rl02_donated_use.py", "RL02", 1),
+        ("rl03_nondeterminism.py", "RL03", 2),  # clock + unsorted dump
+        ("rl04_dtype.py", "RL04", 2),  # missing dtype + float64
+        ("rl05_interpret.py", "RL05", 3),  # default, env read, backend
+    ],
+)
+def test_rule_fires_on_golden_fixture(fixture, code, min_hits):
+    hits = lint_paths([str(FIXTURES / fixture)], select={code})
+    assert len(hits) >= min_hits, f"{code} missed its golden fixture"
+    assert _codes(hits) == {code}
+
+
+def test_rl06_fixture_tree():
+    tree = FIXTURES / "rl06_tree"
+    dead = dead_modules(tree / "src", "pkg", [tree / "app.py"])
+    assert [p.name for p in dead] == ["orphan.py"]
+
+
+def test_rl06_main_guard_is_entry_point():
+    # with no extra roots at all, cli.py (guarded) still survives
+    tree = FIXTURES / "rl06_tree"
+    dead = dead_modules(tree / "src", "pkg", [])
+    names = {p.name for p in dead}
+    assert "cli.py" not in names
+    assert "orphan.py" in names
+
+
+def test_repo_is_lint_clean():
+    assert lint_paths(["src", "tests", "benchmarks"]) == []
+
+
+def test_fixtures_excluded_from_directory_walks():
+    # linting tests/ must not surface the deliberate fixture violations
+    hits = lint_paths(["tests"])
+    assert not any("lint_fixtures" in v.path for v in hits)
+
+
+def test_committed_bench_writers_pass_rl03():
+    # satellite guarantee: every BENCH_*.json writer in benchmarks/ is
+    # deterministic by RL03's standard
+    assert lint_paths(["benchmarks"], select={"RL03"}) == []
+
+
+def test_disable_pragma_suppresses(tmp_path):
+    f = tmp_path / "snippet.py"
+    f.write_text(
+        "import jax\n\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x > 0:  # repro-lint: disable=RL01 — fixture reason\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert lint_paths([str(f)], select={"RL01", "RL00"}) == []
+
+
+def test_disable_pragma_on_preceding_comment_line(tmp_path):
+    f = tmp_path / "snippet.py"
+    f.write_text(
+        "import jax\n\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    # repro-lint: disable=RL01 — fixture reason\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert lint_paths([str(f)], select={"RL01", "RL00"}) == []
+
+
+def test_disable_pragma_requires_reason(tmp_path):
+    f = tmp_path / "snippet.py"
+    f.write_text(
+        "import jax\n\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x > 0:  # repro-lint: disable=RL01\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    hits = lint_paths([str(f)], select={"RL01", "RL00"})
+    # the reasonless pragma does NOT suppress, and is itself flagged
+    assert "RL00" in _codes(hits)
+    assert "RL01" in _codes(hits)
+
+
+def test_violation_render_is_ruff_style(tmp_path):
+    f = tmp_path / "snippet.py"
+    f.write_text(
+        "import jax\n\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    (v,) = lint_paths([str(f)], select={"RL01"})
+    text = v.render()
+    assert text.startswith(f"{v.path}:{v.line}:{v.col}: RL01 ")
+    assert "[fix: " in text
+
+
+def test_shape_metadata_is_not_tainted(tmp_path):
+    # x.shape / len() yield static Python values — branching on them
+    # inside jit is legitimate and must not fire RL01
+    f = tmp_path / "snippet.py"
+    f.write_text(
+        "import jax\n\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    n, d = x.shape\n"
+        "    if n > d:\n"
+        "        return x.T\n"
+        "    return x\n"
+    )
+    assert lint_paths([str(f)], select={"RL01"}) == []
+
+
+def test_static_argnames_are_exempt(tmp_path):
+    f = tmp_path / "snippet.py"
+    f.write_text(
+        "import functools\n"
+        "import jax\n\n\n"
+        '@functools.partial(jax.jit, static_argnames=("mode",))\n'
+        "def f(x, mode):\n"
+        '    if mode == "fast":\n'
+        "        return x\n"
+        "    return 2 * x\n"
+    )
+    assert lint_paths([str(f)], select={"RL01"}) == []
+
+
+def test_rl02_reassignment_clears_poison(tmp_path):
+    # the classic donation loop: params is rebound from the call result
+    f = tmp_path / "snippet.py"
+    f.write_text(
+        "import jax\n\n\n"
+        "def g(a, b):\n"
+        "    return a + b, b\n\n\n"
+        "step = jax.jit(g, donate_argnums=(0,))\n\n\n"
+        "def loop(params, grads):\n"
+        "    for _ in range(3):\n"
+        "        params, grads = step(params, grads)\n"
+        "    return params\n"
+    )
+    assert lint_paths([str(f)], select={"RL02"}) == []
+
+
+def test_rl03_sorted_json_is_clean(tmp_path):
+    f = tmp_path / "bench_snippet.py"
+    f.write_text(
+        "import json\n\n\n"
+        "def write(results, path):\n"
+        "    path.write_text(json.dumps(results, sort_keys=True))\n"
+    )
+    assert lint_paths([str(f)], select={"RL03"}) == []
+
+
+def test_emit_json_results_are_key_order_independent():
+    """Property behind RL03: the canonical writer's bytes cannot depend
+    on dict insertion order (hypothesis-driven where available)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    import json
+    import sys
+
+    sys.path.insert(0, str(REPO_ROOT / "benchmarks"))
+    try:
+        from common import emit_json
+    finally:
+        sys.path.pop(0)
+
+    @hypothesis.given(
+        st.dictionaries(
+            st.text(min_size=1, max_size=8),
+            st.one_of(st.integers(), st.floats(allow_nan=False), st.text(max_size=8)),
+            min_size=1,
+            max_size=8,
+        ),
+        st.randoms(),
+    )
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def check(payload, rng):
+        import tempfile
+        from pathlib import Path as P
+
+        keys = list(payload)
+        rng.shuffle(keys)
+        shuffled = {k: payload[k] for k in keys}
+        with tempfile.TemporaryDirectory() as d:
+            a, b = P(d) / "a.json", P(d) / "b.json"
+            emit_json(a, payload)
+            emit_json(b, shuffled)
+            assert a.read_bytes() == b.read_bytes()
+            # and the bytes round-trip
+            assert json.loads(a.read_text()) == payload
+
+    check()

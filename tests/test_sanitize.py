@@ -1,0 +1,107 @@
+"""Tier-1 tests for the runtime sanitizer lanes (core/sanitize.py):
+the checkify lane catches poisoned values end-to-end, flipping the
+REPRO_CHECKIFY flag never serves a stale executable, and the
+compile-count guard proves the static matrix and the fleet path each
+compile exactly once per engine spec.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sanitize
+from repro.core.episode import _compiled_runner, run_coral_batch
+from repro.core.evaluate import RegimeTargets
+from repro.core.space import jetson_like_space
+from repro.device import jetson_like_simulator
+from repro.experiments.fleet import run_fleet
+
+
+@pytest.fixture(scope="module")
+def cell():
+    sp = jetson_like_space()
+    sim = jetson_like_simulator(sp)
+    lt, lp = sim.exact_all()
+    tg = RegimeTargets(
+        mode="dual",
+        tau_target=float(np.percentile(lt, 70)),
+        p_budget=float(np.percentile(lp, 60)),
+    )
+    return sp, np.asarray(lt), np.asarray(lp), tg
+
+
+def test_checkify_lane_off_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    assert not sanitize.checkify_enabled()
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    assert sanitize.checkify_enabled()
+    monkeypatch.setenv("REPRO_CHECKIFY", "0")
+    assert not sanitize.checkify_enabled()
+
+
+def test_wrap_checkify_catches_nan():
+    checked = jax.jit(sanitize.wrap_checkify(jnp.log))
+    err, out = checked(jnp.array(-1.0))
+    with pytest.raises(Exception, match="nan"):
+        err.throw()
+    # clean input: throw() is a no-op and the value is intact
+    err, out = checked(jnp.array(1.0))
+    err.throw()
+    assert float(out) == 0.0
+
+
+def test_checkify_flag_is_part_of_the_cache_key(monkeypatch, cell):
+    sp, lt, lp, tg = cell
+    from repro.core.episode import EngineSpec
+
+    spec = EngineSpec(spaces=(sp,), iters=9, window=6)
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    plain = _compiled_runner(spec)
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    checked = _compiled_runner(spec)
+    assert checked is not plain
+    monkeypatch.delenv("REPRO_CHECKIFY", raising=False)
+    assert _compiled_runner(spec) is plain
+
+
+def test_checkify_engine_smoke_clean(monkeypatch, cell):
+    sp, lt, lp, tg = cell
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    (ep,) = run_coral_batch(sp, lt, lp, tg, seeds=(0,), iters=9, window=6)
+    assert np.isfinite(ep.taus).all() and np.isfinite(ep.rewards).all()
+
+
+def test_checkify_engine_raises_on_poisoned_landscape(monkeypatch, cell):
+    # a fully NaN-poisoned latency landscape must fail loudly, not
+    # silently propagate into the episode result
+    sp, lt, lp, tg = cell
+    monkeypatch.setenv("REPRO_CHECKIFY", "1")
+    bad = np.full_like(lt, np.nan)
+    with pytest.raises(Exception, match="nan generated"):
+        run_coral_batch(sp, bad, lp, tg, seeds=(0,), iters=9, window=6)
+
+
+def test_static_matrix_compiles_once(cell):
+    sp, lt, lp, tg = cell
+    # unique (iters, window, batch) so this spec is cold in-process no
+    # matter which tests ran before
+    kw = dict(iters=13, window=5)
+    with sanitize.count_compiles() as cold:
+        run_coral_batch(sp, lt, lp, tg, seeds=(0, 1), **kw)
+    assert cold.count("run") == 1, cold.names
+    # same spec, fresh data: zero executable builds
+    with sanitize.count_compiles() as warm:
+        run_coral_batch(sp, lt, lp, tg, seeds=(2, 3), **kw)
+    assert warm.total == 0, warm.names
+
+
+def test_fleet_path_compiles_once():
+    kw = dict(n_twins=4, iters=11, window=7)
+    with sanitize.count_compiles() as cold:
+        run_fleet(seed=0, **kw)
+    # exactly two executables: the cold pass (B=4) and the warm re-run
+    # of every warm_every-th twin (B=1) — distinct batch shapes
+    assert cold.count("run") == 2, cold.names
+    with sanitize.count_compiles() as warm:
+        run_fleet(seed=1, **kw)
+    assert warm.total == 0, warm.names

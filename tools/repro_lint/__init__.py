@@ -1,0 +1,23 @@
+"""repro-lint: JAX-aware static analysis for this repo's engine invariants.
+
+Stdlib-only (``ast`` + ``tokenize``) so the CI lint job can run it
+without installing jax. Rule catalog:
+
+  RL01  tracer leak — Python branching / float() / bool() / .item() on a
+        traced value inside a jit or lax.scan body
+  RL02  use of a donated buffer after a donate_argnums call
+  RL03  nondeterminism in benchmark ``results`` writers (wall-clock,
+        unseeded RNG, unsorted JSON serialization)
+  RL04  dtype discipline in the fixed-size engine state (un-annotated
+        array constructors, float64 promotion, carry fields missing from
+        core/contracts.py)
+  RL05  Pallas kernels deriving ``interpret=`` themselves instead of
+        routing through repro.kernels.runtime.default_interpret
+  RL06  dead module — unreachable in the import graph over src/repro
+
+Escape hatch: ``# repro-lint: disable=RLxx — reason`` on the flagged
+line (or the comment line directly above it). The reason is mandatory;
+a bare disable is itself an RL00 violation. See EXPERIMENTS.md §Static
+analysis for the full catalog and policy.
+"""
+from tools.repro_lint.engine import Violation, lint_paths  # noqa: F401

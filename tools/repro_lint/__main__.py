@@ -1,0 +1,50 @@
+"""CLI: ``python -m tools.repro_lint src tests benchmarks``.
+
+Output is ruff-style ``path:line:col: CODE message [fix: hint]`` so the
+CI lint job renders both linters identically. Exit 1 on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.repro_lint.engine import lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="JAX-aware static analysis for the repro engine "
+        "invariants (rules RL01-RL06; see EXPERIMENTS.md §Static analysis)",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument(
+        "--select",
+        help="comma-separated rule codes to run (default: all)",
+    )
+    ap.add_argument(
+        "--include-fixtures",
+        action="store_true",
+        help="lint tests/lint_fixtures/ too (the golden bad snippets)",
+    )
+    ns = ap.parse_args(argv)
+    select = (
+        {c.strip() for c in ns.select.split(",") if c.strip()}
+        if ns.select
+        else None
+    )
+    violations = lint_paths(
+        ns.paths, select=select, include_fixtures=ns.include_fixtures
+    )
+    for v in violations:
+        print(v.render())
+    n = len(violations)
+    if n:
+        print(f"repro-lint: {n} violation{'s' if n != 1 else ''}")
+        return 1
+    print("repro-lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

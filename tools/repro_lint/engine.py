@@ -1,0 +1,179 @@
+"""repro-lint driver: file discovery, disable-pragma handling, ruff-style
+output. Rules live in tools/repro_lint/rules.py; the import graph used
+by RL06 in tools/repro_lint/importgraph.py. Stdlib only — the CI lint
+job runs this without jax installed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set
+
+# repo root = parent of tools/ — the tool is path-independent of cwd
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+# `# repro-lint: disable=RL01` or `disable=RL01,RL04 — reason text`
+_PRAGMA = re.compile(
+    r"repro-lint:\s*disable=([A-Z0-9,\s]+?)(?:\s*(?:—|–|--|-)\s+(.+))?$"
+)
+
+# golden bad-snippet fixtures are excluded from directory walks (they
+# exist to violate rules) but still lintable when named explicitly
+FIXTURE_DIR = "lint_fixtures"
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str  # repo-relative posix path
+    line: int
+    col: int  # 1-based, ruff-style
+    code: str
+    message: str
+    hint: str = ""
+
+    def render(self) -> str:
+        text = f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+        if self.hint:
+            text += f" [fix: {self.hint}]"
+        return text
+
+
+class Module:
+    """One parsed source file plus its disable pragmas."""
+
+    def __init__(self, path: Path, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.tree = ast.parse(source, filename=relpath)
+        # line -> codes disabled on that line ("*" never used: codes only)
+        self.disables: Dict[int, Set[str]] = {}
+        self.pragma_errors: List[Violation] = []
+        self._scan_pragmas()
+
+    def _scan_pragmas(self) -> None:
+        # tokenize so pragmas inside string literals don't count
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(self.source).readline)
+            comments = [t for t in tokens if t.type == tokenize.COMMENT]
+        except tokenize.TokenizeError:
+            return
+        for tok in comments:
+            m = _PRAGMA.search(tok.string)
+            if not m:
+                continue
+            codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+            reason = (m.group(2) or "").strip()
+            line = tok.start[0]
+            if not reason:
+                self.pragma_errors.append(
+                    Violation(
+                        self.relpath,
+                        line,
+                        tok.start[1] + 1,
+                        "RL00",
+                        "disable pragma without a reason",
+                        'write "# repro-lint: disable=RLxx — why it is safe"',
+                    )
+                )
+                continue
+            self.disables.setdefault(line, set()).update(codes)
+            # a standalone comment line disables the next code line too
+            stripped = self.lines[line - 1].strip() if line <= len(self.lines) else ""
+            if stripped.startswith("#"):
+                self.disables.setdefault(line + 1, set()).update(codes)
+
+    @property
+    def lines(self) -> List[str]:
+        return self.source.splitlines()
+
+    def disabled(self, line: int, code: str) -> bool:
+        return code in self.disables.get(line, ())
+
+
+class Context:
+    """Everything a rule can see: the parsed modules plus the repo root
+    (RL06 walks src/repro and examples/ from here regardless of which
+    paths were passed on the command line)."""
+
+    def __init__(self, modules: List[Module], repo_root: Path = REPO_ROOT):
+        self.modules = modules
+        self.repo_root = repo_root
+
+    def module(self, relpath: str) -> Optional[Module]:
+        for m in self.modules:
+            if m.relpath == relpath:
+                return m
+        return None
+
+
+def _collect_files(paths: Iterable[str], include_fixtures: bool) -> List[Path]:
+    out: List[Path] = []
+    for raw in paths:
+        p = Path(raw)
+        if not p.is_absolute():
+            p = REPO_ROOT / p
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                parts = f.parts
+                if "__pycache__" in parts:
+                    continue
+                if FIXTURE_DIR in parts and not include_fixtures:
+                    continue
+                out.append(f)
+        elif p.suffix == ".py":
+            out.append(p)  # explicit file: fixtures included on purpose
+    return out
+
+
+def load_modules(
+    paths: Iterable[str], include_fixtures: bool = False
+) -> tuple[List[Module], List[Violation]]:
+    modules: List[Module] = []
+    errors: List[Violation] = []
+    for f in _collect_files(paths, include_fixtures):
+        try:
+            rel = f.resolve().relative_to(REPO_ROOT).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        try:
+            modules.append(Module(f, rel, f.read_text()))
+        except SyntaxError as e:
+            errors.append(
+                Violation(rel, e.lineno or 1, (e.offset or 0) + 1, "RL00",
+                          f"syntax error: {e.msg}")
+            )
+    return modules, errors
+
+
+def lint_paths(
+    paths: Iterable[str],
+    select: Optional[Set[str]] = None,
+    include_fixtures: bool = False,
+) -> List[Violation]:
+    """Run every rule (or the ``select`` subset) over ``paths`` and
+    return the surviving violations, sorted for stable output."""
+    from tools.repro_lint.rules import ALL_RULES
+
+    modules, errors = load_modules(paths, include_fixtures)
+    ctx = Context(modules)
+    raw: List[Violation] = list(errors)
+    by_rel = {m.relpath: m for m in modules}
+    for rule in ALL_RULES:
+        if select and rule.code not in select:
+            continue
+        raw.extend(rule.run(ctx))
+    out: List[Violation] = []
+    for v in raw:
+        mod = by_rel.get(v.path)
+        if v.code != "RL00" and mod is not None and mod.disabled(v.line, v.code):
+            continue
+        out.append(v)
+    for m in modules:
+        if select is None or "RL00" in select:
+            out.extend(m.pragma_errors)
+    return sorted(set(out), key=lambda v: (v.path, v.line, v.col, v.code))

@@ -1,0 +1,113 @@
+"""Import-graph reachability over a src package (rule RL06).
+
+Generic over the package name so the golden fixture tree under
+tests/lint_fixtures/rl06_tree/ exercises the same code path as the real
+``src/repro`` scan. Stdlib only.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Set
+
+
+def package_modules(src_root: Path, package: str) -> Dict[str, Path]:
+    """dotted module name -> file for every .py under src_root/package."""
+    out: Dict[str, Path] = {}
+    pkg_dir = src_root / package
+    for f in sorted(pkg_dir.rglob("*.py")):
+        if "__pycache__" in f.parts:
+            continue
+        rel = f.relative_to(src_root)
+        if f.name == "__init__.py":
+            name = ".".join(rel.parent.parts)
+        else:
+            name = ".".join(rel.with_suffix("").parts)
+        out[name] = f
+    return out
+
+
+def _module_edges(path: Path, modules: Dict[str, Path], package: str) -> Set[str]:
+    """Modules (by dotted name) that importing ``path`` reaches."""
+    try:
+        tree = ast.parse(path.read_text())
+    except (SyntaxError, OSError):
+        return set()
+    edges: Set[str] = set()
+
+    def add(name: str) -> None:
+        # importing a.b.c executes a/__init__ and a.b/__init__ too
+        parts = name.split(".")
+        for i in range(1, len(parts) + 1):
+            prefix = ".".join(parts[:i])
+            if prefix in modules:
+                edges.add(prefix)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == package:
+                    add(alias.name)
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            mod = node.module or ""
+            if mod.split(".")[0] != package:
+                continue
+            add(mod)
+            for alias in node.names:
+                # `from pkg.sub import name` where name is a submodule
+                cand = f"{mod}.{alias.name}"
+                if cand in modules:
+                    add(cand)
+    return edges
+
+
+def has_main_guard(path: Path) -> bool:
+    try:
+        tree = ast.parse(path.read_text())
+    except (SyntaxError, OSError):
+        return False
+    for node in tree.body:
+        if (
+            isinstance(node, ast.If)
+            and isinstance(node.test, ast.Compare)
+            and isinstance(node.test.left, ast.Name)
+            and node.test.left.id == "__name__"
+        ):
+            return True
+    return False
+
+
+def dead_modules(
+    src_root: Path, package: str, extra_roots: Iterable[Path]
+) -> List[Path]:
+    """Package modules unreachable from any root. Roots: the
+    ``extra_roots`` files (tests/benchmarks/examples) plus every package
+    module with a ``__main__`` guard (a script is its own entry point).
+    Package ``__init__`` files are reachable whenever any module below
+    them is (importing the module executes the ancestor inits)."""
+    modules = package_modules(src_root, package)
+    reached: Set[str] = set()
+    frontier: List[str] = []
+
+    def mark(name: str) -> None:
+        if name not in reached and name in modules:
+            reached.add(name)
+            frontier.append(name)
+            # ancestor packages execute on import
+            parts = name.split(".")
+            for i in range(1, len(parts)):
+                mark(".".join(parts[:i]))
+
+    for root in extra_roots:
+        for name in _module_edges(Path(root), modules, package):
+            mark(name)
+    for name, path in modules.items():
+        if has_main_guard(path):
+            mark(name)
+    while frontier:
+        name = frontier.pop()
+        for dep in _module_edges(modules[name], modules, package):
+            mark(dep)
+    return sorted(
+        path for name, path in modules.items() if name not in reached
+    )

@@ -1,0 +1,724 @@
+"""The RL01–RL06 rule implementations.
+
+Every rule is deliberately scoped (see each rule's ``in_scope``) to the
+files where its invariant is load-bearing, because repo-specific
+heuristics beat generic ones: RL04's dtype discipline matters in the
+fixed-size engine state, not in a matplotlib helper. Paths under
+tests/lint_fixtures/ are always in scope — that is where the golden
+violating snippets live.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Sequence, Set, Tuple
+
+from tools.repro_lint.engine import FIXTURE_DIR, Context, Module, Violation
+
+
+def _is_fixture(relpath: str) -> bool:
+    return FIXTURE_DIR in relpath.split("/")
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.lax.scan' for Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+# reading these attributes of a tracer yields static Python metadata, so
+# values derived from them are branch-safe inside traced code
+_STATIC_ATTRS = ("shape", "ndim", "dtype", "size")
+
+
+def _value_names(node: ast.AST) -> Set[str]:
+    """Names whose traced *value* (not static metadata) flows into
+    ``node``: like ``_names_in`` but stops at .shape/.ndim/.dtype/.size
+    attribute reads and len() calls."""
+    out: Set[str] = set()
+
+    def visit(n: ast.AST) -> None:
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            return
+        if (
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Name)
+            and n.func.id == "len"
+        ):
+            return
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        for child in ast.iter_child_nodes(n):
+            visit(child)
+
+    visit(node)
+    return out
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _str_elts(node: Optional[ast.expr]) -> Set[str]:
+    """String elements of a tuple/list/single-string literal."""
+    out: Set[str] = set()
+    if node is None:
+        return out
+    elts: Sequence[ast.expr]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        elts = node.elts
+    else:
+        elts = [node]
+    for e in elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, str):
+            out.add(e.value)
+    return out
+
+
+def _int_elts(node: Optional[ast.expr]) -> List[int]:
+    out: List[int] = []
+    if node is None:
+        return out
+    elts: Sequence[ast.expr]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        elts = node.elts
+    else:
+        elts = [node]
+    for e in elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+            out.append(e.value)
+    return out
+
+
+def _jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """The jax.jit(...) Call if ``node`` is one (incl. functools.partial
+    wrapping), else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    callee = _dotted(node.func)
+    if callee in ("jax.jit", "jit"):
+        return node
+    if callee in ("functools.partial", "partial") and node.args:
+        inner = _dotted(node.args[0])
+        if inner in ("jax.jit", "jit"):
+            return node
+    return None
+
+
+class Rule:
+    code = "RL00"
+    name = "base"
+
+    def in_scope(self, relpath: str) -> bool:
+        return True
+
+    def run(self, ctx: Context) -> Iterator[Violation]:
+        for mod in ctx.modules:
+            if self.in_scope(mod.relpath) or _is_fixture(mod.relpath):
+                yield from self.check(mod, ctx)
+
+    def check(self, mod: Module, ctx: Context) -> Iterator[Violation]:
+        return iter(())
+
+
+# --------------------------------------------------------------- RL01
+class TracedBranchRule(Rule):
+    """Python control flow / host conversions on traced values.
+
+    A function body is "traced" when the function is jit-decorated or
+    passed by name to jax.jit / jax.vmap / jax.lax.scan / jax.lax.cond
+    / checkify.checkify, or defined inside a traced function. Within a
+    traced body, parameters (minus jit static_argnames/static_argnums)
+    seed a taint set that propagates through assignments; `if`/`while`
+    tests, float()/int()/bool() calls and .item() on tainted names are
+    tracer leaks: they force a concrete value at trace time (works once,
+    then produces a ConcretizationTypeError or — worse — silently bakes
+    in the first traced value).
+    """
+
+    code = "RL01"
+    name = "traced-branch"
+
+    _TRACING_CALLEES = (
+        "jax.jit", "jit",
+        "jax.vmap", "vmap",
+        "jax.lax.scan", "lax.scan",
+        "jax.lax.cond", "lax.cond",
+        "jax.lax.while_loop", "lax.while_loop",
+        "jax.lax.fori_loop", "lax.fori_loop",
+        "checkify.checkify",
+    )
+
+    def check(self, mod: Module, ctx: Context) -> Iterator[Violation]:
+        # pass 1: function names handed to tracing call sites
+        handed: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and _dotted(node.func) in self._TRACING_CALLEES:
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        handed.add(arg.id)
+                    if isinstance(arg, ast.Lambda):
+                        yield from self._check_fn(mod, arg, set())
+        # pass 2: decorated or handed-off function defs
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            static: Set[str] = set()
+            traced = node.name in handed
+            for deco in node.decorator_list:
+                jc = _jit_call(deco)
+                if jc is not None:
+                    traced = True
+                    static |= self._static_params(node, jc)
+                elif _dotted(deco) in ("jax.jit", "jit"):
+                    traced = True
+            if traced:
+                yield from self._check_fn(mod, node, static)
+
+    @staticmethod
+    def _static_params(fn: ast.FunctionDef, jit_call: ast.Call) -> Set[str]:
+        static = _str_elts(_kw(jit_call, "static_argnames"))
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        for i in _int_elts(_kw(jit_call, "static_argnums")):
+            if 0 <= i < len(params):
+                static.add(params[i])
+        return static
+
+    def _check_fn(self, mod, fn, static: Set[str]) -> Iterator[Violation]:
+        if isinstance(fn, ast.Lambda):
+            return  # lambdas can't contain statements
+        args = fn.args
+        params = [
+            a.arg
+            for a in args.posonlyargs + args.args + args.kwonlyargs
+            if a.arg not in static
+        ]
+        tainted = set(params)
+        # one forward propagation pass: x = f(tainted) taints x unless
+        # only static metadata (.shape etc.) of the tainted value flows in
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and _value_names(node.value) & tainted:
+                for tgt in node.targets:
+                    tainted |= {
+                        n.id
+                        for n in ast.walk(tgt)
+                        if isinstance(n, ast.Name)
+                    }
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                hot = self._traced_test(node.test, tainted, static)
+                if hot:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield Violation(
+                        mod.relpath, node.lineno, node.col_offset + 1,
+                        self.code,
+                        f"Python `{kind}` on traced value(s) {hot} inside a "
+                        "traced function",
+                        "use jnp.where / lax.cond / lax.select",
+                    )
+            if isinstance(node, ast.Call):
+                callee = _dotted(node.func)
+                if callee in ("float", "int", "bool") and node.args:
+                    if _value_names(node.args[0]) & tainted:
+                        yield Violation(
+                            mod.relpath, node.lineno, node.col_offset + 1,
+                            self.code,
+                            f"`{callee}()` forces a traced value to a Python "
+                            "scalar inside a traced function",
+                            "keep it an array; convert after jax.device_get",
+                        )
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                    and _value_names(node.func.value) & tainted
+                ):
+                    yield Violation(
+                        mod.relpath, node.lineno, node.col_offset + 1,
+                        self.code,
+                        "`.item()` on a traced value inside a traced function",
+                        "keep it an array; convert after jax.device_get",
+                    )
+
+    @staticmethod
+    def _traced_test(test: ast.expr, tainted: Set[str], static: Set[str]):
+        # `x is None` / `x is not None` dispatches on Python structure
+        # (static at trace time), not the traced value — allowed.
+        if isinstance(test, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+        ):
+            return set()
+        names = _value_names(test)
+        return sorted(names & tainted - static)
+
+
+# --------------------------------------------------------------- RL02
+class DonatedUseRule(Rule):
+    """Use of a donated buffer after the donating call.
+
+    Detects both shapes the repo uses: a direct
+    ``j = jax.jit(f, donate_argnums=...)`` followed by ``j(a, b)``, and
+    the engine's donating-factory pattern — a function that builds the
+    donating jit and returns a lambda closing over it
+    (``core/episode.py::_compiled_runner``) — whose call sites look like
+    ``_compiled_runner(spec)(batch, tables)``. After the donating call,
+    loads of the donated argument names are flagged until the name is
+    reassigned (the classic ``params, _ = step(params, ...)`` loop stays
+    clean because the call statement itself stores the name).
+    """
+
+    code = "RL02"
+    name = "donated-use"
+
+    def check(self, mod: Module, ctx: Context) -> Iterator[Violation]:
+        donating_names, factories = self._donators(mod.tree)
+        for fn in ast.walk(mod.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_body(mod, fn, donating_names, factories)
+
+    @staticmethod
+    def _donators(tree: ast.Module):
+        """(name -> donated positions) for jitted callables, and
+        (factory function name -> donated positions of the returned
+        callable)."""
+        donating: dict = {}
+        factories: dict = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                jc = _jit_call(node.value)
+                tgt = node.targets[0]
+                if jc is not None and isinstance(tgt, ast.Name):
+                    pos = _int_elts(_kw(jc, "donate_argnums"))
+                    if pos:
+                        donating[tgt.id] = tuple(pos)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            local: dict = {}
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assign) and len(sub.targets) == 1:
+                    jc = _jit_call(sub.value)
+                    if jc is not None and isinstance(sub.targets[0], ast.Name):
+                        pos = _int_elts(_kw(jc, "donate_argnums"))
+                        if pos:
+                            local[sub.targets[0].id] = tuple(pos)
+            if not local:
+                continue
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Return) or sub.value is None:
+                    continue
+                val = sub.value
+                if isinstance(val, ast.Name) and val.id in local:
+                    factories[node.name] = local[val.id]
+                if isinstance(val, ast.Lambda) and isinstance(val.body, ast.Call):
+                    inner = val.body
+                    if (
+                        isinstance(inner.func, ast.Name)
+                        and inner.func.id in local
+                    ):
+                        lam_params = [a.arg for a in val.args.args]
+                        outer: List[int] = []
+                        for i in local[inner.func.id]:
+                            if i < len(inner.args) and isinstance(
+                                inner.args[i], ast.Name
+                            ):
+                                nm = inner.args[i].id
+                                if nm in lam_params:
+                                    outer.append(lam_params.index(nm))
+                        if outer:
+                            factories[node.name] = tuple(outer)
+        return donating, factories
+
+    def _check_body(self, mod, fn, donating, factories) -> Iterator[Violation]:
+        stmts = list(ast.walk(fn))
+        # donating calls in this body: (stmt lineno, donated Name args)
+        poisoned: dict = {}  # name -> lineno of donation
+        events: List[Tuple[int, str, str]] = []  # (line, kind, name)
+        for node in stmts:
+            if not isinstance(node, ast.Call):
+                continue
+            pos: Tuple[int, ...] = ()
+            if isinstance(node.func, ast.Name) and node.func.id in donating:
+                pos = donating[node.func.id]
+            elif (
+                isinstance(node.func, ast.Call)
+                and isinstance(node.func.func, ast.Name)
+                and node.func.func.id in factories
+            ):
+                pos = factories[node.func.func.id]
+            for i in pos:
+                if i < len(node.args) and isinstance(node.args[i], ast.Name):
+                    events.append((node.lineno, "donate", node.args[i].id))
+        if not events:
+            return
+        for node in stmts:
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            events.append((node.lineno, "store", n.id))
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                if isinstance(node.target, ast.Name):
+                    events.append((node.lineno, "store", node.target.id))
+            elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                events.append((node.lineno, "load", node.id))
+        # source order; at equal line: loads < donate/store (a statement
+        # reads its operands before the call donates / the target binds)
+        order = {"load": 0, "donate": 1, "store": 2}
+        events.sort(key=lambda e: (e[0], order[e[1]]))
+        for line, kind, name in events:
+            if kind == "donate":
+                poisoned[name] = line
+            elif kind == "store":
+                poisoned.pop(name, None)
+            elif kind == "load" and name in poisoned:
+                yield Violation(
+                    mod.relpath, line, 1, self.code,
+                    f"`{name}` was donated to a jit call on line "
+                    f"{poisoned[name]} and is read afterwards (its buffer "
+                    "may be aliased/invalid)",
+                    "reassign from the call result or drop donate_argnums",
+                )
+                poisoned.pop(name)
+
+
+# --------------------------------------------------------------- RL03
+class NondeterminismRule(Rule):
+    """Nondeterminism in benchmark ``results`` writers.
+
+    The repo's contract (EXPERIMENTS.md): the ``results`` block of every
+    BENCH_*.json is byte-identical across runs; only the ``engine``
+    telemetry block may vary. Wall-clock reads other than
+    time.perf_counter (which the telemetry path uses), unseeded RNG, and
+    unsorted JSON serialization in the bench writers break that.
+    """
+
+    code = "RL03"
+    name = "bench-nondeterminism"
+
+    _CLOCKS = (
+        "time.time", "time.time_ns", "datetime.now", "datetime.utcnow",
+        "datetime.datetime.now", "datetime.datetime.utcnow", "uuid.uuid4",
+    )
+    _UNSEEDED = (
+        "np.random.rand", "np.random.randn", "np.random.randint",
+        "np.random.random", "np.random.normal", "np.random.uniform",
+        "np.random.choice", "np.random.shuffle", "np.random.permutation",
+        "numpy.random.rand", "numpy.random.randn",
+        "random.random", "random.randint", "random.choice",
+        "random.shuffle", "random.uniform",
+    )
+
+    def in_scope(self, relpath: str) -> bool:
+        return relpath.startswith("benchmarks/") or relpath.endswith(
+            "experiments/schema.py"
+        )
+
+    def check(self, mod: Module, ctx: Context) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            if callee in self._CLOCKS:
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    f"wall-clock/nondeterministic source `{callee}` in a "
+                    "benchmark results path",
+                    "time.perf_counter for telemetry; keep it out of "
+                    "`results` blocks",
+                )
+            elif callee in self._UNSEEDED:
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    f"unseeded RNG `{callee}` makes the results block "
+                    "run-dependent",
+                    "np.random.default_rng(seed) with an explicit seed",
+                )
+            elif callee.endswith("default_rng") and not node.args:
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    "default_rng() without a seed makes the results block "
+                    "run-dependent",
+                    "pass an explicit seed",
+                )
+            elif callee in ("json.dump", "json.dumps"):
+                sk = _kw(node, "sort_keys")
+                if not (isinstance(sk, ast.Constant) and sk.value is True):
+                    yield Violation(
+                        mod.relpath, node.lineno, node.col_offset + 1,
+                        self.code,
+                        f"`{callee}` without sort_keys=True is dict-order "
+                        "dependent",
+                        "sort_keys=True (or route through "
+                        "benchmarks.common.emit_json)",
+                    )
+
+
+# --------------------------------------------------------------- RL04
+class DtypeDisciplineRule(Rule):
+    """Dtype discipline in the fixed-size engine state.
+
+    The episode carry and the incremental dCor state are fixed-size
+    f32/i32/bool containers (EXPERIMENTS.md §Episode engine); an
+    un-annotated jnp constructor or a float64 leak silently doubles the
+    state or — under JAX_ENABLE_X64 — changes results. Also cross-checks
+    the carry fields written in ``_init_carry`` against the contract
+    tables in core/contracts.py so the static rule and the
+    REPRO_CONTRACTS=1 runtime lane can never drift.
+    """
+
+    code = "RL04"
+    name = "dtype-discipline"
+
+    _ZONE = ("core/episode.py", "core/dcov.py")
+    # constructor -> position where dtype may be passed positionally
+    _CONSTRUCTORS = {
+        "jnp.zeros": 1, "jnp.ones": 1, "jnp.empty": 1, "jnp.eye": 2,
+        "jnp.full": 2, "jnp.arange": None, "jnp.linspace": None,
+    }
+    _F64 = ("jnp.float64", "np.float64", "numpy.float64")
+
+    def in_scope(self, relpath: str) -> bool:
+        return relpath.endswith(self._ZONE)
+
+    @classmethod
+    def _annotated(cls, node: ast.Call, callee: str) -> bool:
+        if _kw(node, "dtype") is not None:
+            return True
+        pos = cls._CONSTRUCTORS[callee]
+        return pos is not None and len(node.args) > pos
+
+    def check(self, mod: Module, ctx: Context) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                callee = _dotted(node.func)
+                if callee in self._CONSTRUCTORS and not self._annotated(
+                    node, callee
+                ):
+                    yield Violation(
+                        mod.relpath, node.lineno, node.col_offset + 1,
+                        self.code,
+                        f"`{callee}` without an explicit dtype in the "
+                        "fixed-size engine state",
+                        "annotate dtype=jnp.float32 / jnp.int32",
+                    )
+            if isinstance(node, ast.Attribute) and _dotted(node) in self._F64:
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    "explicit float64 in the engine state (implicit "
+                    "promotion doubles the fixed-size carry)",
+                    "engine state is float32; convert at the boundary",
+                )
+        if mod.relpath.endswith("core/episode.py") and not _is_fixture(mod.relpath):
+            yield from self._contract_cross_check(mod, ctx)
+
+    def _contract_cross_check(self, mod: Module, ctx: Context):
+        contracts = ctx.module("src/repro/core/contracts.py")
+        if contracts is None:
+            yield Violation(
+                mod.relpath, 1, 1, self.code,
+                "core/contracts.py not found — the carry has no "
+                "shape/dtype contract table",
+                "add core/contracts.py (REPRO_CONTRACTS=1 lane)",
+            )
+            return
+        table: Set[str] = set()
+        for node in ast.walk(contracts.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt, val = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                tgt, val = node.target, node.value
+            else:
+                continue
+            if (
+                isinstance(tgt, ast.Name)
+                and tgt.id.endswith("_CONTRACT")
+                and isinstance(val, ast.Dict)
+            ):
+                for k in val.keys:
+                    if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                        table.add(k.value)
+        init = None
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.FunctionDef) and node.name == "_init_carry":
+                init = node
+                break
+        if init is None:
+            return
+        for node in ast.walk(init):
+            keys: List[Tuple[str, int, int]] = []
+            if isinstance(node, ast.Dict):
+                for k in node.keys:
+                    if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                        keys.append((k.value, k.lineno, k.col_offset))
+            if (
+                isinstance(node, ast.Assign)
+                and isinstance(node.targets[0], ast.Subscript)
+                and isinstance(node.targets[0].slice, ast.Constant)
+                and isinstance(node.targets[0].slice.value, str)
+            ):
+                s = node.targets[0].slice
+                keys.append((s.value, s.lineno, s.col_offset))
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "update"
+            ):
+                for k in node.keywords:
+                    if k.arg is not None:
+                        keys.append((k.arg, k.value.lineno, k.value.col_offset))
+            for key, line, col in keys:
+                if key not in table:
+                    yield Violation(
+                        mod.relpath, line, col + 1, self.code,
+                        f"carry field '{key}' is not covered by any "
+                        "*_CONTRACT table in core/contracts.py",
+                        "add it to the matching contract table",
+                    )
+
+
+# --------------------------------------------------------------- RL05
+class InterpretRoutingRule(Rule):
+    """Pallas kernels must route interpret-mode through
+    repro.kernels.runtime.default_interpret (the harness-side view is
+    benchmarks.common.pallas_interpret — same parser underneath), never
+    derive it locally: a hardcoded ``interpret=True`` default silently
+    pins a kernel to the interpreter on TPU; a local env read forks the
+    PALLAS_INTERPRET parsing."""
+
+    code = "RL05"
+    name = "interpret-routing"
+
+    _CANONICAL = "src/repro/kernels/runtime.py"
+
+    def in_scope(self, relpath: str) -> bool:
+        return (
+            relpath.startswith("src/repro/kernels/")
+            and relpath != self._CANONICAL
+        )
+
+    def check(self, mod: Module, ctx: Context) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.Lambda)):
+                yield from self._check_defaults(mod, node)
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            val = _kw(node, "interpret")
+            if (
+                callee.endswith("pallas_call")
+                and isinstance(val, ast.Constant)
+                and isinstance(val.value, bool)
+            ):
+                yield Violation(
+                    mod.relpath, val.lineno, val.col_offset + 1, self.code,
+                    f"pallas_call(interpret={val.value}) hardcodes the "
+                    "execution mode",
+                    "thread an interpret param defaulting to "
+                    "repro.kernels.runtime.default_interpret()",
+                )
+            if callee in ("jax.default_backend", "default_backend"):
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    "kernel derives interpret mode from the backend itself",
+                    "call repro.kernels.runtime.default_interpret()",
+                )
+            if (
+                callee in ("os.environ.get", "os.getenv")
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value == "PALLAS_INTERPRET"
+            ):
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    "kernel parses PALLAS_INTERPRET itself",
+                    "route through repro.kernels.runtime.default_interpret "
+                    "(single parser: repro.envflags)",
+                )
+
+    def _check_defaults(self, mod, fn) -> Iterator[Violation]:
+        args = fn.args
+        named = args.posonlyargs + args.args
+        defaults = args.defaults
+        for a, d in zip(named[len(named) - len(defaults):], defaults):
+            if (
+                a.arg == "interpret"
+                and isinstance(d, ast.Constant)
+                and isinstance(d.value, bool)
+            ):
+                yield Violation(
+                    mod.relpath, d.lineno, d.col_offset + 1, self.code,
+                    f"`interpret={d.value}` default pins the execution mode",
+                    "default to None and resolve via "
+                    "repro.kernels.runtime.default_interpret()",
+                )
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if (
+                a.arg == "interpret"
+                and isinstance(d, ast.Constant)
+                and isinstance(d.value, bool)
+            ):
+                yield Violation(
+                    mod.relpath, d.lineno, d.col_offset + 1, self.code,
+                    f"`interpret={d.value}` default pins the execution mode",
+                    "default to None and resolve via "
+                    "repro.kernels.runtime.default_interpret()",
+                )
+
+
+# --------------------------------------------------------------- RL06
+class DeadModuleRule(Rule):
+    """Dead/unreachable module detection over src/repro.
+
+    Roots: every linted file outside src/ (tests, benchmarks), every
+    examples/*.py (examples are entry points even when not linted), and
+    every src module with an ``if __name__ == "__main__"`` guard. A
+    src/repro module no root can reach through the import graph is dead
+    code.
+    """
+
+    code = "RL06"
+    name = "dead-module"
+
+    def run(self, ctx: Context) -> Iterator[Violation]:
+        from tools.repro_lint.importgraph import dead_modules
+
+        src_root = ctx.repo_root / "src"
+        if not (src_root / "repro").is_dir():
+            return
+        extra_roots = [
+            m.path for m in ctx.modules
+            if not m.relpath.startswith("src/") and not _is_fixture(m.relpath)
+        ]
+        examples = ctx.repo_root / "examples"
+        if examples.is_dir():
+            extra_roots.extend(sorted(examples.rglob("*.py")))
+        for path in dead_modules(src_root, "repro", extra_roots):
+            rel = path.relative_to(ctx.repo_root).as_posix()
+            yield Violation(
+                rel, 1, 1, self.code,
+                "module is unreachable from every entry point (tests, "
+                "benchmarks, examples, __main__ guards)",
+                "delete it or import it from a live module",
+            )
+
+
+ALL_RULES: Tuple[Rule, ...] = (
+    TracedBranchRule(),
+    DonatedUseRule(),
+    NondeterminismRule(),
+    DtypeDisciplineRule(),
+    InterpretRoutingRule(),
+    DeadModuleRule(),
+)
