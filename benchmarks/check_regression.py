@@ -17,6 +17,10 @@ Fails (exit 1) on
     cells, ``adaptive.score_floor`` for drift cells);
   - any power-budget violation in dual-constraint cells, or a drift cell
     whose adaptive-static separation collapses below 0.3;
+  - an offload cell (schema v4 ``offload_cells``) scoring below the
+    0.85 joint-oracle gate, recording a true power violation, or whose
+    presets / no-offload ablation became feasible — the calibrated
+    demand must keep the placement knob necessary;
   - a kernel record whose max |err| vs the reference implementation grew
     past 10x its baseline, with an absolute floor of 1e-5 for near-exact
     baselines (interpret-mode wall time is never gated). Kernel records
@@ -131,6 +135,10 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
     for c in fresh.get("drift_cells", ()):
         key = (c["device"], c["model"], c["workload"], c["regime"])
         fresh_cells[key] = c["adaptive"]["final_score"]
+    # offload cells gate on the joint-space CORAL score
+    for c in fresh.get("offload_cells", ()):
+        key = (c["device"], c["model"], c["workload"], c["regime"])
+        fresh_cells[key] = c["coral"]["score"]
     compared = 0
     for key, floor in floors.items():
         score = fresh_cells.get(key)
@@ -163,6 +171,32 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
                 f"drift adaptive-static separation {sep:.3f} < "
                 f"{DRIFT_SEPARATION}"
             )
+    # Offload regimes (EXPERIMENTS.md §Offload): the joint edge↔pod
+    # search must stay efficient AND the scenario must keep its point —
+    # zero true power violations, and zero feasible presets/ablations
+    # (if a φ=0 row or a static preset becomes feasible, the calibrated
+    # demand no longer forces the placement knob).
+    from repro.experiments.matrix import OFFLOAD_CORAL_GATE
+
+    for c in fresh.get("offload_cells", ()):
+        if c["coral"]["score"] < OFFLOAD_CORAL_GATE:
+            errors.append(
+                f"matrix:{c['device']}/{c['model']}/{c['regime']}: "
+                f"offload CORAL score {c['coral']['score']:.3f} < "
+                f"{OFFLOAD_CORAL_GATE}"
+            )
+    fsum = fresh["summary"]
+    if fsum.get("offload_power_violations"):
+        errors.append(
+            f"matrix: {fsum['offload_power_violations']} power-budget "
+            "violations in offload cells"
+        )
+    if fsum.get("offload_feasible_baselines"):
+        errors.append(
+            f"matrix: {fsum['offload_feasible_baselines']} offload "
+            "presets/ablations were feasible (calibrated demand must keep "
+            "the un-offloaded edge and the static presets infeasible)"
+        )
     # Episode-engine wall-clock: fresh full-grid speedups must hold 75%
     # of max(baseline, acceptance floor) — the floor keeps the gate
     # meaningful when a baseline was recorded on a noisy runner, the

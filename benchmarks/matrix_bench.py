@@ -4,7 +4,10 @@ Runs CORAL + all baselines through every cell (EXPERIMENTS.md §Scenario
 matrix), writes the schema-validated BENCH_matrix.json plus the
 BENCH_matrix.md summary table, and enforces the acceptance gates:
 every single-target cell ≥ 0.9 normalized-vs-oracle, zero power-budget
-violations in dual-constraint cells, and (full runs) the compiled
+violations in dual-constraint cells, every edge↔pod offload cell ≥ 0.85
+of the batched joint oracle with zero power violations and zero
+feasible presets/ablations (EXPERIMENTS.md §Offload), and (full runs)
+the compiled
 episode engine ≥ 10×/5× over the scalar episode loops on the
 static/drift grids — both layers measured best-of-N on identical
 inputs, compile time reported separately (``episode_engine.compile_s``;
@@ -133,6 +136,7 @@ def bench_matrix_suite():
         DRIFT_ADAPTIVE_GATE,
         DRIFT_SEPARATION,
         DRIFT_STATIC_CEILING,
+        OFFLOAD_CORAL_GATE,
         REGIMES,
         enumerate_cells,
         markdown_report,
@@ -142,20 +146,25 @@ def bench_matrix_suite():
     from repro.experiments.scenarios import (
         FULL_MATRIX_WORKLOADS,
         MATRIX_DRIFT_CELLS,
+        MATRIX_OFFLOAD_CELLS,
         QUICK_DRIFT_CELLS,
+        QUICK_OFFLOAD_CELLS,
     )
 
     QUICK = quick()
-    # QUICK trims the workload axis and the drift grid (one cell per
-    # dynamic regime) — iters/seeds stay identical, so the cells both
-    # modes run produce identical scores and the committed full-grid
-    # baseline gates the CI smoke run cell-for-cell.
+    # QUICK trims the workload axis, the drift grid (one cell per
+    # dynamic regime) and the offload grid (one cell per network class)
+    # — iters/seeds stay identical, so the cells both modes run produce
+    # identical scores and the committed full-grid baseline gates the CI
+    # smoke run cell-for-cell.
     if QUICK:
         cells = enumerate_cells() + list(QUICK_DRIFT_CELLS)
+        offload_cells = QUICK_OFFLOAD_CELLS
     else:
         cells = enumerate_cells(workloads=FULL_MATRIX_WORKLOADS) + list(
             MATRIX_DRIFT_CELLS
         )
+        offload_cells = MATRIX_OFFLOAD_CELLS
     regenerate = ("QUICK=1 " if QUICK else "") + (
         "PYTHONPATH=src python -m benchmarks.matrix_bench"
     )
@@ -164,7 +173,12 @@ def bench_matrix_suite():
     engine_probe = bench_episode_engine(cells, reps=2 if QUICK else 4)
     t0 = time.perf_counter()
     record = run_matrix(
-        cells, iters=10, seeds=(0, 1, 2), regenerate=regenerate, quick=QUICK
+        cells,
+        iters=10,
+        seeds=(0, 1, 2),
+        regenerate=regenerate,
+        quick=QUICK,
+        offload_cells=offload_cells,
     )
     elapsed_us = (time.perf_counter() - t0) * 1e6
     record["episode_engine"] = engine_probe
@@ -208,6 +222,14 @@ def bench_matrix_suite():
             f"static={c['static']['final_score']:.3f} "
             f"recovery={'—' if rec is None else f'{rec:.1f}'}",
         )
+    for c in record["offload_cells"]:
+        row(
+            f"offload_{c['regime']}_{c['device']}_{c['model']}",
+            0.0,
+            f"coral={c['coral']['score']:.3f} "
+            f"demand={c['offload']['demand']:.1f} "
+            f"edge_max={c['offload']['edge_only_max']:.1f}",
+        )
 
     failures = []
     for c in record["cells"]:
@@ -245,6 +267,29 @@ def bench_matrix_suite():
                 f"drift cell {name}: adaptive-static separation "
                 f"{a - st:.3f} < {DRIFT_SEPARATION}"
             )
+    # Offload-regime acceptance (EXPERIMENTS.md §Offload): CORAL must
+    # hold ≥ OFFLOAD_CORAL_GATE of the batched joint-space oracle on
+    # every cell with zero true power violations, while every static
+    # preset and the no-offload ablation stays infeasible — the offload
+    # knob must be demonstrably necessary, not merely available.
+    for c in record["offload_cells"]:
+        name = f"{c['device']}/{c['model']}/{c['regime']}"
+        if c["coral"]["score"] < OFFLOAD_CORAL_GATE:
+            failures.append(
+                f"offload cell {name}: CORAL joint-space score "
+                f"{c['coral']['score']:.3f} < {OFFLOAD_CORAL_GATE}"
+            )
+    if s.get("offload_power_violations"):
+        failures.append(
+            f"{s['offload_power_violations']} power-budget violations in "
+            "offload cells (gate: 0)"
+        )
+    if s.get("offload_feasible_baselines"):
+        failures.append(
+            f"{s['offload_feasible_baselines']} offload presets/ablations "
+            "were feasible (gate: 0 — demand must break the un-offloaded "
+            "edge and the power cap must break the all-hi preset)"
+        )
     # Episode-engine wall-clock acceptance (full grid only: the trimmed
     # QUICK batch under-amortizes the compiled call). A miss triggers
     # one deeper re-probe before failing — small wall-clock gates on

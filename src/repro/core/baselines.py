@@ -125,6 +125,9 @@ def oracle_scalar(
 
 
 def oracle_max_throughput(space: ConfigSpace, device) -> Outcome:
+    """Exhaustive-search oracle for the single-target regime: the
+    highest-τ config under the device's power budget (``oracle`` with
+    the τ target disabled)."""
     return oracle(space, device, tau_target=0.0)
 
 
@@ -200,6 +203,9 @@ def alert_online(
 
 
 def preset(space: ConfigSpace, device, kind: str) -> Outcome:
+    """One-measurement static baseline: apply the named preset
+    (``max_power`` / ``default`` / ``min_power`` — see
+    ``ConfigSpace.preset``) and record what the device does there."""
     cfg = space.preset(kind)
     tau, p = device.measure(cfg)
     return Outcome(cfg, tau, p, 1)

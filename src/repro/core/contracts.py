@@ -197,6 +197,8 @@ def check_container(
 
 
 def carry_contract(fleet: bool, drift: bool) -> Dict[str, str]:
+    """The contract table for one episode flavor: the base carry plus
+    the fleet dCor accumulators and/or the drift monitor fields."""
     table = dict(CARRY_CONTRACT)
     if fleet:
         table.update(FLEET_CARRY_CONTRACT)

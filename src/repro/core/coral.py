@@ -45,6 +45,10 @@ from repro.core.space import (
 
 @dataclasses.dataclass
 class Observation:
+    """One measured (config, τ, p, reward) sample — the scalar-loop unit
+    the compiled engine flattens into a ``hist_sm`` row (the anchors in
+    ``core.contracts.CARRY_CONTRACT`` are this, as scalars)."""
+
     config: Config
     tau: float
     power: float
@@ -54,6 +58,12 @@ class Observation:
 
 @dataclasses.dataclass
 class CoralState:
+    """Everything Alg. 1–2 carry between iterations: the three anchors
+    (best / second / last), the prohibited set, the full observation
+    history, and the probe / epoch bookkeeping. The compiled engine's
+    fixed-size mirror of this object is ``CARRY_CONTRACT`` in
+    ``repro.core.contracts``."""
+
     best: Optional[Observation] = None
     second: Optional[Observation] = None
     last: Optional[Observation] = None
@@ -268,6 +278,12 @@ class CORAL:
     # Step 2: correlation analysis over the sliding window
     # ------------------------------------------------------------------
     def correlations(self) -> Tuple[np.ndarray, np.ndarray]:
+        """§III-D sensitivity weights: (α, β) arrays of length D — per-knob
+        dCor against τ and p over the current epoch's last-W window
+        (uniform weights below 3 samples). The window is zero-padded to a
+        fixed W so one jitted ``dcor_all`` shape serves every fill level —
+        the same padding the compiled engine's ``lax.dynamic_slice``
+        window reproduces."""
         hist = self.epoch_history[-self.window :]
         if self.drift is not None and self.drift.halflife is not None:
             # Exponentially-decayed buffer, hard-truncated at the decay
@@ -297,6 +313,11 @@ class CORAL:
     # Step 3: propose the next configuration
     # ------------------------------------------------------------------
     def propose(self) -> Config:
+        """Alg. 2: the next configuration to measure. First probe is the
+        grid midpoint, second a correlation-free diversity preset; from
+        the third on, a correlation-weighted step from (best, second)
+        via ``search.alg2_levels`` — the exact float32 op sequence the
+        compiled scan traces — with the prohibited-escape argmin on top."""
         st = self.state
         n = self.epoch_n
         if n == 0:
@@ -409,6 +430,9 @@ class CORAL:
     # Step 1: reward evaluation & state update
     # ------------------------------------------------------------------
     def observe(self, config: Config, tau: float, power: float) -> float:
+        """Alg. 1: fold one measurement into the state — Eq. 3 reward
+        (which may prohibit the config), history append, and the
+        best/second/last anchor update. Returns the reward."""
         st = self.state
         r = reward(
             tau,

@@ -52,6 +52,7 @@ def dcor(x: jax.Array, y: jax.Array, eps: float = 1e-12) -> jax.Array:
 
 @jax.jit
 def dcor_jit(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Jitted scalar distance correlation of two (W,) samples."""
     return dcor(x, y)
 
 

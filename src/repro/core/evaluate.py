@@ -167,6 +167,11 @@ def run_coral(
     seed: int = 0,
     mode: str = "dual",  # dual | throughput (single-target §IV-B)
 ) -> tuple[Outcome, Trace]:
+    """One CORAL run against a measurable device: ``iters`` propose →
+    measure → observe rounds of the Alg. 1–2 loop, returning the chosen
+    ``Outcome`` and the full per-iteration ``Trace``. The scalar
+    reference the compiled episode engine is byte-checked against
+    (``run_regime`` wraps this with ``RegimeTargets``)."""
     # mode="throughput" is CORAL's own single-target path (reward = τ, no
     # τ target) — not an inf-target sentinel, which would route every
     # observation through the infeasible branch of Alg. 1 and maximize

@@ -26,6 +26,10 @@ def reward(
     p_budget: float,
     mode: str = "dual",
 ) -> float:
+    """Paper Eq. 3 reward of one measured (τ, p) at config ``x``:
+    -(p/τ) efficiency when feasible, constraint-violation penalties
+    otherwise, -inf for prohibited configs. ``mode="throughput"``
+    switches to the single-target reward (τ under the power cap)."""
     if mode == "throughput":  # single-target §IV-B: maximize τ under p cap
         if p > p_budget:
             prohibited.add(tuple(x))

@@ -139,6 +139,11 @@ def next_config(
     step_floor: bool = True,
     gamma_mode: str = "max",  # max (paper Alg.2 line 3) | directional
 ) -> Config:
+    """Paper Alg. 2 proposal: move each knob from the best setting ``x``
+    toward/away from the second-best ``y`` by a step scaled with the
+    per-dimension dCor weights (α for τ, β for p), descending when the
+    last measurement cleared the target and climbing otherwise. Thin
+    host wrapper over the array-based ``alg2_levels`` the engine jits."""
     down = tau_last > tau_target and p_last >= p_min  # line 6
     alpha32 = np.asarray(alpha, np.float32)
     beta32 = np.asarray(beta, np.float32)

@@ -197,10 +197,56 @@ def profile_space(kind: str) -> ConfigSpace:
     raise KeyError(kind)
 
 
+def offload_space(edge_kind: str) -> ConfigSpace:
+    """The joint edge↔pod offload grid for one edge profile.
+
+    Five dimensions — the same D as every profile space, so offload
+    episodes batch into the same compiled ``jit(vmap(scan))`` call as
+    the stationary matrix cells (``repro.core.episode`` requires one
+    grid dimensionality per batch):
+
+        gpu_freq      — the edge accelerator ladder, coarsened to ≤4
+                        levels (ends kept) to hold N in the low hundreds;
+        mem_freq      — the edge memory ladder, unchanged;
+        concurrency   — edge inference streams (first 3 ladder steps);
+        offload_frac  — the route split φ: the fraction of admitted
+                        items shipped to the pod (0 = all-local);
+        pod_tpu_freq  — the pod-side TPU DVFS point (coarse 3-step
+                        ladder), visible from the edge through the
+                        offload path's window/slice capacity.
+
+    Edge CPU knobs are not searched — ``OffloadSimulator`` pins them at
+    nominal — so Alg. 2's cores-role mask is empty here, which
+    ``repro.core.search.role_mask`` handles as a no-op."""
+    edge = profile_space(edge_kind)
+    gpu = edge.dims[edge.names.index("gpu_freq")].values
+    if len(gpu) > 4:
+        keep = np.linspace(0, len(gpu) - 1, 4).round().astype(int)
+        gpu = tuple(gpu[i] for i in keep)
+    mem = edge.dims[edge.names.index("mem_freq")].values
+    conc = edge.dims[edge.names.index("concurrency")].values[:3]
+    pod = tpu_pod_space()
+    pod_f = pod.dims[pod.names.index("tpu_freq")].values
+    pod_keep = np.linspace(0, len(pod_f) - 1, 3).round().astype(int)
+    return ConfigSpace(
+        dims=(
+            Dim("gpu_freq", gpu),
+            Dim("mem_freq", mem),
+            Dim("concurrency", conc),
+            Dim(OFFLOAD_DIM, (0.0, 0.2, 0.4, 0.6, 0.8)),
+            Dim("pod_tpu_freq", tuple(pod_f[i] for i in pod_keep)),
+        )
+    )
+
+
 # Dimension roles used by Alg. 2's power-optimization heuristic
 CORES_DIM_CANDIDATES = ("host_cores", "cpu_cores")
 CONCURRENCY_DIM = "concurrency"
 CPU_FREQ_DIM_CANDIDATES = ("host_cpu_freq", "cpu_freq")
+# The route-split knob of the joint edge↔pod offload space — a role
+# name so the serving controller and admission seam can locate it
+# without hard-coding a dimension index.
+OFFLOAD_DIM = "offload_frac"
 
 
 # ---------------------------------------------------------------------------

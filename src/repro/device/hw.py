@@ -182,6 +182,8 @@ DEVICE_PROFILES: Dict[str, DeviceProfile] = {
 
 
 def get_profile(name: str) -> DeviceProfile:
+    """Look up a device profile by registry name (KeyError lists the
+    known names)."""
     if name not in DEVICE_PROFILES:
         raise KeyError(
             f"unknown device profile {name!r}; known: {sorted(DEVICE_PROFILES)}"

@@ -108,6 +108,9 @@ _ALIASES = {
 
 
 def canon(config: dict) -> dict:
+    """Normalize a knob dict to canonical names (``gpu_freq`` →
+    ``tpu_freq`` etc.); raises KeyError when any of the five canonical
+    knobs is missing from the input."""
     out = {}
     for canon_name, names in _ALIASES.items():
         for n in names:

@@ -9,9 +9,12 @@ from repro.experiments.matrix import (  # noqa: F401
     DRIFT_ADAPTIVE_GATE,
     DRIFT_SEPARATION,
     DRIFT_STATIC_CEILING,
+    OFFLOAD_CORAL_GATE,
+    OFFLOAD_ITERS,
     run_cell,
     run_drift_cell,
     run_matrix,
+    run_offload_cell,
 )
 from repro.experiments.fleet import (  # noqa: F401
     FLEET_ITERS,
@@ -35,17 +38,23 @@ from repro.experiments.scenarios import (  # noqa: F401
     MATRIX_DEVICES,
     MATRIX_DRIFT_CELLS,
     MATRIX_MODELS,
+    MATRIX_OFFLOAD_CELLS,
     MATRIX_REGIMES,
     MATRIX_WORKLOADS,
+    OFFLOAD_REGIMES,
     QUICK_DRIFT_CELLS,
+    QUICK_OFFLOAD_CELLS,
     REGIMES,
     WORKLOADS,
     Cell,
+    OffloadRegime,
     Regime,
     Workload,
     cell_simulator,
     drifting_cell_simulator,
     enumerate_cells,
+    offload_cell_simulator,
+    resolve_offload_targets,
     resolve_targets,
 )
 from repro.experiments.schema import (  # noqa: F401

@@ -24,6 +24,14 @@ mode) group instead of nested interpreter loops — while
 baseline (the ``oracle_scalar`` pattern). Both engines produce
 identical records: the equivalence suite (tests/test_episode.py) pins
 chosen configs per seed, and scoring is shared float64 array code.
+
+Beyond the static grid the matrix carries two further cell families,
+each through the same engines: dynamic (drift) cells — adaptive vs
+static ablation against the post-shift oracle (EXPERIMENTS.md §Drift) —
+and edge↔pod offload cells, where CORAL searches the joint route-
+fraction × concurrency × two-sided-DVFS space against a batched joint
+oracle while every static preset and the φ=0 ablation are infeasible
+by calibration (EXPERIMENTS.md §Offload, ``run_offload_cell``).
 """
 from __future__ import annotations
 
@@ -51,18 +59,28 @@ from repro.experiments.scenarios import (
     DRIFT_INTERVALS,
     DRIFT_SHIFT_START,
     DRIFTS,
+    MATRIX_OFFLOAD_CELLS,
+    OFFLOAD_REGIMES,
     REGIMES,
     WORKLOADS,
     Cell,
     cell_simulator,
     drifting_cell_simulator,
     enumerate_cells,
+    offload_cell_simulator,
+    resolve_offload_targets,
     resolve_targets,
 )
 
 # Per-baseline device seeds: every baseline sees its own noise stream,
 # deterministically, so matrix records are reproducible bit-for-bit.
-_BASELINE_SEEDS = {"alert": 101, "alert_online": 102, "max_power": 103, "default": 104}
+_BASELINE_SEEDS = {
+    "alert": 101,
+    "alert_online": 102,
+    "max_power": 103,
+    "default": 104,
+    "min_power": 105,
+}
 
 # Regression-gate margin: the recorded floor sits this far under the
 # worst seed, absorbing cross-platform float jitter without letting a
@@ -70,11 +88,12 @@ _BASELINE_SEEDS = {"alert": 101, "alert_online": 102, "max_power": 103, "default
 SCORE_FLOOR_MARGIN = 0.05
 
 
-def _score(tau: float, power: float, regime_name: str, oracle_ref: Outcome) -> float:
-    """Normalized-vs-oracle performance under the regime's objective."""
+def _score(tau: float, power: float, mode: str, oracle_ref: Outcome) -> float:
+    """Normalized-vs-oracle performance under the regime's objective
+    (``mode``: "throughput" → τ ratio, "dual" → efficiency ratio)."""
     if oracle_ref.config is None:
         return 0.0
-    if REGIMES[regime_name].mode == "throughput":
+    if mode == "throughput":
         return tau / max(oracle_ref.tau, 1e-9)
     eff = tau / max(power, 1e-9)
     return eff / max(oracle_ref.efficiency, 1e-9)
@@ -149,8 +168,15 @@ def _cell_record(
     iters: int,
     seeds: Sequence[int],
     engine: str,
+    sim_factory=cell_simulator,
+    preset_kinds: Tuple[str, ...] = ("max_power", "default"),
 ) -> dict:
-    """Assemble one cell's JSON record from its per-seed episode runs."""
+    """Assemble one cell's JSON record from its per-seed episode runs.
+
+    ``sim_factory(cell, seed=...)`` builds the noisy device the scalar
+    baselines run against (offload cells pass the edge↔pod twin);
+    ``preset_kinds`` lists the open-loop presets to record.
+    """
     sim0, targets, oracle_ref = prep["sim0"], prep["targets"], prep["oracle"]
     scores: List[float] = []
     tau_misses: List[bool] = []
@@ -173,7 +199,7 @@ def _cell_record(
         # credit — an infeasible low-clock config can beat the feasible
         # optimum on raw τ/p, and crediting it would let feasibility
         # regressions read as score improvements.
-        s = 0.0 if (miss or bust) else _score(tau, power, cell.regime, oracle_ref)
+        s = 0.0 if (miss or bust) else _score(tau, power, targets.mode, oracle_ref)
         scores.append(s)
         tau_misses.append(miss)
         power_busts.append(bust)
@@ -216,7 +242,7 @@ def _cell_record(
         # busting the cap) needs both visible. Only CORAL's scores feed
         # the gates, and those zero out on violation above.
         return {
-            "score": _score(tau, power, cell.regime, oracle_ref),
+            "score": _score(tau, power, targets.mode, oracle_ref),
             "tau": tau,
             "power": power,
             "violates_tau": bool(miss),
@@ -250,12 +276,12 @@ def _cell_record(
                 prep["noise"],
                 _BASELINE_SEEDS[kind],
             )
-            for kind in ("max_power", "default")
+            for kind in preset_kinds
         }
     else:
         alert_online_out = alert_online(
             space,
-            cell_simulator(cell, seed=_BASELINE_SEEDS["alert_online"]),
+            sim_factory(cell, seed=_BASELINE_SEEDS["alert_online"]),
             targets.tau_target,
             targets.p_budget,
             iters=iters,
@@ -263,22 +289,21 @@ def _cell_record(
         )
         preset_outs = {
             kind: preset(
-                space, cell_simulator(cell, seed=_BASELINE_SEEDS[kind]), kind
+                space, sim_factory(cell, seed=_BASELINE_SEEDS[kind]), kind
             )
-            for kind in ("max_power", "default")
+            for kind in preset_kinds
         }
     baselines = {
         "alert": _outcome_record(
             alert(
                 space,
-                cell_simulator(cell, seed=_BASELINE_SEEDS["alert"]),
+                sim_factory(cell, seed=_BASELINE_SEEDS["alert"]),
                 targets.tau_target,
                 targets.p_budget,
             )
         ),
         "alert_online": _outcome_record(alert_online_out),
-        "max_power": _outcome_record(preset_outs["max_power"]),
-        "default": _outcome_record(preset_outs["default"]),
+        **{kind: _outcome_record(preset_outs[kind]) for kind in preset_kinds},
     }
 
     return {
@@ -318,6 +343,148 @@ def run_cell(
     else:
         runs = _scalar_static_runs(cell, prep, seeds, iters, window)
     return _cell_record(cell, prep, runs, iters, seeds, engine)
+
+
+# ---------------------------------------------------------------------------
+# Offload (edge↔pod) cells
+# ---------------------------------------------------------------------------
+
+# The joint offload grid is ~2.5× the size of a single-device grid and
+# its dual-feasible region is deliberately narrow (5–18% of rows), so
+# the measurement budget scales with it: 24 measurements keeps every
+# calibrated cell ≥ OFFLOAD_CORAL_GATE of the joint oracle with zero
+# true power busts (gated in benchmarks/matrix_bench.py and
+# check_regression.py), while every static preset and the no-offload
+# ablation stay infeasible by construction.
+OFFLOAD_ITERS = 24
+OFFLOAD_CORAL_GATE = 0.85
+
+
+def _prep_offload_cell(cell: Cell) -> dict:
+    """Offload-cell precompute: the noise-free edge↔pod twin (demand
+    pinned at demand_factor × the edge-only max), resolved end-to-end
+    targets, the joint-grid (τ_served, p_edge) landscape, and the batched
+    joint-space oracle — same keys as ``_prep_cell`` so the episode
+    request shape is shared."""
+    sim0 = offload_cell_simulator(cell, noise=0.0)
+    targets = resolve_offload_targets(cell, sim0)
+    land_tau, land_p = sim0.exact_all()
+    oracle_ref = oracle(sim0.space, sim0, targets.tau_target, targets.p_budget)
+    return {
+        "sim0": sim0,
+        "space": sim0.space,
+        "targets": targets,
+        "land_tau": land_tau,
+        "land_p": land_p,
+        "oracle": oracle_ref,
+        "noise": WORKLOADS[cell.workload].noise,
+    }
+
+
+def _scalar_offload_runs(
+    cell: Cell, prep: dict, seeds: Sequence[int], iters: int, window: int
+) -> List[Tuple[Outcome, Trace]]:
+    """Per-seed Python loops over the edge↔pod twin (equivalence
+    baseline for the offload-enlarged episode engine)."""
+    runs = []
+    for seed in seeds:
+        dev = offload_cell_simulator(cell, seed=seed)
+        runs.append(
+            run_regime(
+                prep["space"], dev, prep["targets"], iters=iters,
+                window=window, seed=seed,
+            )
+        )
+    return runs
+
+
+def _no_offload_record(prep: dict) -> dict:
+    """The no-offload ablation: exhaustive search restricted to the
+    φ=0 rows of the joint grid. On calibrated offload cells no such row
+    meets the SLO (demand exceeds the edge-only max by construction), so
+    this records the *best the un-offloaded edge can do* — its max-τ row
+    — with the violation flags that show why routing is required."""
+    space = prep["space"]
+    targets = prep["targets"]
+    grid = space.grid()
+    phi = grid[:, space.names.index("offload_frac")]
+    tau, p = prep["land_tau"], prep["land_p"]
+    local = np.nonzero(phi == 0.0)[0]
+    feasible = local[
+        (tau[local] >= targets.tau_target * (1 - 1e-9))
+        & (p[local] <= targets.p_budget * (1 + 1e-9))
+    ]
+    if feasible.size:
+        eff = tau[feasible] / np.maximum(p[feasible], 1e-9)
+        pick = int(feasible[int(np.argmax(eff))])
+    else:
+        pick = int(local[int(np.argmax(tau[local]))])
+    miss, bust = _violations(float(tau[pick]), float(p[pick]), targets)
+    return {
+        "feasible_rows": int(feasible.size),
+        "config": [float(v) for v in grid[pick]],
+        "tau": float(tau[pick]),
+        "power": float(p[pick]),
+        "violates_tau": bool(miss),
+        "violates_power": bool(bust),
+    }
+
+
+def _offload_cell_record(
+    cell: Cell,
+    prep: dict,
+    runs: List[Tuple[Outcome, Trace]],
+    iters: int,
+    seeds: Sequence[int],
+    engine: str,
+) -> dict:
+    """One offload cell's record: the static-cell shape (CORAL vs
+    baselines vs the batched joint oracle, min_power included) plus the
+    network/demand provenance and the no-offload ablation."""
+    regime = OFFLOAD_REGIMES[cell.regime]
+    rec = _cell_record(
+        cell,
+        prep,
+        runs,
+        iters,
+        seeds,
+        engine,
+        sim_factory=offload_cell_simulator,
+        preset_kinds=("max_power", "default", "min_power"),
+    )
+    sim0 = prep["sim0"]
+    rec["offload"] = {
+        "network": regime.network,
+        "trace": regime.trace,
+        "demand": sim0.demand,
+        "demand_factor": regime.demand_factor,
+        "slo_frac": regime.slo_frac,
+        "p_slack": regime.p_slack,
+        "edge_only_max": round(float(sim0.edge_only_max()), 3),
+        "no_offload": _no_offload_record(prep),
+    }
+    return rec
+
+
+def run_offload_cell(
+    cell: Cell,
+    iters: int = OFFLOAD_ITERS,
+    seeds: Sequence[int] = (0, 1, 2),
+    window: int = 10,
+    engine: str = "compiled",
+) -> dict:
+    """One edge↔pod offload cell → one JSON-ready record (the
+    ``offload_cells`` entry of schema v4 — see
+    ``repro.experiments.schema`` and docs/BENCH_SCHEMAS.md)."""
+    prep = _prep_offload_cell(cell)
+    if engine == "compiled":
+        eps = run_static_requests(
+            _static_requests(prep, seeds), iters=iters, window=window
+        )
+        runs = [(ep.outcome, ep.trace()) for ep in eps]
+    else:
+        runs = _scalar_offload_runs(cell, prep, seeds, iters, window)
+    return _offload_cell_record(cell, prep, runs, iters, seeds, engine)
 
 
 # ---------------------------------------------------------------------------
@@ -629,21 +796,29 @@ def run_matrix(
     quick: bool = False,
     engine: str = "compiled",
     window: int = 10,
+    offload_cells: Optional[Sequence[Cell]] = None,
 ) -> dict:
     """Run every cell and assemble the schema'd BENCH_matrix record.
 
     Cells whose regime names a drift schedule run the non-stationary
     loop (``run_drift_cell``, adaptive vs. static ablation) and land in
     the record's ``drift_cells`` array; stationary cells keep the
-    CORAL-vs-baselines shape in ``cells``.
+    CORAL-vs-baselines shape in ``cells``; edge↔pod offload cells
+    (``offload_cells`` — defaults to ``MATRIX_OFFLOAD_CELLS`` on the
+    full grid, to none when an explicit ``cells`` list is given) run
+    CORAL over the joint route-fraction × DVFS space at the larger
+    ``OFFLOAD_ITERS`` budget and land in ``offload_cells``.
 
     Under the compiled engine every CORAL episode across all cells ×
     seeds (× drift variants) is submitted as one request batch — the
     engine groups them by (grid shape, mode) and runs each group as a
-    single vmapped ``lax.scan`` call. ``wall_clock_s`` records the
-    per-phase split (schema v3) so the nightly run tracks where time
+    single vmapped ``lax.scan`` call; offload episodes form their own
+    batch because their measurement budget differs. ``wall_clock_s``
+    records the per-phase split so the nightly run tracks where time
     goes.
     """
+    if offload_cells is None:
+        offload_cells = MATRIX_OFFLOAD_CELLS if cells is None else ()
     if cells is None:
         cells = enumerate_cells()
     static_cells = [c for c in cells if not REGIMES[c.regime].dynamic]
@@ -677,6 +852,39 @@ def run_matrix(
         for c in static_cells
     ]
     wall["static_score_s"] = time.perf_counter() - t0
+
+    # ---- offload cells -------------------------------------------------
+    t0 = time.perf_counter()
+    opreps = {c: _prep_offload_cell(c) for c in offload_cells}
+    wall["offload_prep_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    offload_runs: Dict[Cell, list] = {}
+    if engine == "compiled":
+        reqs, owners = [], []
+        for c in offload_cells:
+            cell_reqs = _static_requests(opreps[c], seeds)
+            owners.extend([c] * len(cell_reqs))
+            reqs.extend(cell_reqs)
+        if reqs:
+            eps = run_static_requests(reqs, iters=OFFLOAD_ITERS, window=window)
+            for c, ep in zip(owners, eps):
+                offload_runs.setdefault(c, []).append((ep.outcome, ep.trace()))
+    else:
+        for c in offload_cells:
+            offload_runs[c] = _scalar_offload_runs(
+                c, opreps[c], seeds, OFFLOAD_ITERS, window
+            )
+    wall["offload_episodes_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    offload_records = [
+        _offload_cell_record(
+            c, opreps[c], offload_runs[c], OFFLOAD_ITERS, seeds, engine
+        )
+        for c in offload_cells
+    ]
+    wall["offload_score_s"] = time.perf_counter() - t0
 
     # ---- drift cells ---------------------------------------------------
     t0 = time.perf_counter()
@@ -729,8 +937,9 @@ def run_matrix(
         )
     wall["drift_score_s"] = time.perf_counter() - t0
 
+    all_cells = list(cells) + list(offload_cells)
     return {
-        "schema_version": 3,
+        "schema_version": 4,
         "regenerate": regenerate,
         "quick": quick,
         "engine": engine,
@@ -738,18 +947,24 @@ def run_matrix(
         "seeds": list(seeds),
         "wall_clock_s": {k: round(v, 4) for k, v in wall.items()},
         "grid": {
-            "devices": sorted({c.device for c in cells}),
-            "models": sorted({c.model for c in cells}),
-            "workloads": sorted({c.workload for c in cells}),
+            "devices": sorted({c.device for c in all_cells}),
+            "models": sorted({c.model for c in all_cells}),
+            "workloads": sorted({c.workload for c in all_cells}),
             "regimes": sorted({c.regime for c in cells}),
+            "offload_regimes": sorted({c.regime for c in offload_cells}),
         },
         "cells": records,
         "drift_cells": drift_records,
-        "summary": _summarize(records, drift_records),
+        "offload_cells": offload_records,
+        "summary": _summarize(records, drift_records, offload_records),
     }
 
 
-def _summarize(records: List[dict], drift_records: List[dict] = ()) -> dict:
+def _summarize(
+    records: List[dict],
+    drift_records: List[dict] = (),
+    offload_records: List[dict] = (),
+) -> dict:
     single = [
         r["coral"]["score"] for r in records if REGIMES[r["regime"]].single_target
     ]
@@ -792,6 +1007,31 @@ def _summarize(records: List[dict], drift_records: List[dict] = ()) -> dict:
             if drift_records
             else None
         ),
+        "n_offload_cells": len(offload_records),
+        "min_offload_score": (
+            min(r["coral"]["score"] for r in offload_records)
+            if offload_records
+            else None
+        ),
+        "offload_power_violations": int(
+            sum(r["coral"]["power_violations"] for r in offload_records)
+        ),
+        # Count of (preset | no-offload-ablation) entries that were truly
+        # feasible — the tentpole claim is that this stays 0: only the
+        # joint route-fraction × DVFS search can serve the offered demand
+        # within budget.
+        "offload_feasible_baselines": int(
+            sum(
+                not (b["violates_tau"] or b["violates_power"])
+                for r in offload_records
+                for b in (
+                    r["baselines"]["max_power"],
+                    r["baselines"]["default"],
+                    r["baselines"]["min_power"],
+                    r["offload"]["no_offload"],
+                )
+            )
+        ),
     }
     return summary
 
@@ -799,8 +1039,9 @@ def _summarize(records: List[dict], drift_records: List[dict] = ()) -> dict:
 def score_floors(record: dict) -> Dict[Tuple[str, str, str, str], float]:
     """(device, model, workload, regime) → recorded floor, for the
     bench-regression gate. Dynamic cells contribute their drift-adaptive
-    floor — cell keys are unique across both arrays because a regime is
-    either stationary or dynamic, never both."""
+    floor and offload cells their CORAL floor — cell keys are unique
+    across the arrays because a regime name belongs to exactly one
+    family (stationary, dynamic, or offload)."""
     floors = {
         (c["device"], c["model"], c["workload"], c["regime"]): c["coral"][
             "score_floor"
@@ -810,4 +1051,7 @@ def score_floors(record: dict) -> Dict[Tuple[str, str, str, str], float]:
     for c in record.get("drift_cells", ()):
         key = (c["device"], c["model"], c["workload"], c["regime"])
         floors[key] = c["adaptive"]["score_floor"]
+    for c in record.get("offload_cells", ()):
+        key = (c["device"], c["model"], c["workload"], c["regime"])
+        floors[key] = c["coral"]["score_floor"]
     return floors

@@ -25,6 +25,9 @@ def _viol(rec: dict) -> str:
 
 
 def markdown_report(record: dict) -> str:
+    """Render a BENCH_matrix record (any schema version — drift and
+    offload sections appear only when their cell arrays are non-empty)
+    as the committed BENCH_matrix.md summary."""
     lines: List[str] = ["# Scenario matrix", ""]
     s = record["summary"]
     lines.append(
@@ -54,6 +57,15 @@ def markdown_report(record: dict) -> str:
             f"post-shift score **{s['min_drift_adaptive_score']:.3f}** "
             f"(gate ≥ 0.85) · best static ablation "
             f"**{s['max_drift_static_score']:.3f}** (gate ≤ 0.5)"
+        )
+    if s.get("n_offload_cells"):
+        lines.append(
+            f"- offload cells: **{s['n_offload_cells']}** · worst CORAL "
+            f"joint-space score **{s['min_offload_score']:.3f}** "
+            f"(gate ≥ 0.85) · power violations "
+            f"**{s['offload_power_violations']}** (gate = 0) · feasible "
+            f"presets/ablations **{s['offload_feasible_baselines']}** "
+            f"(gate = 0)"
         )
     lines.append("")
 
@@ -94,6 +106,44 @@ def markdown_report(record: dict) -> str:
                 f"| {col('max_power')} | {col('default')} "
                 f"| {c['oracle']['measurements']} |"
             )
+        lines.append("")
+    offload_cells = record.get("offload_cells", [])
+    if offload_cells:
+        lines.append("## Offload regimes (edge↔pod joint search)")
+        lines.append("")
+        lines.append(
+            "| device | model | network | λ | edge-max | τ* | P-cap | "
+            "CORAL | viol | no-offload | max_power | min_power |"
+        )
+        lines.append("|" + "---|" * 12)
+        for c in offload_cells:
+            o = c["offload"]
+            coral = c["coral"]
+            viol = (
+                f"{coral['violation_rate']:.0%}"
+                if coral["violation_rate"]
+                else "0"
+            )
+            no = o["no_offload"]
+            no_mark = _viol(no) or "ok"
+            mp = c["baselines"]["max_power"]
+            mn = c["baselines"]["min_power"]
+            lines.append(
+                f"| {c['device']} | {c['model']} | {o['network']} "
+                f"| {o['demand']:.1f} | {o['edge_only_max']:.1f} "
+                f"| {c['tau_target']:.1f} | {c['p_budget']:.2f}W "
+                f"| **{coral['score']:.2f}** | {viol} "
+                f"| {no_mark} | {_viol(mp) or 'ok'} | {_viol(mn) or 'ok'} |"
+            )
+        lines.append("")
+        lines.append(
+            "Offload cells offer demand λ = 2× the best the un-offloaded "
+            "edge can serve, so every φ=0 row misses the SLO (`τ!` under "
+            "`no-offload`) and the all-hi preset busts the edge power "
+            "budget (`P!`) — only the joint route-fraction × concurrency "
+            "× two-sided DVFS search is feasible. CORAL scores are "
+            "efficiency ratios vs the batched joint-space oracle."
+        )
         lines.append("")
     drift_cells = record.get("drift_cells", [])
     if drift_cells:

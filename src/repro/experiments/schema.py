@@ -6,6 +6,11 @@ dependency-free validator.
 used directly; otherwise the validators fall back to a built-in
 structural checker covering the same constraints (type, required, enum,
 bounds) — CI and air-gapped containers validate either way.
+
+The version history of every BENCH_*.json artifact (what each schema
+bump added, which blocks are deterministic vs machine-dependent, and
+how ``benchmarks/check_regression.py`` gates each record) is documented
+in docs/BENCH_SCHEMAS.md.
 """
 from __future__ import annotations
 
@@ -119,6 +124,75 @@ _CELL = {
     },
 }
 
+# Offload cells (schema v4) extend the static-cell shape: the baselines
+# block additionally records the min_power preset (every preset must be
+# visibly infeasible on a calibrated offload cell), and the ``offload``
+# block carries the network/demand provenance plus the no-offload
+# ablation — the best φ=0 row of the joint grid, with the violation
+# flags that show why routing is required.
+_OFFLOAD_CELL = {
+    "type": "object",
+    "required": _CELL["required"] + ["offload"],
+    "properties": {
+        **_CELL["properties"],
+        "baselines": {
+            "type": "object",
+            "required": [
+                "alert",
+                "alert_online",
+                "max_power",
+                "default",
+                "min_power",
+            ],
+            "additionalProperties": _OUTCOME,
+        },
+        "offload": {
+            "type": "object",
+            "required": [
+                "network",
+                "trace",
+                "demand",
+                "demand_factor",
+                "slo_frac",
+                "p_slack",
+                "edge_only_max",
+                "no_offload",
+            ],
+            "properties": {
+                "network": {"type": "string"},
+                "trace": {"type": "string"},
+                "demand": {"type": "number", "minimum": 0},
+                "demand_factor": {"type": "number", "minimum": 1},
+                "slo_frac": {"type": "number", "minimum": 0, "maximum": 1},
+                "p_slack": {"type": "number", "minimum": 1},
+                "edge_only_max": {"type": "number", "minimum": 0},
+                "no_offload": {
+                    "type": "object",
+                    "required": [
+                        "feasible_rows",
+                        "config",
+                        "tau",
+                        "power",
+                        "violates_tau",
+                        "violates_power",
+                    ],
+                    "properties": {
+                        "feasible_rows": {"type": "integer", "minimum": 0},
+                        "config": {
+                            "type": ["array", "null"],
+                            "items": {"type": "number"},
+                        },
+                        "tau": {"type": "number", "minimum": 0},
+                        "power": {"type": "number", "minimum": 0},
+                        "violates_tau": {"type": "boolean"},
+                        "violates_power": {"type": "boolean"},
+                    },
+                },
+            },
+        },
+    },
+}
+
 _DRIFT_VARIANT = {
     "type": "object",
     "required": [
@@ -201,16 +275,19 @@ _DRIFT_CELL = {
     },
 }
 
-# Per-phase wall-clock accounting (schema v3): where a matrix run spends
-# its time. All fields in seconds; ``static_episodes_s`` and
-# ``drift_episodes_s`` are the episode *control loops* — the part the
-# compiled engine replaces.
+# Per-phase wall-clock accounting (since schema v3; offload phases added
+# in v4): where a matrix run spends its time. All fields in seconds;
+# the ``*_episodes_s`` entries are the episode *control loops* — the
+# part the compiled engine replaces.
 _WALL_CLOCK = {
     "type": "object",
     "required": [
         "static_prep_s",
         "static_episodes_s",
         "static_score_s",
+        "offload_prep_s",
+        "offload_episodes_s",
+        "offload_score_s",
         "drift_prep_s",
         "drift_episodes_s",
         "drift_score_s",
@@ -221,6 +298,9 @@ _WALL_CLOCK = {
             "static_prep_s",
             "static_episodes_s",
             "static_score_s",
+            "offload_prep_s",
+            "offload_episodes_s",
+            "offload_score_s",
             "drift_prep_s",
             "drift_episodes_s",
             "drift_score_s",
@@ -273,10 +353,11 @@ MATRIX_SCHEMA = {
         "grid",
         "cells",
         "drift_cells",
+        "offload_cells",
         "summary",
     ],
     "properties": {
-        "schema_version": {"type": "integer", "enum": [3]},
+        "schema_version": {"type": "integer", "enum": [4]},
         "regenerate": {"type": "string"},
         "quick": {"type": "boolean"},
         "engine": {"type": "string", "enum": ["compiled", "scalar"]},
@@ -290,19 +371,34 @@ MATRIX_SCHEMA = {
         },
         "grid": {
             "type": "object",
-            "required": ["devices", "models", "workloads", "regimes"],
+            "required": [
+                "devices",
+                "models",
+                "workloads",
+                "regimes",
+                "offload_regimes",
+            ],
             "properties": {
-                k: {
+                **{
+                    k: {
+                        "type": "array",
+                        "items": {"type": "string"},
+                        "minItems": 1,
+                    }
+                    for k in ("devices", "models", "workloads", "regimes")
+                },
+                # empty when the run carries no offload cells
+                "offload_regimes": {
                     "type": "array",
                     "items": {"type": "string"},
-                    "minItems": 1,
-                }
-                for k in ("devices", "models", "workloads", "regimes")
+                },
             },
         },
         "cells": {"type": "array", "items": _CELL, "minItems": 1},
         # empty when the grid has no dynamic regime (e.g. trimmed runs)
         "drift_cells": {"type": "array", "items": _DRIFT_CELL},
+        # empty when the run carries no edge↔pod offload cells
+        "offload_cells": {"type": "array", "items": _OFFLOAD_CELL},
         "summary": {
             "type": "object",
             "required": [
@@ -315,6 +411,10 @@ MATRIX_SCHEMA = {
                 "min_drift_adaptive_score",
                 "max_drift_static_score",
                 "min_drift_separation",
+                "n_offload_cells",
+                "min_offload_score",
+                "offload_power_violations",
+                "offload_feasible_baselines",
             ],
             "properties": {
                 "n_cells": {"type": "integer", "minimum": 1},
@@ -326,6 +426,13 @@ MATRIX_SCHEMA = {
                 "min_drift_adaptive_score": {"type": ["number", "null"]},
                 "max_drift_static_score": {"type": ["number", "null"]},
                 "min_drift_separation": {"type": ["number", "null"]},
+                "n_offload_cells": {"type": "integer", "minimum": 0},
+                "min_offload_score": {"type": ["number", "null"]},
+                "offload_power_violations": {"type": "integer", "minimum": 0},
+                "offload_feasible_baselines": {
+                    "type": "integer",
+                    "minimum": 0,
+                },
             },
         },
     },

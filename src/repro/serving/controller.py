@@ -25,6 +25,15 @@ operating condition, enacts the derated delivered rate and inflated rail
 draw on real traffic, relays commanded budget steps to the optimizer,
 and lets CORAL's change-point monitor watch the held config between
 exploration epochs.
+
+With a ``network`` the controller tunes an *offload-aware* space
+(EXPERIMENTS.md §Offload): the ``offload_frac`` knob is enacted for
+real — the runtime's admission pool routes that fraction of requests
+to the pod — while the analytical rail model keeps pricing the edge
+knobs only (placement dims are stripped, the radio's hold-active draw
+is added whenever φ > 0, per-token ship energy is metered live by the
+runtime). Offload and drift schedules are mutually exclusive for now:
+drifted-rate pacing would double-count the routed fraction.
 """
 from __future__ import annotations
 
@@ -34,7 +43,7 @@ from typing import Iterable, List, Optional, Tuple
 from repro.core.baselines import Outcome
 from repro.core.coral import CORAL
 from repro.core.drift import DriftConfig
-from repro.core.space import CONCURRENCY_DIM, ConfigSpace
+from repro.core.space import CONCURRENCY_DIM, OFFLOAD_DIM, ConfigSpace
 from repro.device.hw import (
     DEFAULT_HW,
     DeviceProfile,
@@ -60,6 +69,17 @@ class IntervalRecord:
 
 
 class ServingController:
+    """The closed loop: one CORAL optimizer driving one live runtime.
+
+    Built either from an explicit ``ConfigSpace`` + the hand-wired HW
+    constants, or from a ``DeviceProfile`` (the scenario-matrix unit),
+    which supplies both. With a ``network`` it tunes an offload-aware
+    space: the ``offload_frac`` knob is enacted for real at the
+    runtime's admission pool (EXPERIMENTS.md §Offload), and the radio's
+    hold-active draw joins the analytical edge-rail power whenever the
+    link carries traffic.
+    """
+
     def __init__(
         self,
         runtime: ServingRuntime,
@@ -75,6 +95,8 @@ class ServingController:
         profile: Optional[DeviceProfile] = None,
         drift_schedule: Optional[DriftSchedule] = None,
         drift: Optional[DriftConfig] = None,
+        network=None,  # NetworkProfile: attach the edge↔pod uplink
+        pod_time_per_token: float = 2e-3,
     ):
         # An injected device profile supplies both the knob grid and the
         # power-model constants — the serving loop tunes whatever target
@@ -114,6 +136,25 @@ class ServingController:
         self.records: List[IntervalRecord] = []
         self._pending: Optional[Request] = None
         self._c_index = space.index(CONCURRENCY_DIM)
+        # Offload-aware spaces expose the route-fraction knob; when the
+        # tuned space carries it, attach the uplink so admission can
+        # genuinely ship requests (see ServingRuntime.set_offload).
+        self.network = network
+        self._phi_index = (
+            space.index(OFFLOAD_DIM) if OFFLOAD_DIM in space.names else None
+        )
+        if self._phi_index is not None and network is None:
+            raise ValueError(
+                "the tuned space has an offload_frac knob; pass a "
+                "NetworkProfile so admission can route to the pod"
+            )
+        if self._phi_index is not None and drift_schedule is not None:
+            raise ValueError(
+                "offload-aware serving and device-drift schedules are not "
+                "combined yet; tune one axis at a time"
+            )
+        if network is not None:
+            runtime.attach_pod(network, pod_time_per_token=pod_time_per_token)
 
     def _submit_until(self, horizon_s: float) -> None:
         """Release trace arrivals with offsets inside the next interval."""
@@ -130,6 +171,10 @@ class ServingController:
             self.runtime.submit(r)
 
     def control_step(self) -> IntervalRecord:
+        """One control interval: propose → apply (concurrency for real,
+        DVFS as pacing, placement at admission) → release one interval of
+        trace arrivals → serve it on the wall clock → feed the windowed
+        (τ, p) back to the optimizer. Returns the interval's record."""
         # the interval index is the drift clock: schedules are defined in
         # control intervals, and each step serves exactly one
         t = len(self.records)
@@ -143,7 +188,29 @@ class ServingController:
             if budget_t != self.opt.p_budget:
                 self.opt.set_p_budget(budget_t)  # commanded, not detected
         cfg = self.opt.next_config()
-        dev_rel, power = analytic_scale_and_power(self.space.names, cfg, self.hw)
+        names, knob_cfg = self.space.names, cfg
+        phi = 0.0
+        if self._phi_index is not None:
+            # the analytical rail model evaluates the *edge* knobs only:
+            # strip the placement dims and pin the host knobs the joint
+            # space does not expose at their nominal operating points
+            phi = float(cfg[self._phi_index])
+            drop = {OFFLOAD_DIM, "pod_tpu_freq"}
+            names = [n for n in self.space.names if n not in drop]
+            knob_cfg = [
+                v for n, v in zip(self.space.names, cfg) if n not in drop
+            ]
+            names = names + ["host_cpu_freq", "host_cores"]
+            knob_cfg = knob_cfg + [self.hw.nominal_host_freq, 6.0]
+        dev_rel, power = analytic_scale_and_power(names, knob_cfg, self.hw)
+        if self._phi_index is not None:
+            # placement is enacted for real at admission; the radio's
+            # hold-active draw lands on the edge rail whenever the link
+            # carries traffic (per-token ship energy is metered live by
+            # the runtime's network_energy_j counter)
+            self.runtime.set_offload(phi)
+            if phi > 0.0:
+                power += self.network.radio_idle_w
         if state is not None and not state.stationary:
             # Enact the drifted operating condition on live traffic: the
             # pacing scale carries the per-level clock derating and the
@@ -184,6 +251,9 @@ class ServingController:
         return rec
 
     def run(self, iters: int = 10) -> Tuple[Outcome, List[IntervalRecord]]:
+        """Run ``iters`` control intervals (the paper's 10-measurement
+        budget by default) and return CORAL's best feasible pick plus the
+        per-interval records."""
         for _ in range(iters):
             self.control_step()
         res = self.opt.result()

@@ -21,6 +21,9 @@ from repro.models.transformer import (
 
 
 def make_prefill_step(ctx: ApplyCtx, capacity=None):
+    """Jit-able prefill step ``(params, batch) -> (cache, logits)`` for
+    a fixed model context; ``capacity`` pads the KV cache length."""
+
     def prefill_step(params, batch):
         return prefill(ctx, params, batch, capacity=capacity)
 
@@ -28,6 +31,9 @@ def make_prefill_step(ctx: ApplyCtx, capacity=None):
 
 
 def make_serve_step(ctx: ApplyCtx):
+    """Jit-able single-token decode step
+    ``(params, cache, tokens) -> (cache, logits)``."""
+
     def serve_step(params, cache, tokens):
         return decode_step(ctx, params, cache, tokens)
 

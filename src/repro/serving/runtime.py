@@ -53,6 +53,9 @@ class Request:
     finished: float = 0.0
     tokens: List[int] = dataclasses.field(default_factory=list)
     output: Optional[np.ndarray] = None
+    # placement, decided once at admission: None until the request becomes
+    # admissible, then "edge" (local slots) or "pod" (shipped upstream)
+    route: Optional[str] = None
 
 
 class _Slot:
@@ -89,6 +92,14 @@ class ServingRuntime:
         self.steps = 0
         self.prefills = 0
         self.rate_scale = 1.0
+        # ---- edge↔pod offload seam (attach_pod / set_offload) ----------
+        self.pod_network = None  # repro.device.network.NetworkProfile
+        self.pod_time_per_token = 0.0
+        self.offload_frac = 0.0
+        self._route_acc = 0.0  # deterministic fractional-routing carry
+        self._pod_inflight: List[Tuple[float, Request]] = []  # (done_at, r)
+        self.pod_tokens_total = 0
+        self.network_energy_j = 0.0
 
     # ------------------------------------------------------------------
     # clock & admission
@@ -119,10 +130,101 @@ class ServingRuntime:
         controller's latency/backlog signals feed on)."""
         self.rate_scale = min(1.0, max(0.05, float(scale)))
 
+    # ------------------------------------------------------------------
+    # edge↔pod offload seam
+    # ------------------------------------------------------------------
+    def attach_pod(self, network, pod_time_per_token: float = 2e-3) -> None:
+        """Attach the uplink to the pod slice: ``network`` is a
+        ``repro.device.network.NetworkProfile`` and ``pod_time_per_token``
+        the slice's per-token decode service time. Until ``set_offload``
+        raises the route fraction above 0, everything still runs locally.
+        """
+        self.pod_network = network
+        self.pod_time_per_token = float(pod_time_per_token)
+
+    def set_offload(self, frac: float) -> None:
+        """Live placement knob: the fraction of *admitted* requests routed
+        to the pod. Routing is decided once per request at admission by a
+        deterministic fractional accumulator (no RNG: every 1/frac-th
+        admissible request ships), so two runs with the same trace and
+        knob settings route identically."""
+        self.offload_frac = min(1.0, max(0.0, float(frac)))
+
+    def _ship_to_pod(self, r: Request, t: float) -> None:
+        """Ship one request over the attached uplink. End-to-end latency
+        is network + remote service: upload serialization + one RTT + the
+        pod slice's per-token decode time. The radio energy meter charges
+        per shipped token (prompt up, generated tokens down) — the only
+        place pod-routed work ever touches the edge power rail. The local
+        engine is never invoked for shipped requests."""
+        net = self.pod_network
+        n_tok = int(r.prompt.size) + int(r.max_new_tokens)
+        upload_s = int(r.prompt.size) * net.token_bytes / net.bandwidth
+        done_at = (
+            t
+            + upload_s
+            + net.rtt_s
+            + int(r.max_new_tokens) * self.pod_time_per_token
+        )
+        self.network_energy_j += n_tok * net.ship_energy_per_token_j
+        self.pod_tokens_total += int(r.max_new_tokens)
+        r.started = t
+        self._pod_inflight.append((done_at, r))
+
+    def _route_admissible(self, t: float) -> bool:
+        """Admission-time placement: walk the pool once, decide edge vs
+        pod for every newly-admissible request, and ship the pod-routed
+        ones. Requests stay route="edge" forever once committed — the
+        accumulator only advances on first admission, so later knob
+        changes affect later arrivals only."""
+        if self.pod_network is None:
+            return False
+        now = self.now()
+        shipped: List[Request] = []
+        for r in self.waiting:
+            if r.route is not None:
+                continue
+            if r.arrival_s is not None and r.arrival_s > now:
+                continue
+            self._route_acc += self.offload_frac
+            if self._route_acc >= 1.0 - 1e-12:
+                self._route_acc -= 1.0
+                r.route = "pod"
+                shipped.append(r)
+            else:
+                r.route = "edge"
+        if not shipped:
+            return False
+        ids = {id(r) for r in shipped}
+        self.waiting = [r for r in self.waiting if id(r) not in ids]
+        for r in shipped:
+            self._ship_to_pod(r, t)
+        return True
+
+    def _poll_pod(self, t: float) -> bool:
+        """Retire pod-routed requests whose (network + remote service)
+        completion time has passed. Completion is token-accounted like a
+        local retire, so windowed throughput/latency metrics see pod
+        traffic — including its network latency — on equal terms."""
+        if not self._pod_inflight:
+            return False
+        due = [(d, r) for d, r in self._pod_inflight if d <= t]
+        if not due:
+            return False
+        self._pod_inflight = [(d, r) for d, r in self._pod_inflight if d > t]
+        for done_at, r in sorted(due, key=lambda e: e[0]):
+            r.finished = done_at
+            r.tokens = [0] * int(r.max_new_tokens)
+            r.output = np.zeros(int(r.max_new_tokens), np.int32)
+            self.done.append(r)
+            self._record(done_at, int(r.max_new_tokens))
+        return True
+
     def _form_group(self) -> Optional[List[Request]]:
         """FIFO group of admissible requests sharing the head's prompt
         length — equal-length grouping, never pad/clip to another request's
-        shape."""
+        shape. Pod-routed requests never appear here: ``_route_admissible``
+        removed them from the pool at admission."""
         now = self.now()
         length = None
         picked: List[Request] = []
@@ -199,12 +301,13 @@ class ServingRuntime:
         progress (all slots idle and no admissible request)."""
         self.start_clock()
         t_pass = time.monotonic()
+        progressed = self._route_admissible(t_pass)
+        progressed |= self._poll_pod(t_pass)
         active = [s for s in self.slots if s.group is not None]
         idle = [s for s in self.slots if s.group is None]
         self.slots = active + idle[: max(0, self.concurrency - len(active))]
         while len(self.slots) < self.concurrency:
             self.slots.append(_Slot())
-        progressed = False
         for slot in self.slots:
             if slot.group is None:
                 group = self._form_group()
@@ -245,6 +348,8 @@ class ServingRuntime:
             "requests": len(reqs),
             "queue_depth": len(self.waiting),
             "in_flight": sum(s.group is not None for s in self.slots),
+            "pod_inflight": len(self._pod_inflight),
+            "network_energy_j": self.network_energy_j,
             "interval_s": span,
         }
 
@@ -270,7 +375,7 @@ class ServingRuntime:
         tok0, done0 = self._tokens_total, len(self.done)
         while time.monotonic() - t0 < seconds:
             if not self.step():
-                if not idle_wait and not self.waiting:
+                if not idle_wait and not self.waiting and not self._pod_inflight:
                     break
                 time.sleep(5e-4)
         span = time.monotonic() - t0
@@ -283,7 +388,11 @@ class ServingRuntime:
         self.start_clock()
         t0 = time.monotonic()
         tok0, done0 = self._tokens_total, len(self.done)
-        while self.waiting or any(s.group is not None for s in self.slots):
+        while (
+            self.waiting
+            or self._pod_inflight
+            or any(s.group is not None for s in self.slots)
+        ):
             if time.monotonic() - t0 > timeout_s:
                 break
             if not self.step():

@@ -65,6 +65,8 @@ def steady(
     seed: int = 0,
     rid0: int = 0,
 ) -> List[Request]:
+    """Deterministic constant-rate arrivals: one request every
+    ``1/rate`` seconds for ``duration_s``."""
     rng = np.random.default_rng(seed)
     times = np.arange(0.0, duration_s, 1.0 / rate)
     return _materialize(times, rng, prompt_lens, new_tokens, vocab, rid0)
@@ -81,6 +83,9 @@ def bursty_poisson(
     seed: int = 0,
     rid0: int = 0,
 ) -> List[Request]:
+    """MMPP-style bursty trace: Poisson arrivals alternating between a
+    calm and a ``burst_factor``× rate every ``phase_s`` seconds, with
+    the duty cycle averaging back to ``rate``."""
     rng = np.random.default_rng(seed)
     # calm/burst rates chosen so the 50% duty cycle averages back to `rate`
     calm = 2.0 * rate / (1.0 + burst_factor)
@@ -105,6 +110,9 @@ def diurnal(
     seed: int = 0,
     rid0: int = 0,
 ) -> List[Request]:
+    """Sinusoidally modulated Poisson trace (a compressed diurnal
+    cycle): rate swings ±``depth`` around ``rate`` with period
+    ``period_s``, sampled by thinning."""
     rng = np.random.default_rng(seed)
     lam_max = rate * (1.0 + depth)
     times = []

@@ -1,0 +1,18 @@
+"""Golden RL07 fixture: a public function with no docstring, plus a
+docstring quoting a carry-field shape that disagrees with the
+*_CONTRACT tables in core/contracts.py."""
+
+
+def undocumented_public_fn(x):  # RL07: missing docstring
+    return x + 1
+
+
+def stale_shape_doc(carry):
+    """Reads ``hist_sm: Float32[Array, "W D"]`` from the carry — the
+    contract table says the history buffer is (T+W, D+4), so this spec
+    is stale on purpose."""
+    return carry["hist_sm"]
+
+
+def _private_helper(x):  # private: RL07 must not flag this
+    return x

@@ -1,0 +1,239 @@
+"""Edge↔pod offload seam tests (EXPERIMENTS.md §Offload).
+
+The placement invariants the tentpole is built around:
+
+  * pod-side compute power NEVER lands on the edge power rail — the
+    measured p channel is edge silicon + radio only, at both the twin
+    level (``OffloadSimulator.exact_all``) and the serving level
+    (pod-routed requests never enter the engine's slots);
+  * network energy is metered per shipped token on the edge rail;
+  * a pod-routed request's latency includes the network (upload
+    serialization + RTT), so windowed SLO metrics see the link;
+  * the compiled episode engine and the scalar CORAL loop are
+    byte-equivalent on the enlarged joint space.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.evaluate import run_regime
+from repro.core.episode import run_static_requests
+from repro.core.space import OFFLOAD_DIM
+from repro.device.network import OffloadSimulator, get_network
+from repro.experiments import (
+    MATRIX_OFFLOAD_CELLS,
+    OFFLOAD_REGIMES,
+    WORKLOADS,
+    offload_cell_simulator,
+    resolve_offload_targets,
+)
+from repro.serving.runtime import Request, ServingRuntime
+
+CELL = MATRIX_OFFLOAD_CELLS[0]  # edge-xavier-nx / qwen2.5-3b / mmpp
+
+
+# ------------------------------------------------------------- twin rail
+def test_pod_power_never_on_edge_rail():
+    """The measured power channel is the edge rail: pod DVFS moves τ but
+    not p (demand-saturated rows draw identical power at every pod
+    frequency), and the radio terms are exactly the documented
+    ``radio_idle + ship_energy · φ·τ`` increment over the edge-only
+    power."""
+    sim = offload_cell_simulator(CELL, noise=0.0)
+    grid = sim.space.grid()
+    cols = {n: grid[:, i] for i, n in enumerate(sim.space.names)}
+    phi = cols[OFFLOAD_DIM]
+    tau, p = sim.exact_all(grid)
+    _, p_edge = sim.capacity_all(grid)
+
+    net = sim.network
+    radio = np.where(phi > 0.0, net.radio_idle_w + net.ship_energy_j * phi * tau, 0.0)
+    np.testing.assert_allclose(p, p_edge + radio, rtol=1e-12)
+
+    # φ=0 rows: pure edge rail, no radio terms at all
+    np.testing.assert_allclose(p[phi == 0.0], p_edge[phi == 0.0], rtol=1e-12)
+
+    # demand-saturated φ>0 rows: pod frequency changes τ-side routing
+    # capacity only — the edge rail cannot see the pod's own draw
+    sat = (phi > 0.0) & (tau >= sim.demand - 1e-9)
+    assert sat.any(), "calibrated demand should saturate some joint rows"
+    key_names = [n for n in sim.space.names if n != "pod_tpu_freq"]
+    by_edge_knobs = {}
+    for row, pw, is_sat in zip(grid, p, sat):
+        if not is_sat:
+            continue
+        k = tuple(row[sim.space.names.index(n)] for n in key_names)
+        by_edge_knobs.setdefault(k, []).append(pw)
+    multi = [v for v in by_edge_knobs.values() if len(v) > 1]
+    assert multi, "need saturated rows differing only in pod_tpu_freq"
+    for powers in multi:
+        assert max(powers) - min(powers) < 1e-9
+
+
+def test_offload_capacity_is_two_path_min():
+    """φ=0 degenerates to the plain edge path; φ=1 to the pod path."""
+    sim = offload_cell_simulator(CELL, noise=0.0)
+    sim.demand = float("inf")
+    grid = sim.space.grid()
+    cols = {n: grid[:, i] for i, n in enumerate(sim.space.names)}
+    cap, _ = sim.capacity_all(grid)
+    phi = cols[OFFLOAD_DIM]
+    pod_only = phi == 1.0
+    if pod_only.any():
+        np.testing.assert_allclose(
+            cap[pod_only], sim.offload_cap(cols["pod_tpu_freq"][pod_only])
+        )
+    # mixed rows can never beat the sum of both pure paths
+    edge_best = sim.edge_only_max()
+    pod_best = float(sim.offload_cap(np.asarray([cols["pod_tpu_freq"].max()]))[0])
+    assert cap.max() <= edge_best + pod_best + 1e-9
+
+
+# ------------------------------------------------------- serving runtime
+class _CountingEngine:
+    """Minimal engine double: counts entries so the test can prove
+    pod-routed requests never reach the edge compute path."""
+
+    batch = 4
+
+    def __init__(self):
+        self.prefill_calls = 0
+        self.decode_calls = 0
+
+    def prefill(self, prompts):
+        self.prefill_calls += 1
+        return {}, np.zeros((prompts.shape[0], prompts.shape[1], 8))
+
+    def decode(self, cache, tok):
+        self.decode_calls += 1
+        return cache, np.zeros((tok.shape[0], 1, 8))
+
+
+def _run_split(frac, n=8, max_new=4, prompt_len=8):
+    net = get_network("lte-uplink")
+    eng = _CountingEngine()
+    rt = ServingRuntime(eng, concurrency=2)
+    rt.attach_pod(net, pod_time_per_token=1e-3)
+    rt.set_offload(frac)
+    rng = np.random.default_rng(0)
+    for i in range(n):
+        rt.submit(
+            Request(i, rng.integers(0, 99, prompt_len, dtype=np.int32), max_new,
+                    arrival_s=0.0)
+        )
+    rt.drain()
+    return net, eng, rt
+
+
+def test_pod_routed_requests_never_enter_engine():
+    net, eng, rt = _run_split(1.0)
+    assert len(rt.done) == 8
+    assert all(r.route == "pod" for r in rt.done)
+    assert eng.prefill_calls == 0 and eng.decode_calls == 0
+    assert rt.prefills == 0  # the edge compute rail stayed dark
+
+
+def test_deterministic_fractional_routing():
+    net, eng, rt = _run_split(0.5)
+    pod = [r for r in rt.done if r.route == "pod"]
+    edge = [r for r in rt.done if r.route == "edge"]
+    assert len(pod) == 4 and len(edge) == 4
+    assert eng.prefill_calls > 0  # edge share genuinely ran locally
+    # same seed + same knob ⇒ identical split (accumulator, not RNG)
+    _, _, rt2 = _run_split(0.5)
+    assert [r.route for r in rt2.done] == [r.route for r in rt.done]
+
+
+def test_network_energy_metered_per_shipped_token():
+    net, eng, rt = _run_split(0.5, n=8, max_new=4, prompt_len=8)
+    pod = [r for r in rt.done if r.route == "pod"]
+    expect = sum(
+        (r.prompt.size + r.max_new_tokens) * net.ship_energy_per_token_j
+        for r in pod
+    )
+    assert rt.network_energy_j == pytest.approx(expect, rel=1e-12)
+    # no offload, no radio energy
+    _, _, rt0 = _run_split(0.0)
+    assert rt0.network_energy_j == 0.0
+
+
+def test_pod_latency_includes_network():
+    """SLO accounting sees the link: a pod-routed completion can never
+    finish before upload serialization + RTT + remote service."""
+    net, eng, rt = _run_split(0.5, prompt_len=8, max_new=4)
+    pod = [r for r in rt.done if r.route == "pod"]
+    assert pod
+    for r in pod:
+        lat = r.finished - rt._effective_arrival(r)
+        floor = (
+            r.prompt.size * net.token_bytes / net.bandwidth
+            + net.rtt_s
+            + r.max_new_tokens * 1e-3
+        )
+        assert lat >= floor - 1e-9
+
+
+def test_offload_knob_requires_network():
+    from repro.device import get_profile
+    from repro.serving.controller import ServingController
+
+    prof = get_profile("edge-xavier-nx")
+    space = offload_cell_simulator(CELL, noise=0.0).space
+    rt = ServingRuntime(_CountingEngine(), concurrency=2)
+    with pytest.raises(ValueError, match="offload_frac"):
+        ServingController(rt, space, [], tau_target=1.0, profile=prof)
+
+
+# ------------------------------------------------- engine ↔ scalar loop
+def test_engine_matches_scalar_on_offload_cell():
+    """The compiled episode engine replays the OffloadSimulator noise
+    protocol byte-for-byte on the enlarged joint space."""
+    sim0 = offload_cell_simulator(CELL, noise=0.0)
+    targets = resolve_offload_targets(CELL, sim0)
+    assert targets.mode == "dual" and np.isfinite(targets.p_budget)
+    land_tau, land_p = sim0.exact_all()
+    noise = WORKLOADS[CELL.workload].noise
+    seeds = (0, 1)
+    reqs = [
+        dict(space=sim0.space, land_tau=land_tau, land_p=land_p,
+             targets=targets, seed=s, noise=noise)
+        for s in seeds
+    ]
+    eps = run_static_requests(reqs, iters=12)
+    for seed, ep in zip(seeds, eps):
+        dev = offload_cell_simulator(CELL, seed=seed)
+        out, tr = run_regime(sim0.space, dev, targets, iters=12, seed=seed)
+        assert [tuple(c) for c in tr.configs] == [tuple(c) for c in ep.configs]
+        np.testing.assert_allclose(tr.taus, ep.taus, rtol=1e-12)
+        np.testing.assert_allclose(tr.powers, ep.powers, rtol=1e-12)
+        assert tuple(out.config) == tuple(ep.outcome.config)
+        assert out.tau == pytest.approx(ep.outcome.tau, rel=1e-12)
+        assert out.power == pytest.approx(ep.outcome.power, rel=1e-12)
+
+
+def test_run_offload_cell_records_identical_across_engines():
+    from repro.experiments.matrix import run_offload_cell
+
+    a = run_offload_cell(CELL, iters=12, seeds=(0, 1), engine="compiled")
+    b = run_offload_cell(CELL, iters=12, seeds=(0, 1), engine="scalar")
+    assert a == b
+
+
+def test_offload_regime_calibration_provenance():
+    """The recorded offload block carries the calibration the gates rest
+    on: λ = demand_factor × edge-only max, τ* = slo_frac × λ, and the
+    φ=0 restriction of the joint grid has no feasible row."""
+    from repro.experiments.matrix import run_offload_cell
+
+    rec = run_offload_cell(CELL, iters=12, seeds=(0,))
+    o = rec["offload"]
+    regime = OFFLOAD_REGIMES[CELL.regime]
+    assert o["network"] == regime.network
+    assert o["demand"] == pytest.approx(
+        regime.demand_factor * o["edge_only_max"], rel=1e-3
+    )
+    assert rec["tau_target"] == pytest.approx(
+        regime.slo_frac * o["demand"], rel=1e-3
+    )
+    assert o["no_offload"]["feasible_rows"] == 0
+    assert o["no_offload"]["violates_tau"]

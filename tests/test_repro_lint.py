@@ -25,6 +25,7 @@ def _codes(violations):
         ("rl03_nondeterminism.py", "RL03", 2),  # clock + unsorted dump
         ("rl04_dtype.py", "RL04", 2),  # missing dtype + float64
         ("rl05_interpret.py", "RL05", 3),  # default, env read, backend
+        ("rl07_docstring.py", "RL07", 2),  # missing doc + stale shape
     ],
 )
 def test_rule_fires_on_golden_fixture(fixture, code, min_hits):

@@ -1,0 +1,68 @@
+"""Doc-consistency walker: every fenced ``python`` block in README.md,
+EXPERIMENTS.md and docs/*.md must at least compile, and every import it
+names must resolve against the live tree — so renaming a module or a
+public symbol breaks CI instead of silently stranding the prose
+(EXPERIMENTS.md §Static analysis).
+
+Blocks are compiled, not executed: only their top-level ``import`` /
+``from … import …`` statements run, so a documented benchmark
+invocation never fires during the check.
+
+    PYTHONPATH=src python -m tools.check_docs
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def doc_files() -> list[Path]:
+    out = [REPO_ROOT / "README.md", REPO_ROOT / "EXPERIMENTS.md"]
+    docs = REPO_ROOT / "docs"
+    if docs.is_dir():
+        out.extend(sorted(docs.glob("*.md")))
+    return [p for p in out if p.is_file()]
+
+
+def check_block(name: str, source: str, errors: list[str]) -> None:
+    try:
+        tree = ast.parse(source, filename=name)
+    except SyntaxError as e:
+        errors.append(f"{name}: syntax error at line {e.lineno}: {e.msg}")
+        return
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            stmt = ast.get_source_segment(source, node) or "<import>"
+            try:
+                exec(compile(ast.Module([node], []), name, "exec"), {})
+            except Exception as e:
+                errors.append(f"{name}: `{stmt}` failed: {e!r}")
+
+
+def main() -> int:
+    errors: list[str] = []
+    blocks = 0
+    for path in doc_files():
+        rel = path.relative_to(REPO_ROOT).as_posix()
+        for i, m in enumerate(_FENCE.finditer(path.read_text())):
+            blocks += 1
+            # fence offset -> real line numbers in the error name
+            line = path.read_text()[: m.start(1)].count("\n") + 1
+            check_block(f"{rel}:{line} (block {i + 1})", m.group(1), errors)
+    for e in errors:
+        print(f"  - {e}", file=sys.stderr)
+    if errors:
+        print(f"check_docs: FAILED ({len(errors)} broken blocks)", file=sys.stderr)
+        return 1
+    print(f"check_docs: {blocks} fenced python blocks across "
+          f"{len(doc_files())} docs compile and import cleanly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,9 @@ without installing jax. Rule catalog:
   RL05  Pallas kernels deriving ``interpret=`` themselves instead of
         routing through repro.kernels.runtime.default_interpret
   RL06  dead module — unreachable in the import graph over src/repro
+  RL07  docstring contract — public format-zone functions without a
+        docstring, and docstring shape specs that disagree with the
+        *_CONTRACT tables in core/contracts.py
 
 Escape hatch: ``# repro-lint: disable=RLxx — reason`` on the flagged
 line (or the comment line directly above it). The reason is mandatory;

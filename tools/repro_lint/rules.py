@@ -1,4 +1,4 @@
-"""The RL01–RL06 rule implementations.
+"""The RL01–RL07 rule implementations.
 
 Every rule is deliberately scoped (see each rule's ``in_scope``) to the
 files where its invariant is load-bearing, because repo-specific
@@ -10,7 +10,8 @@ violating snippets live.
 from __future__ import annotations
 
 import ast
-from typing import Iterator, List, Optional, Sequence, Set, Tuple
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 from tools.repro_lint.engine import FIXTURE_DIR, Context, Module, Violation
 
@@ -714,6 +715,119 @@ class DeadModuleRule(Rule):
             )
 
 
+# --------------------------------------------------------------- RL07
+def _contract_spec_sets(ctx: Context) -> Dict[str, Set[str]]:
+    """field name -> the set of jaxtyping spec strings any *_CONTRACT
+    table in core/contracts.py assigns it. A set, not a single spec:
+    some fields legitimately appear in several containers with
+    different shapes (``p_budget`` is a scalar in the drift carry and a
+    (B,) column in the fleet batch)."""
+    table: Dict[str, Set[str]] = {}
+    contracts = ctx.module("src/repro/core/contracts.py")
+    if contracts is not None:
+        tree = contracts.tree
+    else:
+        # single-file invocations (golden fixtures, editor integration)
+        # don't load contracts.py as a linted module — read it directly
+        path = ctx.repo_root / "src" / "repro" / "core" / "contracts.py"
+        if not path.is_file():
+            return table
+        tree = ast.parse(path.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, val = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            tgt, val = node.target, node.value
+        else:
+            continue
+        if (
+            isinstance(tgt, ast.Name)
+            and tgt.id.endswith("_CONTRACT")
+            and isinstance(val, ast.Dict)
+        ):
+            for k, v in zip(val.keys, val.values):
+                if (
+                    isinstance(k, ast.Constant)
+                    and isinstance(k.value, str)
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)
+                ):
+                    table.setdefault(k.value, set()).add(v.value)
+    return table
+
+
+class DocstringContractRule(Rule):
+    """Public API docs must exist and must not lie about shapes.
+
+    The format-zone modules (the ruff-format-clean directories: core/,
+    serving/, experiments/, device/) are the repo's documented surface.
+    Two invariants (see docs/ARCHITECTURE.md):
+
+    - every module-level public function carries a docstring;
+    - every jaxtyping-style field spec quoted in a docstring
+      (``hist_sm: Float32[Array, "T+W D+4"]``) agrees with the
+      *_CONTRACT tables in core/contracts.py — a stale shape in prose
+      is worse than no shape, because readers trust it over the code.
+    """
+
+    code = "RL07"
+    name = "docstring-contract"
+
+    _ZONE = (
+        "src/repro/core/",
+        "src/repro/serving/",
+        "src/repro/experiments/",
+        "src/repro/device/",
+    )
+    _SPEC = re.compile(
+        r"(\w+)\s*:\s*(Float32|Float64|Int32|Bool)\s*"
+        r'\[\s*Array\s*,\s*"([^"]*)"\s*\]'
+    )
+
+    def in_scope(self, relpath: str) -> bool:
+        return relpath.startswith(self._ZONE)
+
+    def check(self, mod: Module, ctx: Context) -> Iterator[Violation]:
+        for node in mod.tree.body:
+            if (
+                isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and not node.name.startswith("_")
+                and ast.get_docstring(node) is None
+            ):
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    f"public function `{node.name}` has no docstring",
+                    "one sentence on inputs/outputs (array shapes included)",
+                )
+        table = _contract_spec_sets(ctx)
+        if not table:
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(
+                node, (ast.Module, ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ):
+                continue
+            doc = ast.get_docstring(node)
+            if not doc:
+                continue
+            line = getattr(node, "lineno", 1)
+            # docstrings wrap mid-spec; normalize whitespace before matching
+            for m in self._SPEC.finditer(" ".join(doc.split())):
+                field, dtype, dims = m.groups()
+                want = table.get(field)
+                if want is None:
+                    continue  # not a contracted field; prose is free
+                got = f'{dtype}[Array, "{dims}"]'
+                if got not in want:
+                    yield Violation(
+                        mod.relpath, line, 1, self.code,
+                        f"docstring says `{field}: {got}` but "
+                        f"core/contracts.py says {sorted(want)}",
+                        "update the docstring (or the contract table) so "
+                        "they agree",
+                    )
+
+
 ALL_RULES: Tuple[Rule, ...] = (
     TracedBranchRule(),
     DonatedUseRule(),
@@ -721,4 +835,5 @@ ALL_RULES: Tuple[Rule, ...] = (
     DtypeDisciplineRule(),
     InterpretRoutingRule(),
     DeadModuleRule(),
+    DocstringContractRule(),
 )
