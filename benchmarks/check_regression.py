@@ -21,6 +21,11 @@ Fails (exit 1) on
     0.85 joint-oracle gate, recording a true power violation, or whose
     presets / no-offload ablation became feasible — the calibrated
     demand must keep the placement knob necessary;
+  - a multi-tenant cotenant cell (schema v5 ``cotenant_cells``) scoring
+    below the 0.85 joint-oracle gate, recording a shared-rail power
+    violation, or whose presets / per-tenant-greedy combination became
+    feasible — the calibrated floors must keep joint slot/DVFS
+    negotiation necessary;
   - a kernel record whose max |err| vs the reference implementation grew
     past 10x its baseline, with an absolute floor of 1e-5 for near-exact
     baselines (interpret-mode wall time is never gated). Kernel records
@@ -135,10 +140,11 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
     for c in fresh.get("drift_cells", ()):
         key = (c["device"], c["model"], c["workload"], c["regime"])
         fresh_cells[key] = c["adaptive"]["final_score"]
-    # offload cells gate on the joint-space CORAL score
-    for c in fresh.get("offload_cells", ()):
-        key = (c["device"], c["model"], c["workload"], c["regime"])
-        fresh_cells[key] = c["coral"]["score"]
+    # offload and cotenant cells gate on the joint-space CORAL score
+    for family in ("offload_cells", "cotenant_cells"):
+        for c in fresh.get(family, ()):
+            key = (c["device"], c["model"], c["workload"], c["regime"])
+            fresh_cells[key] = c["coral"]["score"]
     compared = 0
     for key, floor in floors.items():
         score = fresh_cells.get(key)
@@ -196,6 +202,33 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
             f"matrix: {fsum['offload_feasible_baselines']} offload "
             "presets/ablations were feasible (calibrated demand must keep "
             "the un-offloaded edge and the static presets infeasible)"
+        )
+    # Cotenant regimes (EXPERIMENTS.md §Multi-tenant): the joint
+    # slots × shared-DVFS search must stay efficient AND the scenario
+    # must keep its point — zero shared-rail violations, and zero
+    # feasible presets or per-tenant-greedy combinations (if a preset
+    # or the greedy split becomes feasible, the calibrated floors no
+    # longer force joint negotiation).
+    from repro.experiments.matrix import COTENANT_CORAL_GATE
+
+    for c in fresh.get("cotenant_cells", ()):
+        if c["coral"]["score"] < COTENANT_CORAL_GATE:
+            errors.append(
+                f"matrix:{c['device']}/{c['model']}/{c['regime']}: "
+                f"cotenant CORAL score {c['coral']['score']:.3f} < "
+                f"{COTENANT_CORAL_GATE}"
+            )
+    if fsum.get("cotenant_power_violations"):
+        errors.append(
+            f"matrix: {fsum['cotenant_power_violations']} shared-rail "
+            "power violations in cotenant cells"
+        )
+    if fsum.get("cotenant_feasible_baselines"):
+        errors.append(
+            f"matrix: {fsum['cotenant_feasible_baselines']} cotenant "
+            "presets/greedy combinations were feasible (calibrated floors "
+            "must keep per-tenant-greedy and the static presets "
+            "infeasible)"
         )
     # Episode-engine wall-clock: fresh full-grid speedups must hold 75%
     # of max(baseline, acceptance floor) — the floor keeps the gate

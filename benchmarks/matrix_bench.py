@@ -6,7 +6,10 @@ BENCH_matrix.md summary table, and enforces the acceptance gates:
 every single-target cell ≥ 0.9 normalized-vs-oracle, zero power-budget
 violations in dual-constraint cells, every edge↔pod offload cell ≥ 0.85
 of the batched joint oracle with zero power violations and zero
-feasible presets/ablations (EXPERIMENTS.md §Offload), and (full runs)
+feasible presets/ablations (EXPERIMENTS.md §Offload), every multi-tenant
+cotenant cell ≥ 0.85 of the joint oracle with zero shared-rail
+violations and every preset + the per-tenant-greedy combination
+infeasible (EXPERIMENTS.md §Multi-tenant), and (full runs)
 the compiled
 episode engine ≥ 10×/5× over the scalar episode loops on the
 static/drift grids — both layers measured best-of-N on identical
@@ -133,6 +136,7 @@ def bench_episode_engine(cells, iters=10, seeds=(0, 1, 2), reps=3) -> dict:
 
 def bench_matrix_suite():
     from repro.experiments import (
+        COTENANT_CORAL_GATE,
         DRIFT_ADAPTIVE_GATE,
         DRIFT_SEPARATION,
         DRIFT_STATIC_CEILING,
@@ -145,8 +149,10 @@ def bench_matrix_suite():
     )
     from repro.experiments.scenarios import (
         FULL_MATRIX_WORKLOADS,
+        MATRIX_COTENANT_CELLS,
         MATRIX_DRIFT_CELLS,
         MATRIX_OFFLOAD_CELLS,
+        QUICK_COTENANT_CELLS,
         QUICK_DRIFT_CELLS,
         QUICK_OFFLOAD_CELLS,
     )
@@ -160,11 +166,13 @@ def bench_matrix_suite():
     if QUICK:
         cells = enumerate_cells() + list(QUICK_DRIFT_CELLS)
         offload_cells = QUICK_OFFLOAD_CELLS
+        cotenant_cells = QUICK_COTENANT_CELLS
     else:
         cells = enumerate_cells(workloads=FULL_MATRIX_WORKLOADS) + list(
             MATRIX_DRIFT_CELLS
         )
         offload_cells = MATRIX_OFFLOAD_CELLS
+        cotenant_cells = MATRIX_COTENANT_CELLS
     regenerate = ("QUICK=1 " if QUICK else "") + (
         "PYTHONPATH=src python -m benchmarks.matrix_bench"
     )
@@ -179,6 +187,7 @@ def bench_matrix_suite():
         regenerate=regenerate,
         quick=QUICK,
         offload_cells=offload_cells,
+        cotenant_cells=cotenant_cells,
     )
     elapsed_us = (time.perf_counter() - t0) * 1e6
     record["episode_engine"] = engine_probe
@@ -229,6 +238,18 @@ def bench_matrix_suite():
             f"coral={c['coral']['score']:.3f} "
             f"demand={c['offload']['demand']:.1f} "
             f"edge_max={c['offload']['edge_only_max']:.1f}",
+        )
+    for c in record["cotenant_cells"]:
+        floors = "+".join(
+            f"{t['floor']:.0f}" for t in c["cotenant"]["tenants"]
+        )
+        g = c["cotenant"]["greedy"]
+        greedy_feasible = not (g["violates_tau"] or g["violates_power"])
+        row(
+            f"cotenant_{c['regime']}_{c['device']}_{c['model']}",
+            0.0,
+            f"coral={c['coral']['score']:.3f} floors={floors} "
+            f"greedy_feasible={greedy_feasible}",
         )
 
     failures = []
@@ -289,6 +310,29 @@ def bench_matrix_suite():
             f"{s['offload_feasible_baselines']} offload presets/ablations "
             "were feasible (gate: 0 — demand must break the un-offloaded "
             "edge and the power cap must break the all-hi preset)"
+        )
+    # Multi-tenant acceptance (EXPERIMENTS.md §Multi-tenant): CORAL must
+    # hold ≥ COTENANT_CORAL_GATE of the batched joint oracle on every
+    # cotenant cell with zero shared-rail violations, while every static
+    # preset and the per-tenant-greedy combination miss a floor or bust
+    # the cap — joint negotiation must be demonstrably necessary.
+    for c in record["cotenant_cells"]:
+        name = f"{c['device']}/{c['model']}/{c['regime']}"
+        if c["coral"]["score"] < COTENANT_CORAL_GATE:
+            failures.append(
+                f"cotenant cell {name}: CORAL joint-space score "
+                f"{c['coral']['score']:.3f} < {COTENANT_CORAL_GATE}"
+            )
+    if s.get("cotenant_power_violations"):
+        failures.append(
+            f"{s['cotenant_power_violations']} shared-rail power "
+            "violations in cotenant cells (gate: 0)"
+        )
+    if s.get("cotenant_feasible_baselines"):
+        failures.append(
+            f"{s['cotenant_feasible_baselines']} cotenant presets/greedy "
+            "combinations were feasible (gate: 0 — the floors must force "
+            "joint slot/DVFS negotiation)"
         )
     # Episode-engine wall-clock acceptance (full grid only: the trimmed
     # QUICK batch under-amortizes the compiled call). A miss triggers

@@ -9,10 +9,14 @@ from repro.core.episode import (  # noqa: F401
     run_drift_requests,
     run_static_requests,
 )
+from repro.core.coral import joint_headroom  # noqa: F401
 from repro.core.evaluate import (  # noqa: F401
+    CellRecord,
+    CellSpec,
     DriftTrace,
     RegimeTargets,
     measurements_to_feasible,
+    run_cell,
     run_coral,
     run_coral_scalar,
     run_drift_regime,

@@ -134,6 +134,36 @@ TWIN_CONTRACT: Dict[str, str] = {
     "land_p": 'Float64[Array, "N0"]',
 }
 
+# ------------------------------------------------------- TWIN_RNG_PROTOCOL
+#
+# The behavioral contract every device twin behind ``device.build_twin``
+# honors (DeviceSimulator, DriftingSimulator, OffloadSimulator,
+# CotenantSimulator — and anything the factory grows next). The compiled
+# episode engine replays a twin's noise stream from (seed, noise) alone,
+# so the protocol is byte-exact, not approximate:
+#
+#   state      one ``np.random.default_rng(seed)`` Generator per twin,
+#              advanced only by the measurement calls below;
+#   measure    exact (τ, p) then two *sequential* scalar draws —
+#              ``τ *= 1 + rng.normal(0, noise)`` then the same for p —
+#              clamped to ≥ 1e-9;
+#   measure_all  exact arrays then ONE config-major block
+#              ``z = rng.normal(0, noise, size=(N, 2))`` with
+#              ``τ *= 1 + z[:, 0]``, ``p *= 1 + z[:, 1]``, clamped —
+#              the stream equals N sequential ``measure`` calls;
+#   noise=0.0  must not draw at all (the ground-truth twin oracles use);
+#   exact/exact_all  pure float64, no RNG advance, no clamping of the
+#              model output beyond the twin's own physics;
+#   channels   whatever the twin's (τ, p) *mean* is fair game — offload
+#              twins report served throughput, cotenant twins the joint
+#              headroom min_k τ_k/floor_k — but the noise protocol above
+#              applies to the reported pair unchanged.
+#
+# tests/test_episode.py and tests/test_cotenant.py pin scalar↔compiled
+# byte-equivalence through this contract; a twin that draws in a
+# different order or shape breaks replay silently, so new twins must
+# copy the reference implementation in ``device/simulator.py``.
+
 _DTYPES = {"Float32": "float32", "Float64": "float64", "Int32": "int32",
            "Bool": "bool"}
 _SPEC_RE = re.compile(r'^(\w+)\[Array, "(.*)"\]$')

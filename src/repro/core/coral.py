@@ -43,6 +43,22 @@ from repro.core.space import (
 )
 
 
+def joint_headroom(taus, floors) -> np.ndarray:
+    """Scalarize per-tenant throughputs against per-tenant τ floors:
+    min_k τ_k/floor_k over the leading (tenant) axis.
+
+    This is how multi-tenant cells ride CORAL's *dual* mode unchanged
+    (EXPERIMENTS.md §Multi-tenant): the optimizer's τ channel carries the
+    joint headroom with ``tau_target = 1.0`` — headroom ≥ 1 ⇔ every
+    tenant meets its floor — while the p channel stays the shared rail
+    draw. The twin (``device.cotenant``), the batched joint oracle and
+    the serving controller's measured feedback all call this one helper
+    so the three paths can never disagree on the scalarization."""
+    taus = np.asarray(taus, np.float64)
+    f = np.asarray(floors, np.float64).reshape(-1, *([1] * (taus.ndim - 1)))
+    return (taus / f).min(axis=0)
+
+
 @dataclasses.dataclass
 class Observation:
     """One measured (config, τ, p, reward) sample — the scalar-loop unit

@@ -1,16 +1,22 @@
 """The common evaluation loop (paper Fig. 2): optimizer proposes a config,
 the device applies it and runs inference, measured (τ, p) feed back.
 
-``run_regime`` is the regime-parameterized entry the scenario matrix
-uses: a ``RegimeTargets`` names the constraint shape (CORAL mode, τ
-target, power budget) so one runner serves single-target and strict
-dual-constraint cells alike.
+``run_cell(CellSpec)`` is the one public runner: regime family
+(stationary / drift / offload / cotenant) is *data on the spec* — the
+cell's regime name — and the returned ``CellRecord`` tags the family
+next to the JSON-ready record. The older per-family entries
+(``run_regime``, ``run_drift_regime``, ``run_coral`` here;
+``run_cell``/``run_offload_cell`` in ``experiments.matrix``) remain as
+thin deprecated aliases for one release: ``run_coral`` and
+``run_drift_regime`` stay load-bearing *internally* as the scalar
+executable specification the compiled episode engine is byte-checked
+against, but new callers should go through ``run_cell``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.core.baselines import Outcome
 from repro.core.coral import CORAL
@@ -45,6 +51,64 @@ class RegimeTargets:
 
     def feasible(self, tau: float, power: float) -> bool:
         return tau >= self.tau_target and power <= self.p_budget
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One runnable scenario cell, fully specified as data.
+
+    ``cell`` is a ``repro.experiments.scenarios.Cell`` (its regime name
+    selects the family); ``iters=None`` takes the family's calibrated
+    measurement budget (10 static, ``OFFLOAD_ITERS`` offload,
+    ``COTENANT_ITERS`` cotenant; drift cells pace by intervals instead).
+    """
+
+    cell: object
+    iters: Optional[int] = None
+    seeds: Sequence[int] = (0, 1, 2)
+    window: int = 10
+    engine: str = "compiled"
+
+
+@dataclasses.dataclass(frozen=True)
+class CellRecord:
+    """A family-tagged, JSON-ready cell record (``family`` is one of
+    "static" | "drift" | "offload" | "cotenant"; ``record`` is the
+    matching ``BENCH_matrix`` array entry)."""
+
+    family: str
+    record: dict
+
+
+def run_cell(spec: CellSpec) -> CellRecord:
+    """Run one cell of any family — the unified runner entrypoint.
+
+    Dispatches on the spec's regime name: cotenant and offload regimes
+    run CORAL over their joint grids at their calibrated budgets, drift
+    regimes run the adaptive-vs-static ablation, everything else runs
+    the stationary CORAL-vs-baselines loop. Imports are lazy — the
+    regime tables and record assemblers live in ``repro.experiments``,
+    which imports this module."""
+    from repro.experiments import matrix, scenarios
+
+    cell, seeds = spec.cell, tuple(spec.seeds)
+    kw = dict(seeds=seeds, window=spec.window, engine=spec.engine)
+    if cell.regime in scenarios.COTENANT_REGIMES:
+        iters = matrix.COTENANT_ITERS if spec.iters is None else spec.iters
+        return CellRecord(
+            "cotenant", matrix.run_cotenant_cell(cell, iters=iters, **kw)
+        )
+    if cell.regime in scenarios.OFFLOAD_REGIMES:
+        iters = matrix.OFFLOAD_ITERS if spec.iters is None else spec.iters
+        return CellRecord(
+            "offload", matrix.run_offload_cell(cell, iters=iters, **kw)
+        )
+    if scenarios.REGIMES[cell.regime].dynamic:
+        return CellRecord("drift", matrix.run_drift_cell(cell, **kw))
+    iters = 10 if spec.iters is None else spec.iters
+    return CellRecord(
+        "static", matrix.run_static_cell(cell, iters=iters, **kw)
+    )
 
 
 def run_regime(

@@ -239,6 +239,62 @@ def offload_space(edge_kind: str) -> ConfigSpace:
     )
 
 
+def cotenant_space(edge_kind: str, n_tenants: int = 2) -> ConfigSpace:
+    """The joint multi-tenant grid for one edge profile: per-tenant decode
+    slot allocations × shared DVFS.
+
+    Five dimensions for the default two tenants — the same D as every
+    profile/offload space, so cotenant episodes batch into the same
+    compiled ``jit(vmap(scan))`` call as the rest of the scenario matrix:
+
+        gpu_freq   — the shared accelerator ladder, coarsened to ≤4
+                     levels (ends kept) to hold N in the low hundreds;
+        mem_freq   — the shared memory ladder, unchanged;
+        cpu_freq   — the shared host ladder, coarsened to 3 levels (the
+                     host stage is per-tenant work but the clock is one
+                     rail-wide knob);
+        slots_t0   — tenant 0's decode-slot allocation (streams);
+        slots_t1   — tenant 1's decode-slot allocation.
+
+    There is no ``concurrency`` or cores dimension: total stream pressure
+    is the *sum* of the slot knobs (``CotenantSimulator`` feeds it into
+    the shared contention kappa), so Alg. 2's cores/concurrency role
+    masks are empty no-ops here, exactly as in ``offload_space``."""
+    edge = profile_space(edge_kind)
+    gpu = edge.dims[edge.names.index("gpu_freq")].values
+    if len(gpu) > 4:
+        keep = np.linspace(0, len(gpu) - 1, 4).round().astype(int)
+        gpu = tuple(gpu[i] for i in keep)
+    mem = edge.dims[edge.names.index("mem_freq")].values
+    cpu = edge.dims[edge.names.index("cpu_freq")].values
+    cpu_keep = np.linspace(0, len(cpu) - 1, 3).round().astype(int)
+    slot_dims = tuple(
+        Dim(f"{TENANT_SLOT_PREFIX}{k}", (1.0, 2.0, 3.0))
+        for k in range(n_tenants)
+    )
+    return ConfigSpace(
+        dims=(
+            Dim("gpu_freq", gpu),
+            Dim("mem_freq", mem),
+            Dim("cpu_freq", tuple(cpu[i] for i in cpu_keep)),
+        )
+        + slot_dims
+    )
+
+
+def tenant_slot_indices(space: ConfigSpace) -> Tuple[int, ...]:
+    """Indices of the per-tenant slot dims (``slots_t0``, ``slots_t1``, …)
+    in tenant order — empty for single-tenant spaces. The serving
+    controller and the cotenant twin both locate the allocation knobs
+    through this instead of hard-coding positions."""
+    found = [
+        (int(n[len(TENANT_SLOT_PREFIX) :]), i)
+        for i, n in enumerate(space.names)
+        if n.startswith(TENANT_SLOT_PREFIX)
+    ]
+    return tuple(i for _, i in sorted(found))
+
+
 # Dimension roles used by Alg. 2's power-optimization heuristic
 CORES_DIM_CANDIDATES = ("host_cores", "cpu_cores")
 CONCURRENCY_DIM = "concurrency"
@@ -247,6 +303,10 @@ CPU_FREQ_DIM_CANDIDATES = ("host_cpu_freq", "cpu_freq")
 # name so the serving controller and admission seam can locate it
 # without hard-coding a dimension index.
 OFFLOAD_DIM = "offload_frac"
+# Per-tenant slot-allocation knobs of the joint cotenant space are named
+# ``slots_t<k>`` (tenant index k) — a prefix role, not a fixed name,
+# because the tenant count is a property of the space.
+TENANT_SLOT_PREFIX = "slots_t"
 
 
 # ---------------------------------------------------------------------------

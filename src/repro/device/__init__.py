@@ -16,6 +16,8 @@ from repro.device.perfmodel import (  # noqa: F401
     RooflineTerms,
     model_roofline_terms,
 )
+from repro.device.cotenant import CotenantSimulator  # noqa: F401
+from repro.device.factory import build_twin  # noqa: F401
 from repro.device.power import PowerModel  # noqa: F401
 from repro.device.simulator import (  # noqa: F401
     DeviceSimulator,

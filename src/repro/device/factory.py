@@ -1,0 +1,44 @@
+"""``build_twin``: one constructor for every device-twin flavor.
+
+The scenario matrix used to hand-assemble a simulator per regime family
+(``cell_simulator`` / ``drifting_cell_simulator`` /
+``offload_cell_simulator`` / ``cotenant_cell_simulator``). This factory
+folds that dispatch into ``device``: a ``Cell``'s regime name alone
+decides which twin is built —
+
+  stationary regime  → ``DeviceSimulator``         (single-model edge)
+  drift regime       → ``DriftingSimulator``       (non-stationary wrap)
+  offload regime     → ``OffloadSimulator``        (edge↔pod joint grid)
+  cotenant regime    → ``CotenantSimulator``       (multi-tenant rail)
+
+Every twin honors the same measurement surface and the exact-RNG noise
+protocol (``core.contracts`` §TWIN_RNG_PROTOCOL): ``measure`` /
+``measure_all`` / ``exact`` / ``exact_all`` over a ``.space`` grid, with
+seeded multiplicative noise replayable by the compiled episode engine.
+
+Imports from ``repro.experiments.scenarios`` are deliberately lazy: the
+regime tables live in experiments (they are calibration data, not device
+physics), and ``device`` must stay importable without them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def build_twin(cell, noise: Optional[float] = None, seed: int = 0):
+    """Build the device twin a cell's regime calls for.
+
+    ``noise=None`` takes the cell's workload-trace noise (the noisy
+    device the optimizer sees); ``noise=0.0`` is the ground-truth twin
+    scoring and oracles use. Raises ``KeyError`` on an unknown regime.
+    """
+    from repro.experiments import scenarios as sc
+
+    if cell.regime in sc.COTENANT_REGIMES:
+        return sc.cotenant_cell_simulator(cell, noise=noise, seed=seed)
+    if cell.regime in sc.OFFLOAD_REGIMES:
+        return sc.offload_cell_simulator(cell, noise=noise, seed=seed)
+    regime = sc.REGIMES[cell.regime]
+    if regime.dynamic:
+        return sc.drifting_cell_simulator(cell, noise=noise, seed=seed)
+    return sc.cell_simulator(cell, noise=noise, seed=seed)

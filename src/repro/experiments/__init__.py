@@ -6,15 +6,19 @@ scores cells as normalized-vs-oracle performance, constraint-violation
 rate and exploration cost. See EXPERIMENTS.md §Scenario matrix.
 """
 from repro.experiments.matrix import (  # noqa: F401
+    COTENANT_CORAL_GATE,
+    COTENANT_ITERS,
     DRIFT_ADAPTIVE_GATE,
     DRIFT_SEPARATION,
     DRIFT_STATIC_CEILING,
     OFFLOAD_CORAL_GATE,
     OFFLOAD_ITERS,
     run_cell,
+    run_cotenant_cell,
     run_drift_cell,
     run_matrix,
     run_offload_cell,
+    run_static_cell,
 )
 from repro.experiments.fleet import (  # noqa: F401
     FLEET_ITERS,
@@ -32,9 +36,11 @@ from repro.experiments.report import (  # noqa: F401
     markdown_report,
 )
 from repro.experiments.scenarios import (  # noqa: F401
+    COTENANT_REGIMES,
     DRIFT_INTERVALS,
     DRIFT_SHIFT_START,
     DRIFTS,
+    MATRIX_COTENANT_CELLS,
     MATRIX_DEVICES,
     MATRIX_DRIFT_CELLS,
     MATRIX_MODELS,
@@ -42,20 +48,25 @@ from repro.experiments.scenarios import (  # noqa: F401
     MATRIX_REGIMES,
     MATRIX_WORKLOADS,
     OFFLOAD_REGIMES,
+    QUICK_COTENANT_CELLS,
     QUICK_DRIFT_CELLS,
     QUICK_OFFLOAD_CELLS,
     REGIMES,
     WORKLOADS,
     Cell,
+    CotenantRegime,
     OffloadRegime,
     Regime,
     Workload,
     cell_simulator,
+    cotenant_cell_simulator,
     drifting_cell_simulator,
     enumerate_cells,
     offload_cell_simulator,
+    resolve_cotenant_targets,
     resolve_offload_targets,
     resolve_targets,
+    tenant_names,
 )
 from repro.experiments.schema import (  # noqa: F401
     FLEET_SCHEMA,

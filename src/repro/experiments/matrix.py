@@ -25,13 +25,21 @@ baseline (the ``oracle_scalar`` pattern). Both engines produce
 identical records: the equivalence suite (tests/test_episode.py) pins
 chosen configs per seed, and scoring is shared float64 array code.
 
-Beyond the static grid the matrix carries two further cell families,
+Beyond the static grid the matrix carries three further cell families,
 each through the same engines: dynamic (drift) cells — adaptive vs
 static ablation against the post-shift oracle (EXPERIMENTS.md §Drift) —
-and edge↔pod offload cells, where CORAL searches the joint route-
+edge↔pod offload cells, where CORAL searches the joint route-
 fraction × concurrency × two-sided-DVFS space against a batched joint
 oracle while every static preset and the φ=0 ablation are infeasible
-by calibration (EXPERIMENTS.md §Offload, ``run_offload_cell``).
+by calibration (EXPERIMENTS.md §Offload, ``run_offload_cell``) — and
+multi-tenant cotenant cells, where CORAL negotiates per-tenant decode
+slots × shared DVFS against per-tenant τ floors and one shared rail cap
+while the per-tenant-greedy combination and every preset miss a floor
+or bust the cap (EXPERIMENTS.md §Multi-tenant, ``run_cotenant_cell``).
+
+Twins are built through ``repro.device.build_twin`` — the cell's regime
+name alone picks the simulator flavor; record-level runners here are
+reachable uniformly through ``repro.core.evaluate.run_cell(CellSpec)``.
 """
 from __future__ import annotations
 
@@ -54,22 +62,23 @@ from repro.core.evaluate import (
     run_drift_regime,
     run_regime,
 )
-from repro.core.space import row_index
+from repro.core.space import row_index, tenant_slot_indices
+from repro.device.factory import build_twin
 from repro.experiments.scenarios import (
+    COTENANT_REGIMES,
     DRIFT_INTERVALS,
     DRIFT_SHIFT_START,
-    DRIFTS,
+    MATRIX_COTENANT_CELLS,
     MATRIX_OFFLOAD_CELLS,
     OFFLOAD_REGIMES,
     REGIMES,
     WORKLOADS,
     Cell,
-    cell_simulator,
-    drifting_cell_simulator,
     enumerate_cells,
-    offload_cell_simulator,
+    resolve_cotenant_targets,
     resolve_offload_targets,
     resolve_targets,
+    tenant_names,
 )
 
 # Per-baseline device seeds: every baseline sees its own noise stream,
@@ -116,7 +125,7 @@ def _violations(
 def _prep_cell(cell: Cell) -> dict:
     """Shared per-cell precompute: noise-free twin, resolved targets,
     the float64 (τ, p) landscape over the grid, and the oracle."""
-    sim0 = cell_simulator(cell, noise=0.0)
+    sim0 = build_twin(cell, noise=0.0)
     targets = resolve_targets(cell, sim0)
     land_tau, land_p = sim0.exact_all()
     oracle_ref = oracle(sim0.space, sim0, targets.tau_target, targets.p_budget)
@@ -151,7 +160,7 @@ def _scalar_static_runs(
     """The original per-seed Python loops (equivalence baseline)."""
     runs = []
     for seed in seeds:
-        dev = cell_simulator(cell, seed=seed)
+        dev = build_twin(cell, seed=seed)
         runs.append(
             run_regime(
                 prep["space"], dev, prep["targets"], iters=iters,
@@ -168,13 +177,12 @@ def _cell_record(
     iters: int,
     seeds: Sequence[int],
     engine: str,
-    sim_factory=cell_simulator,
     preset_kinds: Tuple[str, ...] = ("max_power", "default"),
 ) -> dict:
     """Assemble one cell's JSON record from its per-seed episode runs.
 
-    ``sim_factory(cell, seed=...)`` builds the noisy device the scalar
-    baselines run against (offload cells pass the edge↔pod twin);
+    The noisy devices the scalar baselines run against come from
+    ``device.build_twin`` (the regime picks the twin flavor);
     ``preset_kinds`` lists the open-loop presets to record.
     """
     sim0, targets, oracle_ref = prep["sim0"], prep["targets"], prep["oracle"]
@@ -281,7 +289,7 @@ def _cell_record(
     else:
         alert_online_out = alert_online(
             space,
-            sim_factory(cell, seed=_BASELINE_SEEDS["alert_online"]),
+            build_twin(cell, seed=_BASELINE_SEEDS["alert_online"]),
             targets.tau_target,
             targets.p_budget,
             iters=iters,
@@ -289,7 +297,7 @@ def _cell_record(
         )
         preset_outs = {
             kind: preset(
-                space, sim_factory(cell, seed=_BASELINE_SEEDS[kind]), kind
+                space, build_twin(cell, seed=_BASELINE_SEEDS[kind]), kind
             )
             for kind in preset_kinds
         }
@@ -297,7 +305,7 @@ def _cell_record(
         "alert": _outcome_record(
             alert(
                 space,
-                sim_factory(cell, seed=_BASELINE_SEEDS["alert"]),
+                build_twin(cell, seed=_BASELINE_SEEDS["alert"]),
                 targets.tau_target,
                 targets.p_budget,
             )
@@ -326,14 +334,14 @@ def _cell_record(
     }
 
 
-def run_cell(
+def run_static_cell(
     cell: Cell,
     iters: int = 10,
     seeds: Sequence[int] = (0, 1, 2),
     window: int = 10,
     engine: str = "compiled",
 ) -> dict:
-    """One cell → one JSON-ready record (see schema.MATRIX_SCHEMA)."""
+    """One stationary cell → one JSON-ready record (schema.MATRIX_SCHEMA)."""
     prep = _prep_cell(cell)
     if engine == "compiled":
         eps = run_static_requests(
@@ -343,6 +351,12 @@ def run_cell(
     else:
         runs = _scalar_static_runs(cell, prep, seeds, iters, window)
     return _cell_record(cell, prep, runs, iters, seeds, engine)
+
+
+# Deprecated alias (one release): the stationary record runner is now
+# ``run_static_cell``; the family-dispatching entrypoint is
+# ``repro.core.evaluate.run_cell(CellSpec)``.
+run_cell = run_static_cell
 
 
 # ---------------------------------------------------------------------------
@@ -366,7 +380,7 @@ def _prep_offload_cell(cell: Cell) -> dict:
     targets, the joint-grid (τ_served, p_edge) landscape, and the batched
     joint-space oracle — same keys as ``_prep_cell`` so the episode
     request shape is shared."""
-    sim0 = offload_cell_simulator(cell, noise=0.0)
+    sim0 = build_twin(cell, noise=0.0)
     targets = resolve_offload_targets(cell, sim0)
     land_tau, land_p = sim0.exact_all()
     oracle_ref = oracle(sim0.space, sim0, targets.tau_target, targets.p_budget)
@@ -388,7 +402,7 @@ def _scalar_offload_runs(
     baseline for the offload-enlarged episode engine)."""
     runs = []
     for seed in seeds:
-        dev = offload_cell_simulator(cell, seed=seed)
+        dev = build_twin(cell, seed=seed)
         runs.append(
             run_regime(
                 prep["space"], dev, prep["targets"], iters=iters,
@@ -449,7 +463,6 @@ def _offload_cell_record(
         iters,
         seeds,
         engine,
-        sim_factory=offload_cell_simulator,
         preset_kinds=("max_power", "default", "min_power"),
     )
     sim0 = prep["sim0"]
@@ -488,6 +501,170 @@ def run_offload_cell(
 
 
 # ---------------------------------------------------------------------------
+# Cotenant (multi-tenant co-inference) cells
+# ---------------------------------------------------------------------------
+
+# The joint slots × shared-DVFS grid keeps a deliberately narrow dual-
+# feasible region (4–7% of rows on the calibrated cells), so the budget
+# is the largest of the three families: 40 measurements keeps every cell
+# ≥ COTENANT_CORAL_GATE of the batched joint oracle across all seeds
+# (the skewed cells first observe a feasible row around measurement
+# 14–20, and the refinement tail after that is what closes the gap to
+# the oracle). Calibration note: the budget is *not* monotonic in
+# iters — a later noisy-feasible but truly-infeasible probe can outrank
+# an earlier genuine pick on noisy efficiency — so treat this constant
+# as calibrated, not merely "enough".
+COTENANT_ITERS = 40
+COTENANT_CORAL_GATE = 0.85
+
+
+def _prep_cotenant_cell(cell: Cell) -> dict:
+    """Cotenant-cell precompute: the noise-free multi-tenant twin
+    (per-tenant τ floors pinned from the regime's solo-max fractions),
+    resolved joint targets (τ channel = joint headroom, target 1.0), the
+    (headroom, rail-power) landscape and the batched joint oracle — same
+    keys as ``_prep_cell`` so the episode request shape is shared."""
+    sim0 = build_twin(cell, noise=0.0)
+    targets = resolve_cotenant_targets(cell, sim0)
+    land_tau, land_p = sim0.exact_all()
+    oracle_ref = oracle(sim0.space, sim0, targets.tau_target, targets.p_budget)
+    _, workloads = tenant_names(cell)
+    return {
+        "sim0": sim0,
+        "space": sim0.space,
+        "targets": targets,
+        "land_tau": land_tau,
+        "land_p": land_p,
+        "oracle": oracle_ref,
+        "noise": max(WORKLOADS[w].noise for w in workloads),
+    }
+
+
+def _scalar_cotenant_runs(
+    cell: Cell, prep: dict, seeds: Sequence[int], iters: int, window: int
+) -> List[Tuple[Outcome, Trace]]:
+    """Per-seed Python loops over the multi-tenant twin (equivalence
+    baseline for cotenant episodes on the compiled engine)."""
+    runs = []
+    for seed in seeds:
+        dev = build_twin(cell, seed=seed)
+        runs.append(
+            run_regime(
+                prep["space"], dev, prep["targets"], iters=iters,
+                window=window, seed=seed,
+            )
+        )
+    return runs
+
+
+def _greedy_record(prep: dict) -> dict:
+    """The per-tenant-greedy ablation: each tenant plans as if it owned
+    the rail — the grid restricted to rows where every *other* tenant is
+    parked at 1 slot — and picks its cheapest floor-meeting row (its
+    max-τ row if none meets the floor). The combined operating point is
+    the elementwise max of the picks with each tenant keeping its own
+    slot ask, snapped to the grid and evaluated *jointly*. On calibrated
+    cotenant cells this combination misses a floor or busts the shared
+    cap: per-tenant planning never pays for the contention its own slots
+    impose on the neighbor."""
+    sim0, targets = prep["sim0"], prep["targets"]
+    space = sim0.space
+    grid = space.grid()
+    taus = sim0.tenant_taus()  # (K, N) noise-free per-tenant τ
+    power = prep["land_p"]
+    slot_idx = list(tenant_slot_indices(space))
+    picks = []
+    for k in range(sim0.n_tenants):
+        others = [i for j, i in enumerate(slot_idx) if j != k]
+        solo = np.nonzero(
+            np.all([grid[:, i] == 1.0 for i in others], axis=0)
+        )[0]
+        feas = solo[taus[k, solo] >= sim0.floors[k] * (1 - 1e-9)]
+        pick = (
+            int(feas[int(np.argmin(power[feas]))])
+            if feas.size
+            else int(solo[int(np.argmax(taus[k, solo]))])
+        )
+        picks.append(np.array(grid[pick], np.float64))
+    combined = np.max(picks, axis=0)
+    for k, i in enumerate(slot_idx):
+        combined[i] = picks[k][i]
+    cfg = space.snap(tuple(combined))
+    headroom, p = sim0.exact(cfg)
+    miss, bust = _violations(headroom, p, targets)
+    return {
+        "config": [float(v) for v in cfg],
+        "headroom": headroom,
+        "power": p,
+        "violates_tau": bool(miss),
+        "violates_power": bool(bust),
+    }
+
+
+def _cotenant_cell_record(
+    cell: Cell,
+    prep: dict,
+    runs: List[Tuple[Outcome, Trace]],
+    iters: int,
+    seeds: Sequence[int],
+    engine: str,
+) -> dict:
+    """One cotenant cell's record: the static-cell shape on the
+    (headroom, rail-power) channel — min_power preset included — plus the
+    per-tenant provenance (floors, solo maxima) and the per-tenant-greedy
+    ablation."""
+    regime = COTENANT_REGIMES[cell.regime]
+    rec = _cell_record(
+        cell,
+        prep,
+        runs,
+        iters,
+        seeds,
+        engine,
+        preset_kinds=("max_power", "default", "min_power"),
+    )
+    sim0 = prep["sim0"]
+    models, workloads = tenant_names(cell)
+    rec["cotenant"] = {
+        "n_tenants": sim0.n_tenants,
+        "p_slack": regime.p_slack,
+        "tenants": [
+            {
+                "model": m,
+                "workload": w,
+                "tau_frac": regime.tau_fracs[k],
+                "floor": sim0.floors[k],
+                "solo_max": round(sim0.solo_max(k), 3),
+            }
+            for k, (m, w) in enumerate(zip(models, workloads))
+        ],
+        "greedy": _greedy_record(prep),
+    }
+    return rec
+
+
+def run_cotenant_cell(
+    cell: Cell,
+    iters: int = COTENANT_ITERS,
+    seeds: Sequence[int] = (0, 1, 2),
+    window: int = 10,
+    engine: str = "compiled",
+) -> dict:
+    """One multi-tenant co-inference cell → one JSON-ready record (the
+    ``cotenant_cells`` entry of schema v5 — see
+    ``repro.experiments.schema`` and docs/BENCH_SCHEMAS.md)."""
+    prep = _prep_cotenant_cell(cell)
+    if engine == "compiled":
+        eps = run_static_requests(
+            _static_requests(prep, seeds), iters=iters, window=window
+        )
+        runs = [(ep.outcome, ep.trace()) for ep in eps]
+    else:
+        runs = _scalar_cotenant_runs(cell, prep, seeds, iters, window)
+    return _cotenant_cell_record(cell, prep, runs, iters, seeds, engine)
+
+
+# ---------------------------------------------------------------------------
 # Dynamic (drift) cells
 # ---------------------------------------------------------------------------
 
@@ -506,13 +683,9 @@ def _prep_drift_cell(cell: Cell, intervals: int) -> dict:
     and the post-shift oracle — everything scoring and the compiled
     episode engine share."""
     regime = REGIMES[cell.regime]
-    schedule = DRIFTS[regime.drift]
-    sim0 = cell_simulator(cell, noise=0.0)
+    twin = build_twin(cell, noise=0.0)
+    sim0, schedule = twin.base, twin.schedule
     targets = resolve_targets(cell, sim0)
-
-    from repro.device.simulator import DriftingSimulator
-
-    twin = DriftingSimulator(sim0, schedule)
     land_tau, land_p = twin.landscapes(intervals)
     budget_scale = schedule.states_stacked(intervals)["budget_scale"]
     twin.set_time(intervals - 1)
@@ -564,7 +737,7 @@ def _scalar_drift_runs(
     runs = []
     space = prep["space"]
     for seed in seeds:
-        dev = drifting_cell_simulator(cell, seed=seed)
+        dev = build_twin(cell, seed=seed)
         opt, tr = run_drift_regime(
             space,
             dev,
@@ -797,6 +970,7 @@ def run_matrix(
     engine: str = "compiled",
     window: int = 10,
     offload_cells: Optional[Sequence[Cell]] = None,
+    cotenant_cells: Optional[Sequence[Cell]] = None,
 ) -> dict:
     """Run every cell and assemble the schema'd BENCH_matrix record.
 
@@ -807,7 +981,11 @@ def run_matrix(
     (``offload_cells`` — defaults to ``MATRIX_OFFLOAD_CELLS`` on the
     full grid, to none when an explicit ``cells`` list is given) run
     CORAL over the joint route-fraction × DVFS space at the larger
-    ``OFFLOAD_ITERS`` budget and land in ``offload_cells``.
+    ``OFFLOAD_ITERS`` budget and land in ``offload_cells``; multi-tenant
+    co-inference cells (``cotenant_cells`` — defaults to
+    ``MATRIX_COTENANT_CELLS`` on the full grid) run CORAL over the joint
+    per-tenant-slots × shared-DVFS space at the ``COTENANT_ITERS``
+    budget and land in ``cotenant_cells``.
 
     Under the compiled engine every CORAL episode across all cells ×
     seeds (× drift variants) is submitted as one request batch — the
@@ -819,6 +997,8 @@ def run_matrix(
     """
     if offload_cells is None:
         offload_cells = MATRIX_OFFLOAD_CELLS if cells is None else ()
+    if cotenant_cells is None:
+        cotenant_cells = MATRIX_COTENANT_CELLS if cells is None else ()
     if cells is None:
         cells = enumerate_cells()
     static_cells = [c for c in cells if not REGIMES[c.regime].dynamic]
@@ -886,6 +1066,39 @@ def run_matrix(
     ]
     wall["offload_score_s"] = time.perf_counter() - t0
 
+    # ---- cotenant cells ------------------------------------------------
+    t0 = time.perf_counter()
+    cpreps = {c: _prep_cotenant_cell(c) for c in cotenant_cells}
+    wall["cotenant_prep_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    cotenant_runs: Dict[Cell, list] = {}
+    if engine == "compiled":
+        reqs, owners = [], []
+        for c in cotenant_cells:
+            cell_reqs = _static_requests(cpreps[c], seeds)
+            owners.extend([c] * len(cell_reqs))
+            reqs.extend(cell_reqs)
+        if reqs:
+            eps = run_static_requests(reqs, iters=COTENANT_ITERS, window=window)
+            for c, ep in zip(owners, eps):
+                cotenant_runs.setdefault(c, []).append((ep.outcome, ep.trace()))
+    else:
+        for c in cotenant_cells:
+            cotenant_runs[c] = _scalar_cotenant_runs(
+                c, cpreps[c], seeds, COTENANT_ITERS, window
+            )
+    wall["cotenant_episodes_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    cotenant_records = [
+        _cotenant_cell_record(
+            c, cpreps[c], cotenant_runs[c], COTENANT_ITERS, seeds, engine
+        )
+        for c in cotenant_cells
+    ]
+    wall["cotenant_score_s"] = time.perf_counter() - t0
+
     # ---- drift cells ---------------------------------------------------
     t0 = time.perf_counter()
     dpreps = {c: _prep_drift_cell(c, DRIFT_INTERVALS) for c in dynamic_cells}
@@ -937,9 +1150,9 @@ def run_matrix(
         )
     wall["drift_score_s"] = time.perf_counter() - t0
 
-    all_cells = list(cells) + list(offload_cells)
+    all_cells = list(cells) + list(offload_cells) + list(cotenant_cells)
     return {
-        "schema_version": 4,
+        "schema_version": 5,
         "regenerate": regenerate,
         "quick": quick,
         "engine": engine,
@@ -952,11 +1165,15 @@ def run_matrix(
             "workloads": sorted({c.workload for c in all_cells}),
             "regimes": sorted({c.regime for c in cells}),
             "offload_regimes": sorted({c.regime for c in offload_cells}),
+            "cotenant_regimes": sorted({c.regime for c in cotenant_cells}),
         },
         "cells": records,
         "drift_cells": drift_records,
         "offload_cells": offload_records,
-        "summary": _summarize(records, drift_records, offload_records),
+        "cotenant_cells": cotenant_records,
+        "summary": _summarize(
+            records, drift_records, offload_records, cotenant_records
+        ),
     }
 
 
@@ -964,6 +1181,7 @@ def _summarize(
     records: List[dict],
     drift_records: List[dict] = (),
     offload_records: List[dict] = (),
+    cotenant_records: List[dict] = (),
 ) -> dict:
     single = [
         r["coral"]["score"] for r in records if REGIMES[r["regime"]].single_target
@@ -1032,6 +1250,31 @@ def _summarize(
                 )
             )
         ),
+        "n_cotenant_cells": len(cotenant_records),
+        "min_cotenant_score": (
+            min(r["coral"]["score"] for r in cotenant_records)
+            if cotenant_records
+            else None
+        ),
+        "cotenant_power_violations": int(
+            sum(r["coral"]["power_violations"] for r in cotenant_records)
+        ),
+        # Count of (preset | per-tenant-greedy) entries that were truly
+        # feasible — the tentpole claim is that this stays 0: only the
+        # joint slots × shared-DVFS negotiation meets every tenant's
+        # floor within the shared rail budget.
+        "cotenant_feasible_baselines": int(
+            sum(
+                not (b["violates_tau"] or b["violates_power"])
+                for r in cotenant_records
+                for b in (
+                    r["baselines"]["max_power"],
+                    r["baselines"]["default"],
+                    r["baselines"]["min_power"],
+                    r["cotenant"]["greedy"],
+                )
+            )
+        ),
     }
     return summary
 
@@ -1052,6 +1295,9 @@ def score_floors(record: dict) -> Dict[Tuple[str, str, str, str], float]:
         key = (c["device"], c["model"], c["workload"], c["regime"])
         floors[key] = c["adaptive"]["score_floor"]
     for c in record.get("offload_cells", ()):
+        key = (c["device"], c["model"], c["workload"], c["regime"])
+        floors[key] = c["coral"]["score_floor"]
+    for c in record.get("cotenant_cells", ()):
         key = (c["device"], c["model"], c["workload"], c["regime"])
         floors[key] = c["coral"]["score_floor"]
     return floors

@@ -25,9 +25,9 @@ def _viol(rec: dict) -> str:
 
 
 def markdown_report(record: dict) -> str:
-    """Render a BENCH_matrix record (any schema version — drift and
-    offload sections appear only when their cell arrays are non-empty)
-    as the committed BENCH_matrix.md summary."""
+    """Render a BENCH_matrix record (any schema version — drift, offload
+    and cotenant sections appear only when their cell arrays are
+    non-empty) as the committed BENCH_matrix.md summary."""
     lines: List[str] = ["# Scenario matrix", ""]
     s = record["summary"]
     lines.append(
@@ -65,6 +65,15 @@ def markdown_report(record: dict) -> str:
             f"(gate ≥ 0.85) · power violations "
             f"**{s['offload_power_violations']}** (gate = 0) · feasible "
             f"presets/ablations **{s['offload_feasible_baselines']}** "
+            f"(gate = 0)"
+        )
+    if s.get("n_cotenant_cells"):
+        lines.append(
+            f"- cotenant cells: **{s['n_cotenant_cells']}** · worst CORAL "
+            f"joint-space score **{s['min_cotenant_score']:.3f}** "
+            f"(gate ≥ 0.85) · shared-rail violations "
+            f"**{s['cotenant_power_violations']}** (gate = 0) · feasible "
+            f"presets/greedy **{s['cotenant_feasible_baselines']}** "
             f"(gate = 0)"
         )
     lines.append("")
@@ -143,6 +152,49 @@ def markdown_report(record: dict) -> str:
             "budget (`P!`) — only the joint route-fraction × concurrency "
             "× two-sided DVFS search is feasible. CORAL scores are "
             "efficiency ratios vs the batched joint-space oracle."
+        )
+        lines.append("")
+    cotenant_cells = record.get("cotenant_cells", [])
+    if cotenant_cells:
+        lines.append("## Cotenant regimes (per-tenant slots × shared DVFS)")
+        lines.append("")
+        lines.append(
+            "| device | regime | tenants | floors | P-cap | CORAL | viol | "
+            "greedy | max_power | default | min_power |"
+        )
+        lines.append("|" + "---|" * 11)
+        for c in cotenant_cells:
+            ct = c["cotenant"]
+            coral = c["coral"]
+            viol = (
+                f"{coral['violation_rate']:.0%}"
+                if coral["violation_rate"]
+                else "0"
+            )
+            tenants = "+".join(t["model"] for t in ct["tenants"])
+            floors = "+".join(f"{t['floor']:.1f}" for t in ct["tenants"])
+            greedy_mark = _viol(ct["greedy"]) or "ok"
+            mp = c["baselines"]["max_power"]
+            df = c["baselines"]["default"]
+            mn = c["baselines"]["min_power"]
+            lines.append(
+                f"| {c['device']} | {c['regime']} | {tenants} "
+                f"| {floors} | {c['p_budget']:.2f}W "
+                f"| **{coral['score']:.2f}** | {viol} "
+                f"| {greedy_mark} | {_viol(mp) or 'ok'} "
+                f"| {_viol(df) or 'ok'} | {_viol(mn) or 'ok'} |"
+            )
+        lines.append("")
+        lines.append(
+            "Cotenant cells serve two tenants on one rail: each tenant's "
+            "τ floor is a fraction of its *solo* maximum, and the shared "
+            "power cap is slack over the joint minimum — so per-tenant "
+            "greedy planning (each tenant optimizing as if it owned the "
+            "rail, combined elementwise) misses a floor or busts the cap "
+            "(`τ!`/`P!` under `greedy`). Only the joint per-tenant-slots × "
+            "shared-DVFS search is feasible; CORAL scores are efficiency "
+            "ratios vs the batched joint-space oracle on the scalarized "
+            "(min-headroom, rail-power) channel."
         )
         lines.append("")
     drift_cells = record.get("drift_cells", [])

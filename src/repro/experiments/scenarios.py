@@ -28,6 +28,7 @@ from repro.device.hw import (
     ThermalRamp,
     get_profile,
 )
+from repro.device.cotenant import CotenantSimulator
 from repro.device.network import OffloadSimulator, get_network
 from repro.device.simulator import (
     DeviceSimulator,
@@ -352,6 +353,147 @@ def resolve_offload_targets(
     p_anchor = float(p_all[tau_all >= tau_target].min())
     return RegimeTargets(
         mode="dual", tau_target=tau_target, p_budget=p_anchor * regime.p_slack
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CotenantRegime:
+    """One multi-tenant co-inference regime: per-tenant τ-floor fractions
+    plus a shared power cap (EXPERIMENTS.md §Multi-tenant).
+
+    ``tau_fracs[k]`` sets tenant k's τ floor as a fraction of its *solo
+    max* — the best τ_k anywhere on the joint grid, i.e. what tenant k
+    could reach if the allocator favored it outright. Floors calibrated
+    this way are individually reachable but jointly tight: meeting both
+    at once forces the slot split and the shared clocks to be negotiated,
+    which is exactly the knob the per-tenant-greedy ablation ignores.
+    ``p_slack`` is the shared rail budget as a multiple of the cheapest
+    draw meeting every floor (the "pmin" anchor over the joint grid).
+    """
+
+    name: str
+    tau_fracs: Tuple[float, ...] = (0.5, 0.5)
+    p_slack: float = 1.25
+
+    @property
+    def dual_constraint(self) -> bool:
+        return True
+
+    @property
+    def mode(self) -> str:
+        return "dual"
+
+
+COTENANT_REGIMES: Dict[str, CotenantRegime] = {
+    r.name: r
+    for r in (
+        # Symmetric floors: both tenants claim the same fraction of their
+        # solo max — the pure negotiation case. 0.625 is calibrated so
+        # every static preset and the per-tenant-greedy combination miss
+        # at least one floor on both cells while a 3–5% joint-feasible
+        # region survives (p_slack 1.45 keeps the all-defaults preset
+        # just over the rail budget on the Xavier cell).
+        CotenantRegime("cotenant_balanced", tau_fracs=(0.625, 0.625), p_slack=1.45),
+        # A latency-critical primary next to a best-effort batch tenant:
+        # the primary's floor is high enough that naive equal splits and
+        # the greedy combination miss it, while the joint-feasible region
+        # stays discoverable within the COTENANT_ITERS budget.
+        CotenantRegime("cotenant_skewed", tau_fracs=(0.70, 0.4), p_slack=1.45),
+    )
+}
+
+# Cotenant cells encode the tenant pairs as '+'-joined composite model /
+# workload strings, so the 4-field Cell (and every keying/reporting path
+# built on it) carries multi-tenant cells unchanged.
+MATRIX_COTENANT_CELLS: Tuple[Cell, ...] = (
+    Cell(
+        "edge-xavier-nx",
+        "qwen2.5-3b+granite-8b",
+        "decode_steady+decode_bursty",
+        "cotenant_balanced",
+    ),
+    Cell(
+        "edge-orin-nano",
+        "qwen2.5-3b+hymba-1.5b",
+        "decode_steady+decode_steady",
+        "cotenant_balanced",
+    ),
+    Cell(
+        "edge-xavier-nx",
+        "granite-8b+hymba-1.5b",
+        "decode_bursty+decode_steady",
+        "cotenant_skewed",
+    ),
+    Cell(
+        "edge-orin-nano",
+        "granite-8b+whisper-medium",
+        "decode_steady+decode_bursty",
+        "cotenant_skewed",
+    ),
+)
+
+# QUICK (CI-smoke) subset: one cell per cotenant regime.
+QUICK_COTENANT_CELLS: Tuple[Cell, ...] = (
+    MATRIX_COTENANT_CELLS[0],
+    MATRIX_COTENANT_CELLS[3],
+)
+
+
+def tenant_names(cell: Cell) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """Split a cotenant cell's composite fields into per-tenant (models,
+    workloads); validates the two lists pair up."""
+    models = tuple(cell.model.split("+"))
+    workloads = tuple(cell.workload.split("+"))
+    if len(models) != len(workloads) or len(models) < 2:
+        raise ValueError(
+            f"cotenant cell needs matching '+'-joined model/workload "
+            f"lists, got {cell.model!r} / {cell.workload!r}"
+        )
+    return models, workloads
+
+
+def cotenant_cell_simulator(
+    cell: Cell, noise: Optional[float] = None, seed: int = 0
+) -> CotenantSimulator:
+    """Build the cell's multi-tenant twin over the joint slots × shared-
+    DVFS grid, with the per-tenant τ floors pinned from the regime's
+    solo-max fractions (the pin-after-build pattern of the offload
+    demand). ``noise=None`` uses the noisiest tenant's trace noise;
+    ``noise=0.0`` is the ground-truth twin targets/oracle use."""
+    regime = COTENANT_REGIMES[cell.regime]
+    models, workloads = tenant_names(cell)
+    ws = [WORKLOADS[w] for w in workloads]
+    sim = CotenantSimulator(
+        get_profile(cell.device),
+        [get_config(m) for m in models],
+        kinds=tuple(w.kind for w in ws),
+        batches=tuple(w.batch for w in ws),
+        seqs=tuple(w.seq for w in ws),
+        noise=max(w.noise for w in ws) if noise is None else noise,
+        seed=seed,
+    )
+    sim.floors = tuple(
+        round(frac * sim.solo_max(k), 3)
+        for k, frac in enumerate(regime.tau_fracs)
+    )
+    return sim
+
+
+def resolve_cotenant_targets(
+    cell: Cell, sim0: Optional[CotenantSimulator] = None
+) -> RegimeTargets:
+    """Absolute targets for a cotenant cell. The τ channel is the joint
+    headroom min_k τ_k/floor_k (``core.coral.joint_headroom``), so the
+    target is the constant 1.0; the budget is p_slack × the cheapest
+    shared-rail draw with headroom ≥ 1 — the "pmin" anchor over the
+    joint grid."""
+    regime = COTENANT_REGIMES[cell.regime]
+    if sim0 is None:
+        sim0 = cotenant_cell_simulator(cell, noise=0.0)
+    h_all, p_all = sim0.exact_all()
+    p_anchor = float(p_all[h_all >= 1.0].min())
+    return RegimeTargets(
+        mode="dual", tau_target=1.0, p_budget=round(p_anchor * regime.p_slack, 3)
     )
 
 

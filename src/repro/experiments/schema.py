@@ -193,6 +193,85 @@ _OFFLOAD_CELL = {
     },
 }
 
+# Cotenant cells (schema v5) reuse the static-cell shape on the
+# scalarized (joint headroom, rail power) channel — tau_target is the
+# constant 1.0, the min_power preset is recorded (every preset must be
+# visibly infeasible on a calibrated cell) — and add the ``cotenant``
+# block: per-tenant provenance (model, workload, floor, solo max) plus
+# the per-tenant-greedy ablation, whose combined config must miss a
+# floor or bust the shared cap.
+_COTENANT_CELL = {
+    "type": "object",
+    "required": _CELL["required"] + ["cotenant"],
+    "properties": {
+        **_CELL["properties"],
+        "baselines": {
+            "type": "object",
+            "required": [
+                "alert",
+                "alert_online",
+                "max_power",
+                "default",
+                "min_power",
+            ],
+            "additionalProperties": _OUTCOME,
+        },
+        "cotenant": {
+            "type": "object",
+            "required": ["n_tenants", "p_slack", "tenants", "greedy"],
+            "properties": {
+                "n_tenants": {"type": "integer", "minimum": 2},
+                "p_slack": {"type": "number", "minimum": 1},
+                "tenants": {
+                    "type": "array",
+                    "minItems": 2,
+                    "items": {
+                        "type": "object",
+                        "required": [
+                            "model",
+                            "workload",
+                            "tau_frac",
+                            "floor",
+                            "solo_max",
+                        ],
+                        "properties": {
+                            "model": {"type": "string"},
+                            "workload": {"type": "string"},
+                            "tau_frac": {
+                                "type": "number",
+                                "minimum": 0,
+                                "maximum": 1,
+                            },
+                            "floor": {"type": "number", "minimum": 0},
+                            "solo_max": {"type": "number", "minimum": 0},
+                        },
+                    },
+                },
+                "greedy": {
+                    "type": "object",
+                    "required": [
+                        "config",
+                        "headroom",
+                        "power",
+                        "violates_tau",
+                        "violates_power",
+                    ],
+                    "properties": {
+                        "config": {
+                            "type": ["array", "null"],
+                            "items": {"type": "number"},
+                        },
+                        "headroom": {"type": "number", "minimum": 0},
+                        "power": {"type": "number", "minimum": 0},
+                        "violates_tau": {"type": "boolean"},
+                        "violates_power": {"type": "boolean"},
+                    },
+                },
+            },
+        },
+    },
+}
+
 _DRIFT_VARIANT = {
     "type": "object",
     "required": [
@@ -276,35 +355,29 @@ _DRIFT_CELL = {
 }
 
 # Per-phase wall-clock accounting (since schema v3; offload phases added
-# in v4): where a matrix run spends its time. All fields in seconds;
-# the ``*_episodes_s`` entries are the episode *control loops* — the
-# part the compiled engine replaces.
+# in v4, cotenant in v5): where a matrix run spends its time. All fields
+# in seconds; the ``*_episodes_s`` entries are the episode *control
+# loops* — the part the compiled engine replaces.
+_WALL_CLOCK_KEYS = (
+    "static_prep_s",
+    "static_episodes_s",
+    "static_score_s",
+    "offload_prep_s",
+    "offload_episodes_s",
+    "offload_score_s",
+    "cotenant_prep_s",
+    "cotenant_episodes_s",
+    "cotenant_score_s",
+    "drift_prep_s",
+    "drift_episodes_s",
+    "drift_score_s",
+)
+
 _WALL_CLOCK = {
     "type": "object",
-    "required": [
-        "static_prep_s",
-        "static_episodes_s",
-        "static_score_s",
-        "offload_prep_s",
-        "offload_episodes_s",
-        "offload_score_s",
-        "drift_prep_s",
-        "drift_episodes_s",
-        "drift_score_s",
-    ],
+    "required": list(_WALL_CLOCK_KEYS),
     "properties": {
-        k: {"type": "number", "minimum": 0}
-        for k in (
-            "static_prep_s",
-            "static_episodes_s",
-            "static_score_s",
-            "offload_prep_s",
-            "offload_episodes_s",
-            "offload_score_s",
-            "drift_prep_s",
-            "drift_episodes_s",
-            "drift_score_s",
-        )
+        k: {"type": "number", "minimum": 0} for k in _WALL_CLOCK_KEYS
     },
 }
 
@@ -354,10 +427,11 @@ MATRIX_SCHEMA = {
         "cells",
         "drift_cells",
         "offload_cells",
+        "cotenant_cells",
         "summary",
     ],
     "properties": {
-        "schema_version": {"type": "integer", "enum": [4]},
+        "schema_version": {"type": "integer", "enum": [5]},
         "regenerate": {"type": "string"},
         "quick": {"type": "boolean"},
         "engine": {"type": "string", "enum": ["compiled", "scalar"]},
@@ -377,6 +451,7 @@ MATRIX_SCHEMA = {
                 "workloads",
                 "regimes",
                 "offload_regimes",
+                "cotenant_regimes",
             ],
             "properties": {
                 **{
@@ -392,6 +467,11 @@ MATRIX_SCHEMA = {
                     "type": "array",
                     "items": {"type": "string"},
                 },
+                # empty when the run carries no cotenant cells
+                "cotenant_regimes": {
+                    "type": "array",
+                    "items": {"type": "string"},
+                },
             },
         },
         "cells": {"type": "array", "items": _CELL, "minItems": 1},
@@ -399,6 +479,8 @@ MATRIX_SCHEMA = {
         "drift_cells": {"type": "array", "items": _DRIFT_CELL},
         # empty when the run carries no edge↔pod offload cells
         "offload_cells": {"type": "array", "items": _OFFLOAD_CELL},
+        # empty when the run carries no multi-tenant co-inference cells
+        "cotenant_cells": {"type": "array", "items": _COTENANT_CELL},
         "summary": {
             "type": "object",
             "required": [
@@ -415,6 +497,10 @@ MATRIX_SCHEMA = {
                 "min_offload_score",
                 "offload_power_violations",
                 "offload_feasible_baselines",
+                "n_cotenant_cells",
+                "min_cotenant_score",
+                "cotenant_power_violations",
+                "cotenant_feasible_baselines",
             ],
             "properties": {
                 "n_cells": {"type": "integer", "minimum": 1},
@@ -430,6 +516,16 @@ MATRIX_SCHEMA = {
                 "min_offload_score": {"type": ["number", "null"]},
                 "offload_power_violations": {"type": "integer", "minimum": 0},
                 "offload_feasible_baselines": {
+                    "type": "integer",
+                    "minimum": 0,
+                },
+                "n_cotenant_cells": {"type": "integer", "minimum": 0},
+                "min_cotenant_score": {"type": ["number", "null"]},
+                "cotenant_power_violations": {
+                    "type": "integer",
+                    "minimum": 0,
+                },
+                "cotenant_feasible_baselines": {
                     "type": "integer",
                     "minimum": 0,
                 },

@@ -1,4 +1,4 @@
-"""Serving launcher: batched generation with the scheduler's concurrency
+"""Serving launcher: batched generation with the runtime's concurrency
 knob (reduced configs on CPU; same code path on a pod).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
@@ -14,7 +14,7 @@ import numpy as np
 from repro.configs.registry import get_config
 from repro.configs.runtime import RunConfig
 from repro.models.transformer import ApplyCtx, init_model_params
-from repro.serving import Request, Scheduler, ServingEngine
+from repro.serving import Request, ServingEngine, ServingRuntime
 
 
 def serve(
@@ -31,14 +31,14 @@ def serve(
     ctx = ApplyCtx(cfg, rcfg, None)
     params = init_model_params(jax.random.PRNGKey(seed), cfg, rcfg)
     engine = ServingEngine(ctx, params, batch, prompt_len + new_tokens + 1)
-    sched = Scheduler(engine, batch_size=batch, concurrency=concurrency)
+    runtime = ServingRuntime(engine, batch_size=batch, concurrency=concurrency)
     rng = np.random.default_rng(seed)
     for rid in range(requests):
-        sched.submit(
+        runtime.submit(
             Request(rid, rng.integers(0, cfg.vocab, prompt_len, dtype=np.int32),
                     new_tokens)
         )
-    metrics = sched.run()
+    metrics = runtime.drain()
     print(
         f"{arch}: {metrics['requests']} requests, "
         f"{metrics['throughput_tok_s']:.1f} tok/s, "

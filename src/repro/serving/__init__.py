@@ -9,7 +9,6 @@ from repro.serving.runtime import (  # noqa: F401
     measure_concurrency_curve,
     measure_runtime_throughput,
 )
-from repro.serving.scheduler import Scheduler  # noqa: F401
 from repro.serving.controller import (  # noqa: F401
     IntervalRecord,
     ServingController,

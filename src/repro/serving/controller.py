@@ -34,6 +34,16 @@ knobs only (placement dims are stripped, the radio's hold-active draw
 is added whenever φ > 0, per-token ship energy is metered live by the
 runtime). Offload and drift schedules are mutually exclusive for now:
 drifted-rate pacing would double-count the routed fraction.
+
+Over a *cotenant* space (``core.space.cotenant_space`` — per-tenant
+``slots_t<k>`` dims beside the shared DVFS knobs, EXPERIMENTS.md
+§Multi-tenant) the controller drives one multi-tenant runtime: each
+slot dim is enacted on the matching tenant ring in registration order
+(``set_slot_allocation``), the shared DVFS knobs pace every ring
+alike, and the measured feedback is the *joint headroom* — each ring's
+windowed τ over its ``tau_floor``, scalarized by
+``core.coral.joint_headroom`` so CORAL's dual mode tunes all tenants
+against ``tau_target=1.0`` plus the one shared power cap.
 """
 from __future__ import annotations
 
@@ -41,9 +51,15 @@ import dataclasses
 from typing import Iterable, List, Optional, Tuple
 
 from repro.core.baselines import Outcome
-from repro.core.coral import CORAL
+from repro.core.coral import CORAL, joint_headroom
 from repro.core.drift import DriftConfig
-from repro.core.space import CONCURRENCY_DIM, OFFLOAD_DIM, ConfigSpace
+from repro.core.space import (
+    CONCURRENCY_DIM,
+    OFFLOAD_DIM,
+    TENANT_SLOT_PREFIX,
+    ConfigSpace,
+    tenant_slot_indices,
+)
 from repro.device.hw import (
     DEFAULT_HW,
     DeviceProfile,
@@ -59,13 +75,16 @@ class IntervalRecord:
     """One control interval: what was applied and what the traffic saw."""
 
     config: tuple
-    tau: float  # measured tok/s over the interval, DVFS-scaled
+    tau: float  # measured tok/s over the interval (joint headroom when
+    # the tuned space is cotenant), DVFS-scaled
     power: float  # analytical pod power at this config
     reward: float
     requests_done: int
     queue_depth: int  # backlog left when the interval ended
     p50_latency_s: float
     p99_latency_s: float
+    # cotenant spaces only: each ring's windowed tok/s this interval
+    tenant_taus: Optional[dict] = None
 
 
 class ServingController:
@@ -135,7 +154,34 @@ class ServingController:
         )
         self.records: List[IntervalRecord] = []
         self._pending: Optional[Request] = None
-        self._c_index = space.index(CONCURRENCY_DIM)
+        # Cotenant spaces trade the single concurrency knob for per-tenant
+        # slot dims; exactly one of the two shapes is present.
+        self._c_index = (
+            space.index(CONCURRENCY_DIM)
+            if CONCURRENCY_DIM in space.names
+            else None
+        )
+        self._slot_indices = tenant_slot_indices(space)
+        if self._slot_indices:
+            rings = list(runtime.tenants.values())
+            if len(rings) != len(self._slot_indices):
+                raise ValueError(
+                    f"space has {len(self._slot_indices)} tenant slot dims "
+                    f"but the runtime has {len(rings)} tenant rings; "
+                    "add_tenant each co-served model before building the "
+                    "controller (slot dim k drives ring k in registration "
+                    "order)"
+                )
+            if any(r.tau_floor <= 0.0 for r in rings):
+                raise ValueError(
+                    "cotenant control scores joint headroom τ_k/floor_k: "
+                    "every tenant ring needs a positive tau_floor"
+                )
+            if drift_schedule is not None:
+                raise ValueError(
+                    "cotenant serving and device-drift schedules are not "
+                    "combined yet; tune one axis at a time"
+                )
         # Offload-aware spaces expose the route-fraction knob; when the
         # tuned space carries it, attach the uplink so admission can
         # genuinely ship requests (see ServingRuntime.set_offload).
@@ -162,13 +208,15 @@ class ServingController:
             pending_at = self._pending.arrival_s
             if pending_at is not None and pending_at > horizon_s:
                 return
-            self.runtime.submit(self._pending)
+            self.runtime.submit(self._pending, self._pending.tenant)
             self._pending = None
         for r in self.workload:
             if r.arrival_s is not None and r.arrival_s > horizon_s:
                 self._pending = r
                 return
-            self.runtime.submit(r)
+            # multi-tenant traces pre-stamp each request's tenant; None
+            # lands on the default ring (single-tenant traces unchanged)
+            self.runtime.submit(r, r.tenant)
 
     def control_step(self) -> IntervalRecord:
         """One control interval: propose → apply (concurrency for real,
@@ -202,6 +250,19 @@ class ServingController:
             ]
             names = names + ["host_cpu_freq", "host_cores"]
             knob_cfg = knob_cfg + [self.hw.nominal_host_freq, 6.0]
+        slots: List[int] = []
+        if self._slot_indices:
+            # the shared rail prices total occupancy: strip the per-tenant
+            # slot dims and pin concurrency to their sum (host cores fixed
+            # at the cotenant twin's operating point, device.cotenant)
+            slots = [max(1, int(round(cfg[i]))) for i in self._slot_indices]
+            keep = [
+                (n, v)
+                for n, v in zip(self.space.names, cfg)
+                if not n.startswith(TENANT_SLOT_PREFIX)
+            ]
+            names = [n for n, _ in keep] + ["concurrency", "host_cores"]
+            knob_cfg = [v for _, v in keep] + [float(sum(slots)), 6.0]
         dev_rel, power = analytic_scale_and_power(names, knob_cfg, self.hw)
         if self._phi_index is not None:
             # placement is enacted for real at admission; the radio's
@@ -231,11 +292,33 @@ class ServingController:
             power = power + state.static_inflation * (
                 self.hw.p_idle_chip + self.hw.p_host_idle
             )
-        self.runtime.set_concurrency(int(cfg[self._c_index]))
+        if self._slot_indices:
+            # slot dim k drives tenant ring k, in registration order
+            self.runtime.set_slot_allocation(
+                dict(zip(self.runtime.tenants, slots))
+            )
+        elif self._c_index is not None:
+            self.runtime.set_concurrency(int(cfg[self._c_index]))
         self.runtime.set_rate_scale(dev_rel)
         self._submit_until(self.runtime.now() + self.interval_s)
         m = self.runtime.run_for(self.interval_s, idle_wait=True)
-        tau = m["throughput_tok_s"]  # pacing already enacted the DVFS scale
+        tenant_taus = None
+        if self._slot_indices:
+            # per-ring windowed τ over the just-served interval, scalarized
+            # against the rings' floors — CORAL's τ channel is the joint
+            # headroom, so dual mode needs no per-tenant plumbing
+            tm = self.runtime.tenant_metrics(self.interval_s)
+            tenant_taus = {
+                n: tm[n]["throughput_tok_s"] for n in self.runtime.tenants
+            }
+            floors = [
+                ring.tau_floor for ring in self.runtime.tenants.values()
+            ]
+            tau = float(
+                joint_headroom(list(tenant_taus.values()), floors)
+            )
+        else:
+            tau = m["throughput_tok_s"]  # pacing already enacted DVFS
         r = self.opt.record(cfg, tau, power)
         rec = IntervalRecord(
             config=tuple(cfg),
@@ -246,6 +329,7 @@ class ServingController:
             queue_depth=int(m["queue_depth"]),
             p50_latency_s=m["p50_latency_s"],
             p99_latency_s=m["p99_latency_s"],
+            tenant_taus=tenant_taus,
         )
         self.records.append(rec)
         return rec

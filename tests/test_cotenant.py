@@ -1,0 +1,199 @@
+"""Multi-tenant co-inference twin tests (EXPERIMENTS.md §Multi-tenant).
+
+The co-tenancy invariants the tentpole is built around:
+
+  * the slot knobs are a real negotiation: granting a tenant more slots
+    raises its τ and *lowers* every neighbour's (interference flows
+    through the shared stream-contention kappa, not an exogenous drift
+    term);
+  * the measured channel is the scalarized (joint headroom, rail power)
+    pair — feasible ⇔ every tenant meets its floor — so CORAL's dual
+    mode, the batched joint oracle and the compiled episode engine all
+    run unchanged;
+  * the noise protocol is the exact-RNG contract of ``core.contracts``
+    §TWIN_RNG_PROTOCOL, byte-replayable by ``core.episode``;
+  * the recorded cell carries its calibration provenance (floors from
+    solo-max fractions, budget from the pmin anchor) and the
+    per-tenant-greedy ablation's joint evaluation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.coral import joint_headroom
+from repro.core.evaluate import CellSpec, run_cell, run_regime
+from repro.core.episode import run_static_requests
+from repro.core.space import tenant_slot_indices
+from repro.device import build_twin
+from repro.experiments import (
+    COTENANT_REGIMES,
+    MATRIX_COTENANT_CELLS,
+    WORKLOADS,
+    cotenant_cell_simulator,
+    resolve_cotenant_targets,
+    tenant_names,
+)
+
+CELL = MATRIX_COTENANT_CELLS[0]  # edge-xavier-nx / qwen2.5-3b+granite-8b
+
+
+# ---------------------------------------------------------- twin physics
+def test_slot_grant_helps_owner_hurts_neighbor():
+    """More slots for tenant 1 at fixed clocks: τ_1 rises, τ_0 falls —
+    the neighbour is a knob with a genuine cost, not exogenous drift."""
+    sim = cotenant_cell_simulator(CELL, noise=0.0)
+    grid = sim.space.grid()
+    i0, i1 = tenant_slot_indices(sim.space)
+    base = grid[(grid[:, i0] == 1.0) & (grid[:, i1] == 1.0)]
+    grown = base.copy()
+    grown[:, i1] = 3.0
+    tau_base = sim.tenant_taus(base)
+    tau_grown = sim.tenant_taus(grown)
+    assert (tau_grown[1] > tau_base[1] + 1e-12).all()
+    assert (tau_grown[0] < tau_base[0] - 1e-12).all()
+
+
+def test_headroom_is_min_over_tenant_floors():
+    """The scalarized τ channel is exactly min_k τ_k/floor_k, and
+    headroom ≥ 1 ⇔ every tenant individually meets its floor."""
+    sim = cotenant_cell_simulator(CELL, noise=0.0)
+    taus = sim.tenant_taus()
+    h, p = sim.exact_all()
+    manual = np.min(
+        [taus[k] / sim.floors[k] for k in range(sim.n_tenants)], axis=0
+    )
+    np.testing.assert_allclose(h, manual, rtol=1e-12)
+    np.testing.assert_allclose(h, joint_headroom(taus, sim.floors), rtol=1e-12)
+    all_met = np.all(
+        [taus[k] >= sim.floors[k] for k in range(sim.n_tenants)], axis=0
+    )
+    np.testing.assert_array_equal(h >= 1.0, all_met)
+    assert (p > 0).all()
+
+
+def test_shared_rail_rises_with_total_occupancy():
+    """One rail: adding any tenant's slots at fixed clocks can only raise
+    the shared draw (utilization grows), never lower it."""
+    sim = cotenant_cell_simulator(CELL, noise=0.0)
+    grid = sim.space.grid()
+    i0, i1 = tenant_slot_indices(sim.space)
+    lean = grid[(grid[:, i0] == 1.0) & (grid[:, i1] == 1.0)]
+    busy = lean.copy()
+    busy[:, i0] = 3.0
+    busy[:, i1] = 3.0
+    assert (sim.rail_power(busy) >= sim.rail_power(lean) - 1e-12).all()
+
+
+# ------------------------------------------------------ the RNG protocol
+def test_measure_all_matches_sequential_measures():
+    """core.contracts §TWIN_RNG_PROTOCOL: the (N, 2) config-major noise
+    block of ``measure_all`` is the same stream as N sequential
+    ``measure`` calls — the property the compiled engine's replay rests
+    on."""
+    rows = cotenant_cell_simulator(CELL, seed=3).space.grid()[:17]
+    batched = cotenant_cell_simulator(CELL, seed=3)
+    tb, pb = batched.measure_all(rows)
+    seq = cotenant_cell_simulator(CELL, seed=3)
+    ts, ps = zip(*(seq.measure(tuple(r)) for r in rows))
+    np.testing.assert_allclose(tb, ts, rtol=1e-12)
+    np.testing.assert_allclose(pb, ps, rtol=1e-12)
+    assert seq.n_measurements == batched.n_measurements == len(rows)
+
+
+def test_noise_free_twin_draws_nothing():
+    sim = cotenant_cell_simulator(CELL, noise=0.0, seed=5)
+    before = sim.rng.bit_generator.state["state"].copy()
+    sim.measure(next(iter(sim.space.all_configs())))
+    sim.measure_all(sim.space.grid()[:4])
+    assert sim.rng.bit_generator.state["state"] == before
+
+
+# ------------------------------------------------- engine ↔ scalar loop
+def test_engine_matches_scalar_on_cotenant_cell():
+    """The compiled episode engine replays the CotenantSimulator noise
+    protocol byte-for-byte on the joint slots × shared-DVFS space."""
+    sim0 = cotenant_cell_simulator(CELL, noise=0.0)
+    targets = resolve_cotenant_targets(CELL, sim0)
+    assert targets.mode == "dual" and targets.tau_target == 1.0
+    land_tau, land_p = sim0.exact_all()
+    _, workloads = tenant_names(CELL)
+    noise = max(WORKLOADS[w].noise for w in workloads)
+    seeds = (0, 1)
+    reqs = [
+        dict(space=sim0.space, land_tau=land_tau, land_p=land_p,
+             targets=targets, seed=s, noise=noise)
+        for s in seeds
+    ]
+    eps = run_static_requests(reqs, iters=12)
+    for seed, ep in zip(seeds, eps):
+        dev = cotenant_cell_simulator(CELL, seed=seed)
+        out, tr = run_regime(sim0.space, dev, targets, iters=12, seed=seed)
+        assert [tuple(c) for c in tr.configs] == [tuple(c) for c in ep.configs]
+        np.testing.assert_allclose(tr.taus, ep.taus, rtol=1e-12)
+        np.testing.assert_allclose(tr.powers, ep.powers, rtol=1e-12)
+        assert tuple(out.config) == tuple(ep.outcome.config)
+        assert out.tau == pytest.approx(ep.outcome.tau, rel=1e-12)
+        assert out.power == pytest.approx(ep.outcome.power, rel=1e-12)
+
+
+def test_run_cotenant_cell_records_identical_across_engines():
+    from repro.experiments.matrix import run_cotenant_cell
+
+    a = run_cotenant_cell(CELL, iters=12, seeds=(0, 1), engine="compiled")
+    b = run_cotenant_cell(CELL, iters=12, seeds=(0, 1), engine="scalar")
+    assert a == b
+
+
+# ----------------------------------------------- records & provenance
+def test_cotenant_calibration_provenance():
+    """The recorded cotenant block carries the calibration the gates rest
+    on: floors = tau_frac × solo max, τ* = 1 (headroom), budget = p_slack
+    × the pmin anchor, and the per-tenant-greedy combination is jointly
+    evaluated (and busts a constraint on this calibrated cell)."""
+    from repro.experiments.matrix import run_cotenant_cell
+
+    rec = run_cotenant_cell(CELL, iters=12, seeds=(0,))
+    c = rec["cotenant"]
+    regime = COTENANT_REGIMES[CELL.regime]
+    sim0 = cotenant_cell_simulator(CELL, noise=0.0)
+    assert c["p_slack"] == regime.p_slack
+    assert rec["tau_target"] == 1.0
+    h_all, p_all = sim0.exact_all()
+    assert rec["p_budget"] == pytest.approx(
+        regime.p_slack * p_all[h_all >= 1.0].min(), rel=1e-3
+    )
+    for k, t in enumerate(c["tenants"]):
+        assert t["floor"] == pytest.approx(
+            regime.tau_fracs[k] * t["solo_max"], rel=1e-3
+        )
+        assert t["floor"] == sim0.floors[k]
+    g = c["greedy"]
+    assert g["violates_tau"] or g["violates_power"]
+    h, p = sim0.exact(tuple(g["config"]))
+    assert g["headroom"] == pytest.approx(h, rel=1e-12)
+    assert g["power"] == pytest.approx(p, rel=1e-12)
+
+
+def test_run_cell_dispatches_cotenant_family():
+    from repro.experiments.matrix import run_cotenant_cell
+
+    out = run_cell(CellSpec(CELL, iters=12, seeds=(0,)))
+    assert out.family == "cotenant"
+    assert out.record == run_cotenant_cell(CELL, iters=12, seeds=(0,))
+
+
+def test_build_twin_dispatches_all_families():
+    from repro.device.cotenant import CotenantSimulator
+    from repro.device.network import OffloadSimulator
+    from repro.device.simulator import DeviceSimulator, DriftingSimulator
+    from repro.experiments.scenarios import (
+        MATRIX_DRIFT_CELLS,
+        MATRIX_OFFLOAD_CELLS,
+        Cell,
+    )
+
+    assert isinstance(build_twin(CELL), CotenantSimulator)
+    assert isinstance(build_twin(MATRIX_OFFLOAD_CELLS[0]), OffloadSimulator)
+    assert isinstance(build_twin(MATRIX_DRIFT_CELLS[0]), DriftingSimulator)
+    static = Cell("edge-xavier-nx", "qwen2.5-3b", "decode_steady", "single_tau")
+    assert isinstance(build_twin(static), DeviceSimulator)

@@ -150,13 +150,13 @@ def test_open_loop_baselines_match_scalar():
         assert ref.tau == got.tau and ref.power == got.power
 
 
-def test_run_cell_records_identical_across_engines():
+def test_run_static_cell_records_identical_across_engines():
     """The whole per-cell record — scores, violation flags, baselines —
     is engine-independent."""
-    from repro.experiments.matrix import run_cell
+    from repro.experiments.matrix import run_static_cell
 
-    a = run_cell(DUAL_CELL, seeds=(0, 1), engine="compiled")
-    b = run_cell(DUAL_CELL, seeds=(0, 1), engine="scalar")
+    a = run_static_cell(DUAL_CELL, seeds=(0, 1), engine="compiled")
+    b = run_static_cell(DUAL_CELL, seeds=(0, 1), engine="scalar")
     assert a == b
 
 

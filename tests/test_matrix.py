@@ -21,7 +21,7 @@ from repro.experiments import (
     cell_simulator,
     enumerate_cells,
     resolve_targets,
-    run_cell,
+    run_static_cell,
     run_matrix,
     validate_matrix_record,
 )
@@ -154,8 +154,8 @@ def test_dual_constraint_presets_violate_budget_coral_stays_feasible():
 
 
 # ---------------------------------------------------------- record + schema
-def test_run_cell_record_is_schema_shaped_and_scored():
-    rec = run_cell(DUAL_CELL, iters=10, seeds=(0, 1))
+def test_run_static_cell_record_is_schema_shaped_and_scored():
+    rec = run_static_cell(DUAL_CELL, iters=10, seeds=(0, 1))
     assert rec["coral"]["power_violations"] == 0
     assert rec["coral"]["score"] > 0.8
     assert rec["baselines"]["max_power"]["violates_power"]

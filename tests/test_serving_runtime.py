@@ -136,6 +136,143 @@ def test_concurrency_raises_measured_throughput(engine):
     assert peak <= 3.5 * best[1], best  # pipelining saturates, not linear
 
 
+@pytest.fixture(scope="module")
+def second_engine():
+    """A second registry model (distinct weights/shape from qwen2.5-3b)
+    for the co-serving tests."""
+    cfg = REGISTRY["hymba-1.5b"].reduced()
+    rcfg = RunConfig(remat="none", moe_impl="dense")
+    ctx = ApplyCtx(cfg, rcfg, None)
+    params = init_model_params(jax.random.PRNGKey(1), cfg, rcfg)
+    eng = ServingEngine(ctx, params, batch_size=2, max_len=64)
+    measure_runtime_throughput(eng, 1, prompt_len=8, new_tokens=2, groups=1)
+    return eng
+
+
+def test_two_registry_models_served_with_isolated_metrics(engine, second_engine):
+    """Two registry models co-served through per-tenant rings: each ring's
+    windowed metrics see only its own traffic (a burst on one tenant never
+    lands in the neighbour's record), the per-tenant τ are measurably
+    distinct, and the aggregate view still adds up."""
+    rt = ServingRuntime(engine, concurrency=2, window_s=4.0)
+    rt.add_tenant("hymba", engine=second_engine, slots=1, tau_floor=1.0)
+    # asymmetric load: a burst for the default tenant, a trickle for hymba
+    for rid in range(8):
+        rt.submit(_req(rid, 8, n=4))
+    for rid in range(2):
+        rt.submit(_req(100 + rid, 8, n=4), tenant="hymba")
+    m = rt.drain()
+    assert m["requests"] == 10 and m["queue_depth"] == 0
+    tm = rt.tenant_metrics()
+    assert set(tm) == {"default", "hymba"}
+    assert tm["default"]["requests"] == 8
+    assert tm["hymba"]["requests"] == 2
+    assert tm["hymba"]["tau_floor"] == 1.0
+    # every completion is tagged with its ring; neither pool leaked
+    assert all(r.tenant == "default" for r in rt.ring().done)
+    assert all(r.tenant == "hymba" for r in rt.ring("hymba").done)
+    # measurably distinct per-tenant τ: different models, different load
+    t0 = tm["default"]["throughput_tok_s"]
+    t1 = tm["hymba"]["throughput_tok_s"]
+    assert t0 > 0 and t1 > 0 and abs(t0 - t1) > 0.05 * max(t0, t1)
+
+
+def test_attribute_power_sums_exactly_to_rail(engine, second_engine):
+    rt = ServingRuntime(engine, concurrency=1, window_s=4.0)
+    rt.add_tenant("hymba", engine=second_engine, slots=1)
+    for rid in range(4):
+        rt.submit(_req(rid, 8, n=4))
+    for rid in range(2):
+        rt.submit(_req(100 + rid, 8, n=4), tenant="hymba")
+    rt.drain()
+    total = 7.3
+    att = rt.attribute_power(total)
+    assert set(att) == {"default", "hymba"}
+    assert sum(att.values()) == total  # exact, not approx — one rail
+    assert att["default"] > att["hymba"] > 0  # weighted by window tokens
+    # empty window (no traffic yet): equal split, still exact
+    idle = ServingRuntime(engine, concurrency=1)
+    idle.add_tenant("hymba", engine=second_engine)
+    att0 = idle.attribute_power(total)
+    assert sum(att0.values()) == total
+    assert att0["default"] == pytest.approx(att0["hymba"])
+
+
+def test_slot_allocation_shifts_tenant_throughput(engine):
+    """The live slot knob is a genuine resource split: 3-vs-1 slots beats
+    1-vs-3 for the favored tenant under saturating load on both rings."""
+
+    def tput(slots0, slots1):
+        rt = ServingRuntime(engine, concurrency=slots0, window_s=4.0)
+        rt.add_tenant("b", engine=engine, slots=slots1)
+        for rid in range(10):
+            rt.submit(_req(rid, 8, n=4))
+            rt.submit(_req(100 + rid, 8, n=4), tenant="b")
+        rt.set_slot_allocation({"default": slots0, "b": slots1})
+        rt.drain()
+        tm = rt.tenant_metrics()
+        return tm["default"]["throughput_tok_s"]
+
+    favored = max(tput(3, 1) for _ in range(2))
+    starved = min(tput(1, 3) for _ in range(2))
+    assert favored > starved
+
+
+def test_multitenant_controller_tunes_joint_headroom(engine, second_engine):
+    """Closed loop over a cotenant space: per-tenant slot dims are enacted
+    on the rings, feedback is the joint headroom against the rings' τ
+    floors, and the records carry the per-tenant split."""
+    from repro.core.space import cotenant_space, tenant_slot_indices
+    from repro.device.hw import get_profile
+
+    cap = measure_runtime_throughput(engine, 2, prompt_len=8, new_tokens=8,
+                                     groups=4)
+    rt = ServingRuntime(engine, concurrency=1)
+    rt.ring().tau_floor = 0.10 * cap
+    rt.add_tenant("hymba", engine=second_engine, slots=1,
+                  tau_floor=0.05 * cap)
+    space = cotenant_space("edge_xavier_nx", 2)
+    new_tokens = 8
+    iters, interval = 4, 0.4
+    tr0 = workload.steady(rate=0.2 * cap / new_tokens,
+                          duration_s=iters * interval + 1.0, prompt_lens=8,
+                          new_tokens=new_tokens, vocab=VOCAB, seed=1)
+    tr1 = workload.steady(rate=0.1 * cap / new_tokens,
+                          duration_s=iters * interval + 1.0, prompt_lens=8,
+                          new_tokens=new_tokens, vocab=VOCAB, seed=2)
+    for i, r in enumerate(tr1):
+        r.tenant = "hymba"
+        r.rid = 10000 + i
+    trace = sorted(tr0 + tr1, key=lambda r: r.arrival_s)
+    ctrl = ServingController(
+        rt, space, trace, tau_target=1.0, p_budget=1e9,
+        interval_s=interval, hw=get_profile("edge-xavier-nx").hw,
+    )
+    outcome, records = ctrl.run(iters)
+    assert len(records) == iters
+    slot_idx = tenant_slot_indices(space)
+    for rec in records:
+        assert set(rec.tenant_taus) == {"default", "hymba"}
+        # the τ channel is the scalarized joint headroom, not raw tok/s
+        floors = [rt.ring().tau_floor, rt.ring("hymba").tau_floor]
+        taus = [rec.tenant_taus["default"], rec.tenant_taus["hymba"]]
+        assert rec.tau == pytest.approx(min(t / f for t, f in zip(taus, floors)))
+    # the slot knobs were genuinely applied across intervals
+    assert len({tuple(r.config[i] for i in slot_idx) for r in records}) > 1
+
+
+def test_cotenant_controller_requires_floors_and_matching_rings(engine):
+    from repro.core.space import cotenant_space
+
+    space = cotenant_space("edge_xavier_nx", 2)
+    rt = ServingRuntime(engine, concurrency=1)  # one ring, two slot dims
+    with pytest.raises(ValueError, match="tenant rings"):
+        ServingController(rt, space, [], tau_target=1.0)
+    rt.add_tenant("b", engine=engine)  # floors unset (0.0)
+    with pytest.raises(ValueError, match="tau_floor"):
+        ServingController(rt, space, [], tau_target=1.0)
+
+
 def test_closed_loop_coral_finds_feasible_under_bursty_trace(engine):
     from repro.core import tpu_pod_space
     from repro.device.measure import analytic_scale_and_power

@@ -1,5 +1,5 @@
 """Training substrate (loss goes down, checkpoint roundtrip) and serving
-engine/scheduler integration."""
+engine/runtime integration."""
 import os
 
 import jax
@@ -10,7 +10,7 @@ import pytest
 from repro.configs.registry import REGISTRY
 from repro.configs.runtime import RunConfig
 from repro.models import ApplyCtx, init_model_params
-from repro.serving import Request, Scheduler, ServingEngine
+from repro.serving import Request, ServingEngine, ServingRuntime
 from repro.training import AdamWConfig, SyntheticLM, make_train_step
 from repro.training import checkpoint as ckpt
 from repro.training.adamw import init as adamw_init
@@ -78,17 +78,17 @@ def test_engine_generate_and_greedy_consistency():
     np.testing.assert_array_equal(out, out2)  # greedy is deterministic
 
 
-def test_scheduler_metrics():
+def test_runtime_drain_metrics():
     cfg = REGISTRY["qwen2.5-3b"].reduced()
     rcfg = RunConfig(remat="none", moe_impl="dense")
     ctx = ApplyCtx(cfg, rcfg, None)
     params = init_model_params(jax.random.PRNGKey(0), cfg, rcfg)
     eng = ServingEngine(ctx, params, batch_size=2, max_len=64)
-    sched = Scheduler(eng, batch_size=2, concurrency=2)
+    rt = ServingRuntime(eng, batch_size=2, concurrency=2)
     rng = np.random.default_rng(0)
     for rid in range(4):
-        sched.submit(Request(rid, rng.integers(0, cfg.vocab, 8, dtype=np.int32), 4))
-    m = sched.run()
+        rt.submit(Request(rid, rng.integers(0, cfg.vocab, 8, dtype=np.int32), 4))
+    m = rt.drain()
     assert m["requests"] == 4
     assert m["throughput_tok_s"] > 0
     assert m["p99_latency_s"] >= m["p50_latency_s"]
