@@ -26,6 +26,11 @@ Fails (exit 1) on
     violation, or whose presets / per-tenant-greedy combination became
     feasible — the calibrated floors must keep joint slot/DVFS
     negotiation necessary;
+  - a fault-injection cell (schema v6 ``fault_cells``) whose hardened
+    run scores below the 0.85 fault-free-oracle gate or records a true
+    power violation, or whose non-hardened ablation run ends feasible —
+    the injected faults must keep the hardened ingest/actuation path
+    necessary;
   - a kernel record whose max |err| vs the reference implementation grew
     past 10x its baseline, with an absolute floor of 1e-5 for near-exact
     baselines (interpret-mode wall time is never gated). Kernel records
@@ -145,6 +150,10 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
         for c in fresh.get(family, ()):
             key = (c["device"], c["model"], c["workload"], c["regime"])
             fresh_cells[key] = c["coral"]["score"]
+    # fault cells gate on the hardened score
+    for c in fresh.get("fault_cells", ()):
+        key = (c["device"], c["model"], c["workload"], c["regime"])
+        fresh_cells[key] = c["hardened"]["score"]
     compared = 0
     for key, floor in floors.items():
         score = fresh_cells.get(key)
@@ -229,6 +238,32 @@ def check_matrix(fresh: dict, base: dict, errors: List[str]) -> None:
             "presets/greedy combinations were feasible (calibrated floors "
             "must keep per-tenant-greedy and the static presets "
             "infeasible)"
+        )
+    # Fault cells (EXPERIMENTS.md §Fault tolerance): hardened CORAL must
+    # stay efficient under injection AND the scenario must keep its
+    # point — zero true power violations, and zero non-hardened ablation
+    # runs ending feasible (if the raw-ingest path survives the faults,
+    # the schedules no longer exercise the hardening).
+    from repro.experiments.matrix import FAULT_CORAL_GATE
+
+    for c in fresh.get("fault_cells", ()):
+        if c["hardened"]["score"] < FAULT_CORAL_GATE:
+            errors.append(
+                f"matrix:{c['device']}/{c['model']}/{c['regime']}: "
+                f"hardened fault score {c['hardened']['score']:.3f} < "
+                f"{FAULT_CORAL_GATE}"
+            )
+    if fsum.get("fault_power_violations"):
+        errors.append(
+            f"matrix: {fsum['fault_power_violations']} power-budget "
+            "violations in hardened fault cells"
+        )
+    if fsum.get("fault_feasible_ablations"):
+        errors.append(
+            f"matrix: {fsum['fault_feasible_ablations']} non-hardened "
+            "ablation runs ended feasible under fault injection (the "
+            "schedules must keep the hardened ingest/actuation path "
+            "necessary)"
         )
     # Episode-engine wall-clock: fresh full-grid speedups must hold 75%
     # of max(baseline, acceptance floor) — the floor keeps the gate

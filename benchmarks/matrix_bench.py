@@ -9,8 +9,11 @@ of the batched joint oracle with zero power violations and zero
 feasible presets/ablations (EXPERIMENTS.md §Offload), every multi-tenant
 cotenant cell ≥ 0.85 of the joint oracle with zero shared-rail
 violations and every preset + the per-tenant-greedy combination
-infeasible (EXPERIMENTS.md §Multi-tenant), and (full runs)
-the compiled
+infeasible (EXPERIMENTS.md §Multi-tenant), every fault-injection cell
+≥ 0.85 of the fault-free oracle for hardened CORAL with zero power
+violations while the non-hardened ablation ends infeasible or violating
+on every (cell, seed) run (EXPERIMENTS.md §Fault tolerance), and (full
+runs) the compiled
 episode engine ≥ 10×/5× over the scalar episode loops on the
 static/drift grids — both layers measured best-of-N on identical
 inputs, compile time reported separately (``episode_engine.compile_s``;
@@ -140,6 +143,7 @@ def bench_matrix_suite():
         DRIFT_ADAPTIVE_GATE,
         DRIFT_SEPARATION,
         DRIFT_STATIC_CEILING,
+        FAULT_CORAL_GATE,
         OFFLOAD_CORAL_GATE,
         REGIMES,
         enumerate_cells,
@@ -151,9 +155,11 @@ def bench_matrix_suite():
         FULL_MATRIX_WORKLOADS,
         MATRIX_COTENANT_CELLS,
         MATRIX_DRIFT_CELLS,
+        MATRIX_FAULT_CELLS,
         MATRIX_OFFLOAD_CELLS,
         QUICK_COTENANT_CELLS,
         QUICK_DRIFT_CELLS,
+        QUICK_FAULT_CELLS,
         QUICK_OFFLOAD_CELLS,
     )
 
@@ -167,12 +173,14 @@ def bench_matrix_suite():
         cells = enumerate_cells() + list(QUICK_DRIFT_CELLS)
         offload_cells = QUICK_OFFLOAD_CELLS
         cotenant_cells = QUICK_COTENANT_CELLS
+        fault_cells = QUICK_FAULT_CELLS
     else:
         cells = enumerate_cells(workloads=FULL_MATRIX_WORKLOADS) + list(
             MATRIX_DRIFT_CELLS
         )
         offload_cells = MATRIX_OFFLOAD_CELLS
         cotenant_cells = MATRIX_COTENANT_CELLS
+        fault_cells = MATRIX_FAULT_CELLS
     regenerate = ("QUICK=1 " if QUICK else "") + (
         "PYTHONPATH=src python -m benchmarks.matrix_bench"
     )
@@ -188,6 +196,7 @@ def bench_matrix_suite():
         quick=QUICK,
         offload_cells=offload_cells,
         cotenant_cells=cotenant_cells,
+        fault_cells=fault_cells,
     )
     elapsed_us = (time.perf_counter() - t0) * 1e6
     record["episode_engine"] = engine_probe
@@ -250,6 +259,15 @@ def bench_matrix_suite():
             0.0,
             f"coral={c['coral']['score']:.3f} floors={floors} "
             f"greedy_feasible={greedy_feasible}",
+        )
+    for c in record["fault_cells"]:
+        a = c["ablation"]
+        row(
+            f"fault_{c['regime']}_{c['device']}_{c['model']}",
+            0.0,
+            f"hardened={c['hardened']['score']:.3f} "
+            f"ablation_failed={a['failed_runs']}/{a['n_runs']} "
+            f"fallback={c['hardened']['fallback_intervals']:.1f}",
         )
 
     failures = []
@@ -333,6 +351,30 @@ def bench_matrix_suite():
             f"{s['cotenant_feasible_baselines']} cotenant presets/greedy "
             "combinations were feasible (gate: 0 — the floors must force "
             "joint slot/DVFS negotiation)"
+        )
+    # Fault-tolerance acceptance (EXPERIMENTS.md §Fault tolerance):
+    # hardened CORAL must hold ≥ FAULT_CORAL_GATE of the fault-free
+    # oracle on every fault cell with zero true power violations, while
+    # every non-hardened ablation run ends infeasible or violating —
+    # the ingest gate / watchdog / actuation readback must be
+    # demonstrably necessary, not merely present.
+    for c in record["fault_cells"]:
+        name = f"{c['device']}/{c['model']}/{c['regime']}"
+        if c["hardened"]["score"] < FAULT_CORAL_GATE:
+            failures.append(
+                f"fault cell {name}: hardened score "
+                f"{c['hardened']['score']:.3f} < {FAULT_CORAL_GATE}"
+            )
+    if s.get("fault_power_violations"):
+        failures.append(
+            f"{s['fault_power_violations']} power-budget violations in "
+            "hardened fault cells (gate: 0)"
+        )
+    if s.get("fault_feasible_ablations"):
+        failures.append(
+            f"{s['fault_feasible_ablations']} non-hardened ablation runs "
+            "ended feasible under fault injection (gate: 0 — the faults "
+            "must break the raw-ingest path)"
         )
     # Episode-engine wall-clock acceptance (full grid only: the trimmed
     # QUICK batch under-amortizes the compiled call). A miss triggers

@@ -85,6 +85,12 @@ DRIFT_CARRY_CONTRACT: Dict[str, str] = {
     "resets": 'Int32[Array, ""]',
 }
 
+# fault episodes add the actuation readback + telemetry watchdog state
+FAULT_CARRY_CONTRACT: Dict[str, str] = {
+    "applied_idx": 'Int32[Array, ""]',
+    "dark": 'Int32[Array, ""]',
+}
+
 # incremental dCor state (core/dcov.py::dcor_state_*)
 DCOR_STATE_CONTRACT: Dict[str, str] = {
     "win": 'Float32[Array, "W C"]',
@@ -226,14 +232,17 @@ def check_container(
             )
 
 
-def carry_contract(fleet: bool, drift: bool) -> Dict[str, str]:
+def carry_contract(fleet: bool, drift: bool, fault: bool = False) -> Dict[str, str]:
     """The contract table for one episode flavor: the base carry plus
-    the fleet dCor accumulators and/or the drift monitor fields."""
+    the fleet dCor accumulators, the drift monitor fields and/or the
+    fault actuation/watchdog fields."""
     table = dict(CARRY_CONTRACT)
     if fleet:
         table.update(FLEET_CARRY_CONTRACT)
     if drift:
         table.update(DRIFT_CARRY_CONTRACT)
+    if fault:
+        table.update(FAULT_CARRY_CONTRACT)
     return table
 
 
@@ -242,7 +251,8 @@ def check_carry(spec, carry: Mapping[str, object]) -> None:
     dims = {"T": spec.iters, "W": spec.window, "D": spec.d, "N": spec.n,
             "C": spec.d + 2}
     check_container(
-        "carry", carry, carry_contract(spec.fleet, spec.drift), dims
+        "carry", carry, carry_contract(spec.fleet, spec.drift, spec.fault),
+        dims,
     )
 
 

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core import search
 from repro.core.dcov import dcor_all
 from repro.core.drift import DriftConfig, DriftMonitor
+from repro.core.faults import RobustConfig, mad_reject
 from repro.core.reward import reward
 from repro.core.space import (
     Config,
@@ -130,6 +131,7 @@ class CORAL:
         gamma_mode: str = "max",  # max (paper) | directional (beyond-paper)
         mode: str = "dual",  # dual | throughput (single-target §IV-B)
         drift: Optional[DriftConfig] = None,
+        robust: Optional[RobustConfig] = None,
     ):
         self.space = space
         self.mode = mode
@@ -148,10 +150,12 @@ class CORAL:
         self.gamma_mode = gamma_mode
         self.state = CoralState()
         self.drift = drift
+        self.robust = robust
         self.clock = 0  # control-interval counter (explore + hold)
         self._held: Optional[Observation] = None
         self._monitor: Optional[DriftMonitor] = None
         self._retries = 0  # infeasible-hold retry epochs since last trigger
+        self._dark = 0  # consecutive rejected/missing telemetry samples
 
     # ------------------------------------------------------------------
     # Drift epochs
@@ -219,7 +223,14 @@ class CORAL:
         a pick whose reward was computed under the old budget. The
         static ablation (monitor off) never retries: one-shot tuning
         holds whatever it found.
+
+        With a ``RobustConfig``, a tripped telemetry watchdog (K
+        consecutive rejected/missing samples) pre-empts everything:
+        degrade to the safe config and hold it — no proposal, no probe
+        bookkeeping — until a sample is accepted again.
         """
+        if self.robust is not None and self._dark >= self.robust.watchdog:
+            return self.safe_config()
         if self.exploring:
             return self.propose()
         if self._held is None and self.drift is not None and self.drift.monitor:
@@ -235,7 +246,19 @@ class CORAL:
         """Unified observation entry: exploration measurements feed the
         optimizer, hold measurements feed the change-point monitor (a
         trigger starts the next exploration epoch, seeded with the held
-        config's just-measured post-shift performance)."""
+        config's just-measured post-shift performance).
+
+        With a ``RobustConfig``, the sample first passes the hardened
+        ingest gate: missing (NaN/inf) samples and MAD-flagged outliers
+        are dropped *before* they can reach the dCor window, the anchor
+        cascade, or the CUSUM monitor — the clock still advances, and
+        the consecutive-rejection counter feeds the watchdog."""
+        if self.robust is not None:
+            if self._robust_reject(tau, power):
+                self._dark += 1
+                self.clock += 1
+                return 0.0
+            self._dark = 0
         if self.exploring:
             return self.observe(config, tau, power)
         self.clock += 1
@@ -289,6 +312,64 @@ class CORAL:
         if draw > p_budget:
             self._retries = 0
             self.re_explore()
+
+    # ------------------------------------------------------------------
+    # Hardened ingest (EXPERIMENTS.md §Fault tolerance)
+    # ------------------------------------------------------------------
+    def _feasible32(self, tau: float, power: float) -> bool:
+        """Feasibility evaluated in float32 — the compiled fault step
+        checks the safe-fallback anchor against f32 carry scalars, and
+        the scalar path must make the identical call on the boundary."""
+        t32, p32 = np.float32(tau), np.float32(power)
+        if self.mode == "throughput":
+            return bool(p32 <= np.float32(self.p_budget))
+        return bool(
+            (t32 >= np.float32(self.tau_target))
+            and (p32 <= np.float32(self.p_budget))
+        )
+
+    def safe_config(self) -> Config:
+        """Graceful-degradation target while telemetry is dark: the best
+        anchor if it is still feasible under the current constraints,
+        ultimately the min-power row (never bust the power budget on a
+        device we cannot observe)."""
+        b = self.state.best
+        if b is not None and self._feasible32(b.tau, b.power):
+            return b.config
+        return self.space.preset("min_power")
+
+    def _robust_reject(self, tau: float, power: float) -> bool:
+        """Hardened ingest decision for one (τ, p) sample: missing
+        (non-finite) samples are always dropped; finite ones pass the
+        shared MAD outlier gate (``faults.mad_reject``) against the
+        current epoch window's float32 τ/p columns — the same jitted
+        computation the compiled fault step traces inline, on the same
+        window slice (``lo = max(epoch_start, n − W)``), so the two
+        engines cannot disagree about what enters the dCor window."""
+        if not (math.isfinite(tau) and math.isfinite(power)):
+            return True
+        rb = self.robust
+        st = self.state
+        n = len(st.history)
+        lo = max(st.epoch_start, n - self.window)
+        rows = st.history[lo:]
+        win_tau = np.zeros(self.window, np.float32)
+        win_p = np.zeros(self.window, np.float32)
+        for k, o in enumerate(rows):
+            win_tau[k] = o.tau
+            win_p[k] = o.power
+        return bool(
+            mad_reject(
+                jnp.asarray(win_tau),
+                jnp.asarray(win_p),
+                np.int32(len(rows)),
+                np.float32(tau),
+                np.float32(power),
+                np.float32(rb.gate_g),
+                np.float32(rb.gate_eps),
+                np.int32(rb.min_accept),
+            )
+        )
 
     # ------------------------------------------------------------------
     # Step 2: correlation analysis over the sliding window
@@ -495,3 +576,137 @@ class CORAL:
         if feas:
             return max(feas, key=lambda o: o.tau / max(o.power, 1e-9))
         return self.state.best
+
+    # ------------------------------------------------------------------
+    # Checkpoint / restore (docs/ARCHITECTURE.md §Checkpoint format)
+    # ------------------------------------------------------------------
+    def to_checkpoint(self) -> dict:
+        """Serialize the full optimizer state to a JSON-compatible dict.
+
+        Everything that influences a future decision goes in: the
+        observation history and anchors, the prohibited set, probe and
+        epoch bookkeeping, the control clock, drift-hold state (held
+        config + CUSUM monitor), the hardened-ingest dark counter, the
+        *current* constraints (a commanded budget change must survive a
+        restart), and the tie-break RNG's bit-generator state. A
+        restored optimizer continues byte-identically to one that never
+        stopped (``tests/test_faults.py`` pins this).
+        """
+
+        def _obs(o: Optional[Observation]):
+            if o is None:
+                return None
+            return [list(o.config), o.tau, o.power, o.reward, o.t]
+
+        st = self.state
+        mon = None
+        if self._monitor is not None:
+            m = self._monitor
+            mon = {
+                "ref_tau": m.ref_tau,
+                "ref_power": m.ref_power,
+                "sigma": m.sigma,
+                "calibration": m.calibration,
+                "calib_n": m._calib_n,
+                "samples": m.samples,
+                "k": m.tau_cusum.k,
+                "h": m.tau_cusum.h,
+                "tau_pos": m.tau_cusum.pos,
+                "tau_neg": m.tau_cusum.neg,
+                "p_pos": m.power_cusum.pos,
+                "p_neg": m.power_cusum.neg,
+            }
+        return {
+            "version": 1,
+            "mode": self.mode,
+            "dims": len(self.space.dims),
+            "window": self.window,
+            "tau_target": self.tau_target,
+            "p_budget": self.p_budget,
+            "clock": self.clock,
+            "retries": self._retries,
+            "dark": self._dark,
+            "held": _obs(self._held),
+            "monitor": mon,
+            "rng": self.rng.bit_generator.state,
+            "state": {
+                "best": _obs(st.best),
+                "second": _obs(st.second),
+                "last": _obs(st.last),
+                "prohibited": sorted(list(c) for c in st.prohibited),
+                "history": [_obs(o) for o in st.history],
+                "aside": st.aside,
+                "probed_for": (
+                    None if st.probed_for is None else list(st.probed_for)
+                ),
+                "power_probe_done": st.power_probe_done,
+                "epoch_start": st.epoch_start,
+                "resets": st.resets,
+            },
+        }
+
+    def restore(self, ckpt: dict) -> None:
+        """Load state from ``to_checkpoint`` output. The optimizer must
+        have been constructed with the same space/mode/window as the
+        checkpointed one (validated); constraints are taken from the
+        checkpoint — the live values at checkpoint time win over the
+        constructor arguments."""
+        if ckpt.get("version") != 1:
+            raise ValueError(f"unknown checkpoint version {ckpt.get('version')!r}")
+        if ckpt["mode"] != self.mode or ckpt["dims"] != len(self.space.dims):
+            raise ValueError("checkpoint does not match this optimizer's space/mode")
+        if ckpt["window"] != self.window:
+            raise ValueError("checkpoint window mismatch")
+
+        def _obs(row) -> Optional[Observation]:
+            if row is None:
+                return None
+            cfg, tau, power, r, t = row
+            return Observation(tuple(cfg), tau, power, r, t=int(t))
+
+        self.tau_target = ckpt["tau_target"]
+        self.p_budget = ckpt["p_budget"]
+        self.clock = int(ckpt["clock"])
+        self._retries = int(ckpt["retries"])
+        self._dark = int(ckpt["dark"])
+        self._held = _obs(ckpt["held"])
+        s = ckpt["state"]
+        self.state = CoralState(
+            best=_obs(s["best"]),
+            second=_obs(s["second"]),
+            last=_obs(s["last"]),
+            prohibited={tuple(c) for c in s["prohibited"]},
+            history=[_obs(o) for o in s["history"]],
+            aside=bool(s["aside"]),
+            probed_for=(
+                None if s["probed_for"] is None else tuple(s["probed_for"])
+            ),
+            power_probe_done=bool(s["power_probe_done"]),
+            epoch_start=int(s["epoch_start"]),
+            resets=int(s["resets"]),
+        )
+        mon = ckpt["monitor"]
+        if mon is None:
+            self._monitor = None
+        else:
+            m = DriftMonitor(
+                mon["ref_tau"],
+                mon["ref_power"],
+                sigma=mon["sigma"],
+                k_sigma=mon["k"],
+                h_sigma=mon["h"],
+                calibration=int(mon["calibration"]),
+            )
+            # DriftMonitor's constructor clamps the references; restore
+            # the exact running-mean values and CUSUM statistics on top.
+            m.ref_tau = mon["ref_tau"]
+            m.ref_power = mon["ref_power"]
+            m._calib_n = int(mon["calib_n"])
+            m.samples = int(mon["samples"])
+            m.tau_cusum.pos = mon["tau_pos"]
+            m.tau_cusum.neg = mon["tau_neg"]
+            m.power_cusum.pos = mon["p_pos"]
+            m.power_cusum.neg = mon["p_neg"]
+            self._monitor = m
+        self.rng = np.random.default_rng()
+        self.rng.bit_generator.state = ckpt["rng"]

@@ -27,6 +27,7 @@ did" — the cleanest possible drift signal.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 
@@ -83,6 +84,13 @@ class CusumDetector:
         self.neg = 0.0
 
     def update(self, z: float) -> bool:
+        # A non-finite residual must not touch the statistics: a NaN
+        # during reference calibration poisons the monitor forever, and
+        # even post-calibration `max(0.0, pos + nan - k)` silently wipes
+        # the accumulated statistic (argument-order quirk of Python's
+        # max). Skip the sample; the detector state is unchanged.
+        if not math.isfinite(z):
+            return self.tripped
         self.pos = max(0.0, self.pos + z - self.k)
         self.neg = max(0.0, self.neg - z - self.k)
         return self.tripped
@@ -125,6 +133,11 @@ class DriftMonitor:
         self.samples = 0
 
     def update(self, tau: float, power: float) -> bool:
+        # Missing/garbage telemetry (NaN or inf τ/p) is skipped before it
+        # can poison the calibration running mean or the CUSUMs — one NaN
+        # folded into ``ref_tau`` would disable detection permanently.
+        if not (math.isfinite(tau) and math.isfinite(power)):
+            return self.tripped
         self.samples += 1
         if self._calib_n < self.calibration:
             # running mean: average measurement noise out of the reference

@@ -75,7 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import contracts, sanitize, search
+from repro.core import contracts, faults, sanitize, search
 from repro.core.baselines import Outcome
 from repro.core.dcov import (
     dcor_all_cols,
@@ -136,6 +136,17 @@ class EngineSpec:
     h_sigma: float = 9.0
     max_retries: int = 2
     p_min: float = 0.0
+    # fault episodes: static episodes whose measurement tables carry
+    # spikes/NaN and whose actuation path can stick or firmware-reset;
+    # the robustness constants mirror core.faults.RobustConfig and are
+    # compile-time (one hardened-vs-ablation pair shares a program —
+    # ``hardened`` itself is traced episode data)
+    fault: bool = False
+    gate_g: float = 2.5
+    gate_eps: float = 0.7
+    min_accept: int = 5
+    watchdog: int = 3
+    act_retries: int = 3
 
     @property
     def n(self) -> int:
@@ -327,6 +338,13 @@ def _init_carry(spec: EngineSpec, ep: Dict, pad_mask) -> Dict[str, jnp.ndarray]:
             retries=i32(0),
             resets=i32(0),
         )
+    if spec.fault:
+        c.update(
+            # a rebooted device is on its firmware default row; the
+            # watchdog counter starts calm
+            applied_idx=jnp.asarray(ep["boot_idx"], i32),
+            dark=i32(0),
+        )
     # REPRO_CONTRACTS=1: validate against core/contracts.py (trace-time
     # only — nothing runs per scan step); rule RL04 cross-checks the
     # same tables statically
@@ -370,7 +388,13 @@ def _feasible(thr, tau, p, tau_target, p_budget):
 
 
 def _reward(thr, tau, p, tau_target, p_budget):
-    infeas = ~_feasible(thr, tau, p, tau_target, p_budget)
+    # the infeasibility predicate is spelled exactly as core.reward
+    # spells it — (τ < target) | (p > budget) — rather than ~_feasible.
+    # For real samples the two are identical; for the NaN missing-sample
+    # sentinel (fault episodes' non-hardened ablation) they differ, and
+    # the scalar reward() semantics are the executable spec: a NaN
+    # sample is neither prohibited nor a gain — its reward is NaN.
+    infeas = jnp.where(thr, p > p_budget, (tau < tau_target) | (p > p_budget))
     penalty = -(p / jnp.maximum(tau, 1e-9))
     gain = jnp.where(thr, tau, tau / jnp.maximum(p, 1e-9))
     return jnp.where(infeas, penalty, gain), infeas
@@ -625,6 +649,77 @@ def _fleet_step(spec: EngineSpec, k: Dict, ep: Dict, tables: Dict):
     return step
 
 
+def _fault_step(spec: EngineSpec, k: Dict, ep: Dict, tables: Dict):
+    """run_fault_regime's loop body: watchdog-guarded next_config →
+    faulty actuation → measure the config actually in force → hardened
+    ingest gate → observe. ``ep["hardened"]`` is traced data, so the
+    hardened run and its non-hardened ablation share one compiled
+    program; the fault realization itself lives in the measurement
+    tables (spikes/NaN baked in) and the per-interval ``stick``/``reset``
+    actuation streams."""
+    thr, tau_target, p_budget = ep["throughput"], ep["tau_target"], ep["p_budget"]
+    tid = ep["table_id"]
+    hardened = ep["hardened"]
+    retry_budget = jnp.where(hardened, jnp.int32(spec.act_retries), jnp.int32(0))
+    w = spec.window
+
+    def step(c, t):
+        # ---- next_config: watchdog guard over the normal proposal -----
+        cand, probe_updates = _propose(spec, k, c, thr, tau_target, p_budget)
+        guard = hardened & (c["dark"] >= jnp.int32(spec.watchdog))
+        feas_best = c["best_valid"] & _feasible(
+            thr, c["best_tau"], c["best_p"], tau_target, p_budget
+        )
+        safe = jnp.where(feas_best, c["best_idx"], k["min_idx"])
+        cmd = jnp.where(guard, safe, cand)
+        c = dict(c)
+        # probe bookkeeping belongs to the taken propose branch only
+        # (the scalar watchdog path returns before propose runs)
+        c["probe_done"] = jnp.where(
+            guard, c["probe_done"], probe_updates["probe_done"]
+        )
+        c["probed_for"] = jnp.where(
+            guard, c["probed_for"], probe_updates["probed_for"]
+        )
+
+        # ---- actuation: silently-sticking knobs + firmware resets -----
+        ok = ep["stick"][t] <= retry_budget
+        applied = jnp.where(ok, cmd, c["applied_idx"])
+        applied = jnp.where(ep["reset"][t], k["max_idx"], applied)
+        c["applied_idx"] = applied
+
+        # ---- measure the config actually in force ---------------------
+        tau, p = tables["tau"][tid, t, applied], tables["p"][tid, t, applied]
+        # hardened attributes via readback; the ablation trusts the
+        # command — exactly the misattribution the fault cells score
+        attr = jnp.where(hardened, applied, cmd)
+
+        # ---- hardened ingest gate (CORAL._robust_reject's math) -------
+        lo = jnp.maximum(c["epoch_start"], c["n_obs"] - w)
+        win = jax.lax.dynamic_slice(
+            c["hist_sm"], (lo, jnp.int32(0)), (w, spec.d + 2)
+        )
+        n_valid = c["n_obs"] - lo
+        missing = ~(jnp.isfinite(tau) & jnp.isfinite(p))
+        outlier = faults.mad_reject_trace(
+            win[:, spec.d],
+            win[:, spec.d + 1],
+            n_valid,
+            tau,
+            p,
+            jnp.float32(spec.gate_g),
+            jnp.float32(spec.gate_eps),
+            jnp.int32(spec.min_accept),
+        )
+        taken = jnp.where(hardened, ~(missing | outlier), jnp.bool_(True))
+        c = _observe(k, c, attr, tau, p, thr, tau_target, p_budget, taken)
+        c["dark"] = jnp.where(hardened & ~taken, c["dark"] + 1, jnp.int32(0))
+        c["clock"] = c["clock"] + 1
+        return c, (cmd, applied, taken, guard)
+
+    return step
+
+
 def _monitor_update(spec: EngineSpec, c: Dict, tau, p, gate):
     """DriftMonitor.update gated by ``gate``: running-mean calibration,
     then two-sided CUSUMs on the fractional (τ, p) residuals."""
@@ -814,6 +909,17 @@ def _compiled_runner_impl(spec: EngineSpec, checkified: bool):
                     "idx": idxs,
                     "exploring": exploring,
                     "resets": final["resets"],
+                }
+            elif spec.fault:
+                step = _fault_step(spec, k, ep, tables)
+                final, (cmds, applieds, takens, guards) = jax.lax.scan(
+                    step, c, ts, unroll=2
+                )
+                out = {
+                    "idx": cmds,
+                    "applied": applieds,
+                    "taken": takens,
+                    "guard": guards,
                 }
             elif spec.fleet:
                 step = _fleet_step(spec, k, ep, tables)
@@ -1255,6 +1361,204 @@ def run_drift_requests(
                 resets=int(res["resets"][i]),
                 result_config=result_config,
             )
+        )
+    return out
+
+
+def _fill_fault_tables(
+    meas_tau: np.ndarray,  # (U, T, N) float32 batch slot to fill at row u
+    meas_p: np.ndarray,
+    u: int,
+    land_tau: np.ndarray,  # (N0,) float64 stationary landscape
+    land_p: np.ndarray,
+    z: np.ndarray,  # (T, 2) float64 noise
+    ftab,  # realized core.faults.FaultTables
+) -> None:
+    """Write one fault episode's float32 measurement tables: the clean
+    float64 landscape × noise product (same clamp as ``_fill_tables``),
+    then the telemetry-spike factors in float64 — matching
+    ``FaultySimulator.measure``'s op order exactly — then NaN on dropped
+    intervals, cast to float32 once on assignment."""
+    t = z.shape[0]
+    n0 = land_tau.shape[0]
+    lt = np.broadcast_to(land_tau, (t, n0))
+    lp = np.broadcast_to(land_p, (t, n0))
+    tau64 = np.maximum(lt * (1.0 + z[:, :1]), 1e-9) * ftab.spike[:, 0:1]
+    p64 = np.maximum(lp * (1.0 + z[:, 1:]), 1e-9) * ftab.spike[:, 1:2]
+    tau64 = np.where(ftab.drop[:, None], np.nan, tau64)
+    p64 = np.where(ftab.drop[:, None], np.nan, p64)
+    meas_tau[u, :, :n0] = tau64
+    meas_p[u, :, :n0] = p64
+
+
+def fault_trace_f64(
+    land_tau: np.ndarray,
+    land_p: np.ndarray,
+    z: np.ndarray,
+    idxs: np.ndarray,  # (T,) applied grid rows
+    ftab,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Float64 telemetry trace at the *applied* configs with the fault
+    realization folded in — bitwise what ``FaultySimulator.measure``
+    returned each interval (NaN on dropped samples)."""
+    taus, powers = _trace_f64(land_tau, land_p, z, idxs)
+    taus = taus * ftab.spike[:, 0]
+    powers = powers * ftab.spike[:, 1]
+    taus = np.where(ftab.drop, np.nan, taus)
+    powers = np.where(ftab.drop, np.nan, powers)
+    return taus, powers
+
+
+def fault_pick(mode, h_idx, taus, powers, tau_target, p_budget) -> Optional[int]:
+    """CORAL.result() over a fault episode's *recorded* history rows.
+
+    NaN rewards (missing samples the ablation swallowed raw) rank below
+    everything in the best-by-reward fallback — deterministic for both
+    engines, since the matrix computes scalar and compiled results
+    through this one helper."""
+    rewards = _f64_reward(mode, taus, powers, tau_target, p_budget)
+    rewards = np.where(np.isnan(rewards), -np.inf, rewards)
+    return _f64_result(mode, h_idx, taus, powers, rewards, tau_target, p_budget)
+
+
+def run_fault_requests(
+    reqs: List[dict],
+    iters: int = 40,
+    window: int = 10,
+    robust=None,
+) -> List[dict]:
+    """Run a batch of fault episodes through the compiled engine.
+
+    Each request: {space, land_tau (N,), land_p (N,), targets, seed,
+    noise, hardened, and either ``tables`` (a realized
+    ``core.faults.FaultTables``) or ``schedule`` (a ``FaultSchedule``
+    realized here at (iters, seed))}. A hardened run and its ablation
+    that share the same ``tables`` *object* also share one shipped
+    measurement table (``table_id`` dedup). The whole batch is ONE
+    compiled vmapped call; ``robust`` (a ``RobustConfig``) sets the
+    compile-time hardening constants.
+
+    Returns per-request dicts: the commanded/applied row traces, the
+    float64 telemetry trace (NaN on drops), per-interval accepted /
+    fallback flags, the recorded-history rows, and the final pick
+    (``fault_pick`` over the recorded history — the same helper the
+    scalar cell runner uses).
+    """
+    if not reqs:
+        return []
+    rb = robust if robust is not None else faults.RobustConfig()
+    spaces = _batch_spaces(reqs)
+    spec = EngineSpec(
+        spaces=spaces,
+        iters=iters,
+        window=window,
+        fault=True,
+        gate_g=rb.gate_g,
+        gate_eps=rb.gate_eps,
+        min_accept=rb.min_accept,
+        watchdog=rb.watchdog,
+        act_retries=rb.act_retries,
+    )
+    b, n = len(reqs), spec.n
+    ftabs = [
+        r["tables"] if "tables" in r else r["schedule"].realize(iters, r["seed"])
+        for r in reqs
+    ]
+
+    uniq: Dict[tuple, int] = {}
+    table_ids = np.empty(b, np.int32)
+    uniq_rows: List[int] = []
+    for i, r in enumerate(reqs):
+        key = (id(r["land_tau"]), id(r["land_p"]), r["seed"], r["noise"],
+               id(ftabs[i]))
+        if key not in uniq:
+            uniq[key] = len(uniq_rows)
+            uniq_rows.append(i)
+        table_ids[i] = uniq[key]
+    meas_tau = np.full((len(uniq_rows), iters, n), 0.0, np.float32)
+    meas_p = np.full((len(uniq_rows), iters, n), 0.0, np.float32)
+    noises = [measurement_noise(r["seed"], r["noise"], iters) for r in reqs]
+    for u, i in enumerate(uniq_rows):
+        r = reqs[i]
+        _fill_fault_tables(
+            meas_tau, meas_p, u, r["land_tau"], r["land_p"], noises[i],
+            ftabs[i],
+        )
+
+    ep = {
+        "space_id": np.empty(b, np.int32),
+        "table_id": table_ids,
+        "tau_target": np.empty(b, np.float32),
+        "p_budget": np.empty(b, np.float32),
+        "throughput": np.empty(b, bool),
+        "hardened": np.empty(b, bool),
+        "boot_idx": np.empty(b, np.int32),
+        "stick": np.empty((b, iters), np.int32),
+        "reset": np.empty((b, iters), bool),
+    }
+    # hardened constraint back-off: the optimizer chases the
+    # margin-shrunk budget (scoring upstream always uses the full one) —
+    # the same f64 multiply evaluate.run_fault_regime hands its CORAL
+    eff_budget = [
+        r["targets"].p_budget * (1.0 - rb.p_margin)
+        if r["hardened"]
+        else r["targets"].p_budget
+        for r in reqs
+    ]
+    for i, r in enumerate(reqs):
+        sp = r["space"]
+        ep["space_id"][i] = spaces.index(sp)
+        ep["tau_target"][i] = _engine_tau_target(r["targets"].mode, r["targets"])
+        ep["p_budget"][i] = np.float32(eff_budget[i])
+        ep["throughput"][i] = r["targets"].mode == "throughput"
+        ep["hardened"][i] = bool(r["hardened"])
+        ep["boot_idx"][i] = _space_consts(sp)["max_idx"]
+        ep["stick"][i] = ftabs[i].stick[:iters]
+        ep["reset"][i] = ftabs[i].reset[:iters]
+    batch = {name: jnp.asarray(v) for name, v in ep.items()}
+    tables = {"tau": jnp.asarray(meas_tau), "p": jnp.asarray(meas_p)}
+    res = jax.device_get(_compiled_runner(spec)(batch, tables))
+
+    out: List[dict] = []
+    for i, r in enumerate(reqs):
+        mode = r["targets"].mode
+        rows = space_rows(r["space"])
+        applieds = res["applied"][i]
+        taus, powers = fault_trace_f64(
+            r["land_tau"], r["land_p"], noises[i], applieds, ftabs[i]
+        )
+        n_obs = int(res["n_obs"][i])
+        h_t = res["hist_t"][i][:n_obs]
+        h_idx = res["hist_idx"][i][:n_obs]
+        rec_taus, rec_powers = taus[h_t], powers[h_t]
+        pick = fault_pick(
+            mode, h_idx, rec_taus, rec_powers,
+            r["targets"].tau_target, eff_budget[i],
+        )
+        if pick is not None:
+            result_config = rows[int(h_idx[pick])]
+            outcome = Outcome(
+                result_config,
+                float(rec_taus[pick]),
+                float(rec_powers[pick]),
+                iters,
+            )
+        else:
+            result_config, outcome = None, Outcome(None, 0.0, 0.0, iters)
+        out.append(
+            {
+                "commanded": [rows[int(j)] for j in res["idx"][i]],
+                "applied": [rows[int(j)] for j in applieds],
+                "taus": [float(v) for v in taus],
+                "powers": [float(v) for v in powers],
+                "accepted": [bool(v) for v in res["taken"][i]],
+                "fallback": [bool(v) for v in res["guard"][i]],
+                "rec_idx": h_idx.astype(np.int64),
+                "rec_t": h_t.astype(np.int64),
+                "n_obs": n_obs,
+                "result_config": result_config,
+                "outcome": outcome,
+            }
         )
     return out
 

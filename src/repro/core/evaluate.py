@@ -60,7 +60,8 @@ class CellSpec:
     ``cell`` is a ``repro.experiments.scenarios.Cell`` (its regime name
     selects the family); ``iters=None`` takes the family's calibrated
     measurement budget (10 static, ``OFFLOAD_ITERS`` offload,
-    ``COTENANT_ITERS`` cotenant; drift cells pace by intervals instead).
+    ``COTENANT_ITERS`` cotenant, ``FAULT_ITERS`` fault; drift cells pace
+    by intervals instead).
     """
 
     cell: object
@@ -73,8 +74,8 @@ class CellSpec:
 @dataclasses.dataclass(frozen=True)
 class CellRecord:
     """A family-tagged, JSON-ready cell record (``family`` is one of
-    "static" | "drift" | "offload" | "cotenant"; ``record`` is the
-    matching ``BENCH_matrix`` array entry)."""
+    "static" | "drift" | "offload" | "cotenant" | "fault"; ``record`` is
+    the matching ``BENCH_matrix`` array entry)."""
 
     family: str
     record: dict
@@ -102,6 +103,11 @@ def run_cell(spec: CellSpec) -> CellRecord:
         iters = matrix.OFFLOAD_ITERS if spec.iters is None else spec.iters
         return CellRecord(
             "offload", matrix.run_offload_cell(cell, iters=iters, **kw)
+        )
+    if cell.regime in scenarios.FAULT_REGIMES:
+        iters = matrix.FAULT_ITERS if spec.iters is None else spec.iters
+        return CellRecord(
+            "fault", matrix.run_fault_cell(cell, iters=iters, **kw)
         )
     if scenarios.REGIMES[cell.regime].dynamic:
         return CellRecord("drift", matrix.run_drift_cell(cell, **kw))
@@ -262,6 +268,80 @@ def run_coral(
     if res is None:
         return Outcome(None, 0.0, 0.0, iters), tr
     return Outcome(res.config, res.tau, res.power, iters), tr
+
+
+@dataclasses.dataclass
+class FaultTrace:
+    """Per-interval record of a fault run: what was commanded, what was
+    actually in force, what came back over telemetry, and what the
+    hardened ingest did with it."""
+
+    commanded: List[tuple]
+    applied: List[tuple]
+    taus: List[float]
+    powers: List[float]
+    accepted: List[bool]  # sample survived the hardened ingest gate
+    fallback: List[bool]  # watchdog held the safe config this interval
+
+
+def run_fault_regime(
+    space: ConfigSpace,
+    device,  # a FaultySimulator (set_time + actuate + measure)
+    targets: RegimeTargets,
+    iters: int = 40,
+    window: int = 10,
+    seed: int = 0,
+    hardened: bool = True,
+    robust=None,
+) -> tuple[CORAL, FaultTrace]:
+    """Closed loop over a fault-injected device twin — the scalar
+    executable specification of ``episode.run_fault_requests``.
+
+    Each control interval: the optimizer commands a config; the
+    actuation path applies it (or silently sticks / firmware-resets —
+    the hardened controller retries up to ``robust.act_retries`` times,
+    the ablation writes blind); the twin measures the config *actually
+    in force*, possibly spiking or dropping the sample in transit.
+    Hardened CORAL attributes the measurement to the readback config and
+    runs it through the robust ingest gate; the non-hardened ablation
+    attributes it to the *commanded* config and swallows it raw —
+    exactly the two failure couplings the fault cells score.
+    """
+    from repro.core.faults import RobustConfig
+
+    rb = robust if robust is not None else RobustConfig()
+    # hardened constraint back-off: chase the margin-shrunk budget so
+    # boundary noise cannot flip an over-budget config to feasible
+    # (scoring upstream always uses the full budget)
+    p_budget = targets.p_budget * (1.0 - rb.p_margin) if hardened else targets.p_budget
+    opt = CORAL(
+        space,
+        targets.tau_target,
+        p_budget,
+        window=window,
+        seed=seed,
+        mode=targets.mode,
+        robust=rb if hardened else None,
+    )
+    tr = FaultTrace([], [], [], [], [], [])
+    for t in range(iters):
+        device.set_time(t)
+        # read the watchdog *before* next_config: that is the state the
+        # compiled step's guard sees for this interval
+        guarded = hardened and opt._dark >= rb.watchdog
+        cmd = opt.next_config()
+        applied = device.actuate(cmd, retries=rb.act_retries if hardened else 0)
+        tau, p = device.measure(applied)
+        attr = applied if hardened else cmd
+        n_before = len(opt.state.history)
+        opt.record(attr, tau, p)
+        tr.commanded.append(tuple(cmd))
+        tr.applied.append(tuple(applied))
+        tr.taus.append(tau)
+        tr.powers.append(p)
+        tr.accepted.append(len(opt.state.history) > n_before)
+        tr.fallback.append(guarded)
+    return opt, tr
 
 
 # The interpreter loops above are the *equivalence baseline* for the

@@ -1,0 +1,276 @@
+"""Declarative fault injection + hardened-ingest knobs (EXPERIMENTS.md
+§Fault tolerance).
+
+Real edge deployments are not the fault-free world the rest of the stack
+assumes: telemetry samples go missing or come back as garbage, a DVFS /
+concurrency knob silently sticks at its previous value, a firmware
+watchdog resets the governor to its default row, and the edge→pod link
+drops shipped requests. ``FaultSchedule`` composes those failure modes
+as *data* — the same declarative-schedule shape ``DriftSchedule`` uses —
+and ``realize`` turns a schedule into per-interval numpy fault tables
+with a prefix-stable RNG stream, so the scalar reference loop
+(``evaluate.run_fault_regime``) and the compiled episode engine
+(``episode.run_fault_requests``) consume byte-identical realizations.
+
+The hardened side lives here too: ``RobustConfig`` bundles the ingest
+knobs (MAD outlier gate, missing-sample watchdog, actuation-retry
+budget) that CORAL and the serving controller share, and ``mad_reject``
+is the one gate implementation both engines call — the scalar path
+through the jitted wrapper, the compiled fault step by tracing the same
+function inline — so the accept/reject decision can never fork.
+
+Fault semantics (mirrored exactly in ``device.FaultySimulator`` and
+``episode._fault_step``):
+
+- ``SensorDropout``    — the interval's (τ, p) sample is missing; the
+  twin reports NaN for both channels (the noise stream still advances,
+  so dropped intervals don't shift later draws).
+- ``TelemetrySpike``   — heavy-tailed multiplicative outliers: the
+  sample is scaled by ``exp(±u·ln(magnitude))`` with u ~ U[1, 2] — the
+  unit-mismatch / counter-wrap class of glitch, orders of magnitude off.
+- ``ActuationFailure`` — the knob silently sticks: the realization draws
+  the number of *failed actuation attempts* for the interval; an
+  attempt budget of R (hardened readback+retry) actuates iff the draw
+  is ≤ R, a single blind write (the ablation) iff it is 0.
+- ``FirmwareReset``    — the config snaps to the firmware default row
+  (the ``max_power`` preset: performance-governor boot defaults are the
+  dangerous, realistic kind) regardless of what was commanded.
+- ``PodLinkOutage``    — the edge→pod offload path drops shipped
+  requests during the window; consumed by the serving runtime
+  (``ServingRuntime.set_pod_outage``), not the device twin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# realization stream tag — keeps fault draws disjoint from the twin's
+# measurement-noise stream and the fleet's perturbation stream
+_FAULT_STREAM = 777_013
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorDropout:
+    """Missing (τ, p) samples: each interval in [start, stop) is dropped
+    with probability ``rate``."""
+
+    start: int = 0
+    stop: int = 1_000_000
+    rate: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpike:
+    """Heavy-tailed multiplicative outliers on the reported sample:
+    intervals in [start, stop) spike with probability ``rate``; the
+    factor is ``exp(s·u·ln(magnitude))`` with u ~ U[1, 2] and s = ±1
+    (``direction``: "up" | "down" | "both"). ``axis`` selects the τ
+    channel, the p channel, or a correlated glitch on both."""
+
+    start: int = 0
+    stop: int = 1_000_000
+    rate: float = 0.1
+    magnitude: float = 1000.0
+    axis: str = "tau"  # tau | power | both
+    direction: str = "both"  # up | down | both
+
+
+@dataclasses.dataclass(frozen=True)
+class ActuationFailure:
+    """Silently-sticking knobs: intervals in [start, stop) fail with
+    probability ``rate``; a firing interval draws the number of failed
+    actuation attempts from Geometric(1/mean_tries) (support ≥ 1)."""
+
+    start: int = 0
+    stop: int = 1_000_000
+    rate: float = 0.2
+    mean_tries: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FirmwareReset:
+    """The config snaps to the firmware default row (``max_power``
+    preset) at exactly the listed intervals."""
+
+    at: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PodLinkOutage:
+    """The edge→pod link is down for intervals in [start, stop): shipped
+    requests error/time out and must be re-admitted locally."""
+
+    start: int = 0
+    stop: int = 0
+
+
+FaultEvent = Union[
+    SensorDropout, TelemetrySpike, ActuationFailure, FirmwareReset, PodLinkOutage
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTables:
+    """One realized fault episode over T control intervals — plain numpy
+    data shared verbatim by the scalar loop and the compiled engine:
+    ``drop (T,) bool``, ``spike (T, 2) float64`` multiplicative factors
+    (1.0 = clean), ``stick (T,) int32`` failed actuation attempts,
+    ``reset (T,) bool``, ``pod_out (T,) bool``."""
+
+    drop: np.ndarray
+    spike: np.ndarray
+    stick: np.ndarray
+    reset: np.ndarray
+    pod_out: np.ndarray
+
+    @staticmethod
+    def clean(intervals: int) -> "FaultTables":
+        """The fault-free realization (every table inert)."""
+        return FaultTables(
+            drop=np.zeros(intervals, bool),
+            spike=np.ones((intervals, 2), np.float64),
+            stick=np.zeros(intervals, np.int32),
+            reset=np.zeros(intervals, bool),
+            pod_out=np.zeros(intervals, bool),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """A named, declarative composition of fault events — pure data, so
+    fault regimes enumerate in the scenario matrix exactly like drift
+    regimes do (``experiments.scenarios.FAULTS``)."""
+
+    name: str
+    events: Tuple[FaultEvent, ...] = ()
+
+    def realize(self, intervals: int, seed: int) -> FaultTables:
+        """Realize the schedule over ``intervals`` control intervals.
+
+        Each event draws from its own prefix-stable stream
+        ``default_rng([seed, _FAULT_STREAM, event_index])`` (the
+        ``sample_perturbations`` pattern), so adding an event never
+        shifts the realization of the others and the same (schedule,
+        seed, T) always produces byte-identical tables.
+        """
+        t = np.arange(intervals)
+        out = FaultTables.clean(intervals)
+        drop, spike = out.drop, out.spike
+        stick, reset, pod_out = out.stick, out.reset, out.pod_out
+        for i, ev in enumerate(self.events):
+            rng = np.random.default_rng([seed, _FAULT_STREAM, i])
+            if isinstance(ev, SensorDropout):
+                window = (t >= ev.start) & (t < ev.stop)
+                drop |= window & (rng.random(intervals) < ev.rate)
+            elif isinstance(ev, TelemetrySpike):
+                window = (t >= ev.start) & (t < ev.stop)
+                fire = window & (rng.random(intervals) < ev.rate)
+                if ev.direction == "up":
+                    sign = np.ones(intervals)
+                elif ev.direction == "down":
+                    sign = -np.ones(intervals)
+                else:
+                    sign = np.where(rng.random(intervals) < 0.5, 1.0, -1.0)
+                u = 1.0 + rng.random(intervals)
+                factor = np.exp(sign * u * np.log(ev.magnitude))
+                factor = np.where(fire, factor, 1.0)
+                if ev.axis in ("tau", "both"):
+                    spike[:, 0] *= factor
+                if ev.axis in ("power", "both"):
+                    spike[:, 1] *= factor
+            elif isinstance(ev, ActuationFailure):
+                window = (t >= ev.start) & (t < ev.stop)
+                fire = window & (rng.random(intervals) < ev.rate)
+                tries = rng.geometric(1.0 / max(ev.mean_tries, 1.0), intervals)
+                stick[:] = np.maximum(
+                    stick, np.where(fire, tries, 0).astype(np.int32)
+                )
+            elif isinstance(ev, FirmwareReset):
+                for at in ev.at:
+                    if 0 <= at < intervals:
+                        reset[at] = True
+            elif isinstance(ev, PodLinkOutage):
+                pod_out |= (t >= ev.start) & (t < ev.stop)
+            else:
+                raise TypeError(f"unknown fault event {ev!r}")
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Hardened-ingest knobs shared by CORAL, the serving controller and
+    the compiled fault engine (mirrored into ``EngineSpec``'s fault
+    fields — the two must agree or scalar↔compiled parity breaks).
+
+    ``gate_g``/``gate_eps`` — the MAD outlier gate: a sample is rejected
+        when its log-deviation from the window's (lower-)median exceeds
+        ``gate_g · (1.4826·MAD + gate_eps)``. The eps floor (in log
+        units, ≈ a 2× multiplicative band at the default) keeps a
+        near-degenerate window — e.g. a watchdog fallback re-measuring
+        one config — from rejecting every legitimately different sample.
+    ``min_accept`` — window fill level below which the outlier gate
+        stays open (missing samples are still skipped).
+    ``watchdog`` — consecutive rejected/missing samples before the
+        controller degrades to the safe config (last known-feasible
+        anchor, ultimately the min-power row).
+    ``act_retries`` — actuation verification budget: readback + retry up
+        to this many times before accepting that the knob is stuck (the
+        residual is then attributed to the config actually in force).
+    ``backoff_s`` — base of the exponential backoff between actuation
+        retries in the live serving controller (the twin path retries
+        within the interval and never sleeps).
+    ``p_margin`` — constraint back-off (robust-MPC style): the hardened
+        optimizer chases ``p_budget · (1 − p_margin)`` so that ordinary
+        measurement noise near the budget boundary cannot flip a
+        truly-over-budget config to feasible. Scoring always uses the
+        full budget; the margin only shrinks what the optimizer targets.
+        The default covers ≳2σ of the matrix workloads' sample noise.
+    """
+
+    gate_g: float = 2.5
+    gate_eps: float = 0.7
+    min_accept: int = 5
+    watchdog: int = 3
+    act_retries: int = 3
+    backoff_s: float = 0.05
+    p_margin: float = 0.05
+
+
+def mad_reject_trace(win_tau, win_p, n_valid, tau, p, gate_g, gate_eps,
+                     min_accept):
+    """The MAD outlier gate on one (τ, p) sample, as traceable jnp ops.
+
+    ``win_tau``/``win_p`` are the current dCor window's float32 τ/p
+    columns (length W, rows ≥ ``n_valid`` ignored), exactly as the
+    compiled carry stores them; the scalar path passes the same values
+    through the jitted ``mad_reject`` wrapper so both engines run the
+    identical float32 op sequence. Deviations are measured in log space
+    (spikes are multiplicative) from the lower median, against a scale
+    of ``1.4826·MAD + gate_eps``. Below ``min_accept`` accepted samples
+    the gate stays open. NaN samples fall through (all comparisons
+    false) — missing-sample handling is the caller's separate check.
+    """
+
+    def deviates(vals, x):
+        mask = jnp.arange(vals.shape[0], dtype=jnp.int32) < n_valid
+        logs = jnp.where(
+            mask, jnp.log(jnp.maximum(vals, jnp.float32(1e-9))), jnp.inf
+        )
+        mid = jnp.maximum((n_valid - 1) // 2, 0)
+        med = jnp.sort(logs)[mid]
+        dev = jnp.where(mask, jnp.abs(logs - med), jnp.inf)
+        mad = jnp.sort(dev)[mid]
+        scale = jnp.float32(1.4826) * mad + gate_eps
+        x_log = jnp.log(jnp.maximum(x, jnp.float32(1e-9)))
+        return jnp.abs(x_log - med) > gate_g * scale
+
+    return (n_valid >= min_accept) & (deviates(win_tau, tau) | deviates(win_p, p))
+
+
+# the scalar ingest path (CORAL.record) calls the gate through this
+# jitted wrapper — same XLA computation as the compiled fault step
+mad_reject = jax.jit(mad_reject_trace)

@@ -22,6 +22,7 @@ from repro.device.power import PowerModel  # noqa: F401
 from repro.device.simulator import (  # noqa: F401
     DeviceSimulator,
     DriftingSimulator,
+    FaultySimulator,
     build_cell_simulator,
     jetson_like_simulator,
     synthetic_terms,

@@ -10,6 +10,7 @@ decides which twin is built —
   drift regime       → ``DriftingSimulator``       (non-stationary wrap)
   offload regime     → ``OffloadSimulator``        (edge↔pod joint grid)
   cotenant regime    → ``CotenantSimulator``       (multi-tenant rail)
+  fault regime       → ``FaultySimulator``         (fault-injected wrap)
 
 Every twin honors the same measurement surface and the exact-RNG noise
 protocol (``core.contracts`` §TWIN_RNG_PROTOCOL): ``measure`` /
@@ -38,6 +39,8 @@ def build_twin(cell, noise: Optional[float] = None, seed: int = 0):
         return sc.cotenant_cell_simulator(cell, noise=noise, seed=seed)
     if cell.regime in sc.OFFLOAD_REGIMES:
         return sc.offload_cell_simulator(cell, noise=noise, seed=seed)
+    if cell.regime in sc.FAULT_REGIMES:
+        return sc.fault_cell_simulator(cell, noise=noise, seed=seed)
     regime = sc.REGIMES[cell.regime]
     if regime.dynamic:
         return sc.drifting_cell_simulator(cell, noise=noise, seed=seed)

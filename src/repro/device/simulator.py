@@ -249,6 +249,82 @@ class DriftingSimulator:
         return np.maximum(tau, 1e-9), np.maximum(p, 1e-9)
 
 
+class FaultySimulator:
+    """A faulty device twin: a stationary simulator wrapped with realized
+    ``FaultTables`` (``core.faults``) on a control-interval clock — the
+    fault-family analogue of ``DriftingSimulator``.
+
+    The *device* is stationary; what breaks is everything around it:
+
+      ``measure``  returns the base twin's noisy sample scaled by the
+          interval's telemetry-spike factors, or (NaN, NaN) on a sensor
+          dropout. The base noise stream still advances on dropped
+          intervals (the sample was taken, it just never arrived), so
+          fault and fault-free runs stay draw-for-draw aligned — the
+          compiled engine's fault tables bake the identical values.
+      ``actuate``  models the knob write path: the commanded config takes
+          effect only if the interval's failed-attempt count is within
+          the caller's retry budget (hardened readback+retry passes
+          ``RobustConfig.act_retries``; the blind ablation passes 0),
+          otherwise the knob silently sticks at the previous applied
+          config. A firmware reset then snaps to the default row (the
+          ``max_power`` preset) regardless. Returns the config actually
+          in force; ``readback`` re-reads it without side effects.
+      ``exact``/``exact_all`` stay the *fault-free* ground truth — what
+          the device genuinely does at a config — which is exactly what
+          oracle scoring must use.
+    """
+
+    def __init__(self, base: DeviceSimulator, tables):
+        self.base = base
+        self.space = base.space
+        self.tables = tables
+        self.noise = base.noise
+        self.rng = base.rng
+        self.n_measurements = 0
+        self.t = 0
+        # a rebooted device comes up on its firmware default row
+        self._applied = self.space.preset("max_power")
+
+    def set_time(self, t: int) -> None:
+        self.t = int(t)
+
+    @property
+    def pod_down(self) -> bool:
+        """True while the edge→pod link outage is active (serving layer)."""
+        return bool(self.tables.pod_out[self.t])
+
+    def actuate(self, config: Config, retries: int = 0) -> Config:
+        """Attempt to apply ``config`` with ``retries`` extra attempts;
+        returns the config actually in force afterwards."""
+        if int(self.tables.stick[self.t]) <= int(retries):
+            self._applied = tuple(config)
+        if bool(self.tables.reset[self.t]):
+            self._applied = self.space.preset("max_power")
+        return self._applied
+
+    def readback(self) -> Config:
+        return self._applied
+
+    def exact(self, config: Config) -> Tuple[float, float]:
+        return self.base.exact(config)
+
+    def exact_all(
+        self, configs: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        return self.base.exact_all(configs)
+
+    def measure(self, config: Config) -> Tuple[float, float]:
+        tau, p = self.base.measure(config)
+        self.n_measurements += 1
+        t = self.t
+        tau *= float(self.tables.spike[t, 0])
+        p *= float(self.tables.spike[t, 1])
+        if bool(self.tables.drop[t]):
+            return float("nan"), float("nan")
+        return tau, p
+
+
 def synthetic_terms(kind: str = "balanced", n_chips: int = 256) -> RooflineTerms:
     """Workload stand-ins for tests/examples before a dry-run exists."""
     kinds = {

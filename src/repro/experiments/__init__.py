@@ -11,11 +11,14 @@ from repro.experiments.matrix import (  # noqa: F401
     DRIFT_ADAPTIVE_GATE,
     DRIFT_SEPARATION,
     DRIFT_STATIC_CEILING,
+    FAULT_CORAL_GATE,
+    FAULT_ITERS,
     OFFLOAD_CORAL_GATE,
     OFFLOAD_ITERS,
     run_cell,
     run_cotenant_cell,
     run_drift_cell,
+    run_fault_cell,
     run_matrix,
     run_offload_cell,
     run_static_cell,
@@ -40,9 +43,13 @@ from repro.experiments.scenarios import (  # noqa: F401
     DRIFT_INTERVALS,
     DRIFT_SHIFT_START,
     DRIFTS,
+    FAULT_INTERVALS,
+    FAULT_REGIMES,
+    FAULTS,
     MATRIX_COTENANT_CELLS,
     MATRIX_DEVICES,
     MATRIX_DRIFT_CELLS,
+    MATRIX_FAULT_CELLS,
     MATRIX_MODELS,
     MATRIX_OFFLOAD_CELLS,
     MATRIX_REGIMES,
@@ -50,11 +57,13 @@ from repro.experiments.scenarios import (  # noqa: F401
     OFFLOAD_REGIMES,
     QUICK_COTENANT_CELLS,
     QUICK_DRIFT_CELLS,
+    QUICK_FAULT_CELLS,
     QUICK_OFFLOAD_CELLS,
     REGIMES,
     WORKLOADS,
     Cell,
     CotenantRegime,
+    FaultRegime,
     OffloadRegime,
     Regime,
     Workload,
@@ -62,8 +71,11 @@ from repro.experiments.scenarios import (  # noqa: F401
     cotenant_cell_simulator,
     drifting_cell_simulator,
     enumerate_cells,
+    fault_cell_simulator,
+    fault_tables,
     offload_cell_simulator,
     resolve_cotenant_targets,
+    resolve_fault_targets,
     resolve_offload_targets,
     resolve_targets,
     tenant_names,

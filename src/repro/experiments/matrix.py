@@ -53,6 +53,7 @@ from repro.core.episode import (
     alert_online_outcome,
     preset_outcome,
     run_drift_requests,
+    run_fault_requests,
     run_static_requests,
 )
 from repro.core.evaluate import (
@@ -60,22 +61,30 @@ from repro.core.evaluate import (
     Trace,
     measurements_to_feasible,
     run_drift_regime,
+    run_fault_regime,
     run_regime,
 )
 from repro.core.space import row_index, tenant_slot_indices
 from repro.device.factory import build_twin
+from repro.device.simulator import FaultySimulator
 from repro.experiments.scenarios import (
     COTENANT_REGIMES,
     DRIFT_INTERVALS,
     DRIFT_SHIFT_START,
+    FAULT_INTERVALS,
+    FAULT_REGIMES,
     MATRIX_COTENANT_CELLS,
+    MATRIX_FAULT_CELLS,
     MATRIX_OFFLOAD_CELLS,
     OFFLOAD_REGIMES,
     REGIMES,
     WORKLOADS,
     Cell,
+    _fault_base_cell,
     enumerate_cells,
+    fault_tables,
     resolve_cotenant_targets,
+    resolve_fault_targets,
     resolve_offload_targets,
     resolve_targets,
     tenant_names,
@@ -665,6 +674,222 @@ def run_cotenant_cell(
 
 
 # ---------------------------------------------------------------------------
+# Fault (injected-failure) cells
+# ---------------------------------------------------------------------------
+
+# Fault cells run the FAULT_INTERVALS timeline (explore → fault window →
+# recover) and are scored against the *fault-free* oracle: the question
+# is what the chosen config actually delivers once the glitch is gone,
+# so both scoring and the oracle use the base cell's noise-free twin.
+# Acceptance levels (gated in benchmarks/matrix_bench.py and
+# check_regression.py): hardened CORAL must hold ≥ FAULT_CORAL_GATE of
+# the fault-free oracle with zero true power busts on every cell, while
+# the non-hardened ablation — same twin, same fault realization — must
+# end infeasible or violating on every (cell, seed).
+FAULT_ITERS = FAULT_INTERVALS
+FAULT_CORAL_GATE = 0.85
+
+
+def _prep_fault_cell(cell: Cell, iters: int, seeds: Sequence[int]) -> dict:
+    """Fault-cell precompute: the *base* cell's noise-free twin (faults
+    corrupt the measurement/actuation path, so ground truth is the clean
+    landscape), the base regime's targets, the fault-free oracle, and
+    one realized fault-table set per seed — shared by the hardened run,
+    the ablation, and both engines, so every comparison sees the same
+    glitches."""
+    base = _fault_base_cell(cell)
+    sim0 = build_twin(base, noise=0.0)
+    targets = resolve_fault_targets(cell)
+    land_tau, land_p = sim0.exact_all()
+    oracle_ref = oracle(sim0.space, sim0, targets.tau_target, targets.p_budget)
+    return {
+        "sim0": sim0,
+        "space": sim0.space,
+        "targets": targets,
+        "land_tau": land_tau,
+        "land_p": land_p,
+        "oracle": oracle_ref,
+        "noise": WORKLOADS[cell.workload].noise,
+        "tables": {s: fault_tables(cell, s, intervals=iters) for s in seeds},
+    }
+
+
+def _fault_requests(
+    prep: dict, seeds: Sequence[int], hardened: bool
+) -> List[dict]:
+    return [
+        {
+            "space": prep["space"],
+            "land_tau": prep["land_tau"],
+            "land_p": prep["land_p"],
+            "targets": prep["targets"],
+            "seed": seed,
+            "noise": prep["noise"],
+            "tables": prep["tables"][seed],
+            "hardened": hardened,
+        }
+        for seed in seeds
+    ]
+
+
+def _scalar_fault_runs(
+    cell: Cell,
+    prep: dict,
+    seeds: Sequence[int],
+    hardened: bool,
+    iters: int,
+    window: int,
+) -> List[dict]:
+    """Per-seed Python fault loops, normalized to the engine's run shape
+    (equivalence baseline for the fault-enlarged episode engine)."""
+    runs = []
+    for seed in seeds:
+        dev = FaultySimulator(
+            build_twin(_fault_base_cell(cell), seed=seed), prep["tables"][seed]
+        )
+        opt, tr = run_fault_regime(
+            prep["space"], dev, prep["targets"], iters=iters, window=window,
+            seed=seed, hardened=hardened,
+        )
+        res = opt.result()
+        runs.append(
+            {
+                "outcome": (
+                    Outcome(res.config, res.tau, res.power, iters)
+                    if res is not None
+                    else Outcome(None, 0.0, 0.0, iters)
+                ),
+                "accepted": list(tr.accepted),
+                "fallback": list(tr.fallback),
+            }
+        )
+    return runs
+
+
+def _fault_variant_record(
+    prep: dict, runs: List[dict], seeds: Sequence[int]
+) -> dict:
+    """Score one variant (hardened or ablation) from per-seed run shapes.
+    Everything is evaluated on the fault-free twin: the fault episode
+    decided *which* config got picked; what that config truly delivers
+    is a property of the clean landscape."""
+    sim0, targets, oracle_ref = prep["sim0"], prep["targets"], prep["oracle"]
+    scores: List[float] = []
+    misses: List[bool] = []
+    busts: List[bool] = []
+    failed: List[bool] = []  # ended infeasible (no pick or violating pick)
+    fallbacks: List[int] = []
+    rejected: List[int] = []
+    best: Optional[Tuple[float, float, float, tuple]] = None
+    for run in runs:
+        out = run["outcome"]
+        if out.config is None:
+            scores.append(0.0)
+            misses.append(True)
+            busts.append(False)
+            failed.append(True)
+        else:
+            tau, power = sim0.exact(out.config)
+            miss, bust = _violations(tau, power, targets)
+            s = 0.0 if (miss or bust) else _score(
+                tau, power, targets.mode, oracle_ref
+            )
+            scores.append(s)
+            misses.append(miss)
+            busts.append(bust)
+            failed.append(bool(miss or bust))
+            if not (miss or bust) and (best is None or s > best[0]):
+                best = (s, tau, power, tuple(out.config))
+        fallbacks.append(int(sum(run["fallback"])))
+        rejected.append(len(run["accepted"]) - int(sum(run["accepted"])))
+    n = len(seeds)
+    return {
+        "score": sum(scores) / n,
+        "score_min": min(scores),
+        "score_floor": round(max(0.0, min(scores) - SCORE_FLOOR_MARGIN), 4),
+        "violation_rate": sum(a or b for a, b in zip(misses, busts)) / n,
+        "power_violations": int(sum(busts)),
+        # per-seed "ended infeasible or violating" count — the ablation
+        # gate requires failed_runs == n_runs on every fault cell
+        "n_runs": n,
+        "failed_runs": int(sum(failed)),
+        "fallback_intervals": sum(fallbacks) / n,
+        "rejected_samples": sum(rejected) / n,
+        "tau": best[1] if best else 0.0,
+        "power": best[2] if best else 0.0,
+        "config": list(best[3]) if best else None,
+    }
+
+
+def _fault_cell_record(
+    cell: Cell,
+    prep: dict,
+    hardened_runs: List[dict],
+    ablation_runs: List[dict],
+    iters: int,
+    seeds: Sequence[int],
+) -> dict:
+    regime = FAULT_REGIMES[cell.regime]
+    targets = prep["targets"]
+    return {
+        "device": cell.device,
+        "model": cell.model,
+        "workload": cell.workload,
+        "regime": cell.regime,
+        "mode": targets.mode,
+        "tau_target": targets.tau_target,
+        "p_budget": targets.p_budget if targets.capped else None,
+        "space_size": prep["space"].size(),
+        "fault": {
+            "schedule": regime.fault,
+            "base_regime": regime.base,
+            "intervals": iters,
+        },
+        "oracle": {
+            "config": (
+                list(prep["oracle"].config) if prep["oracle"].config else None
+            ),
+            "tau": prep["oracle"].tau,
+            "power": prep["oracle"].power,
+            "measurements": prep["oracle"].measurements,
+        },
+        "hardened": _fault_variant_record(prep, hardened_runs, seeds),
+        "ablation": _fault_variant_record(prep, ablation_runs, seeds),
+    }
+
+
+def run_fault_cell(
+    cell: Cell,
+    iters: int = FAULT_ITERS,
+    seeds: Sequence[int] = (0, 1, 2),
+    window: int = 10,
+    engine: str = "compiled",
+) -> dict:
+    """One fault-injection cell → one JSON-ready record (the
+    ``fault_cells`` entry of schema v6 — see ``repro.experiments.schema``
+    and docs/BENCH_SCHEMAS.md).
+
+    Runs hardened CORAL (robust ingest gate + watchdog fallback +
+    actuation readback/retry) and the non-hardened ablation through the
+    same fault-injected twin — byte-identical fault realizations — and
+    scores both against the fault-free oracle."""
+    prep = _prep_fault_cell(cell, iters, seeds)
+    runs = {}
+    for hardened in (True, False):
+        if engine == "compiled":
+            runs[hardened] = run_fault_requests(
+                _fault_requests(prep, seeds, hardened),
+                iters=iters,
+                window=window,
+            )
+        else:
+            runs[hardened] = _scalar_fault_runs(
+                cell, prep, seeds, hardened, iters, window
+            )
+    return _fault_cell_record(cell, prep, runs[True], runs[False], iters, seeds)
+
+
+# ---------------------------------------------------------------------------
 # Dynamic (drift) cells
 # ---------------------------------------------------------------------------
 
@@ -971,6 +1196,7 @@ def run_matrix(
     window: int = 10,
     offload_cells: Optional[Sequence[Cell]] = None,
     cotenant_cells: Optional[Sequence[Cell]] = None,
+    fault_cells: Optional[Sequence[Cell]] = None,
 ) -> dict:
     """Run every cell and assemble the schema'd BENCH_matrix record.
 
@@ -999,6 +1225,8 @@ def run_matrix(
         offload_cells = MATRIX_OFFLOAD_CELLS if cells is None else ()
     if cotenant_cells is None:
         cotenant_cells = MATRIX_COTENANT_CELLS if cells is None else ()
+    if fault_cells is None:
+        fault_cells = MATRIX_FAULT_CELLS if cells is None else ()
     if cells is None:
         cells = enumerate_cells()
     static_cells = [c for c in cells if not REGIMES[c.regime].dynamic]
@@ -1099,6 +1327,42 @@ def run_matrix(
     ]
     wall["cotenant_score_s"] = time.perf_counter() - t0
 
+    # ---- fault cells ---------------------------------------------------
+    t0 = time.perf_counter()
+    fpreps = {c: _prep_fault_cell(c, FAULT_ITERS, seeds) for c in fault_cells}
+    wall["fault_prep_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fault_runs: Dict[Tuple[Cell, bool], list] = {}
+    if engine == "compiled":
+        reqs, owners = [], []
+        for c in fault_cells:
+            for hardened in (True, False):
+                cell_reqs = _fault_requests(fpreps[c], seeds, hardened)
+                owners.extend([(c, hardened)] * len(cell_reqs))
+                reqs.extend(cell_reqs)
+        if reqs:
+            outs = run_fault_requests(reqs, iters=FAULT_ITERS, window=window)
+            for owner, out in zip(owners, outs):
+                fault_runs.setdefault(owner, []).append(out)
+    else:
+        for c in fault_cells:
+            for hardened in (True, False):
+                fault_runs[(c, hardened)] = _scalar_fault_runs(
+                    c, fpreps[c], seeds, hardened, FAULT_ITERS, window
+                )
+    wall["fault_episodes_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fault_records = [
+        _fault_cell_record(
+            c, fpreps[c], fault_runs[(c, True)], fault_runs[(c, False)],
+            FAULT_ITERS, seeds,
+        )
+        for c in fault_cells
+    ]
+    wall["fault_score_s"] = time.perf_counter() - t0
+
     # ---- drift cells ---------------------------------------------------
     t0 = time.perf_counter()
     dpreps = {c: _prep_drift_cell(c, DRIFT_INTERVALS) for c in dynamic_cells}
@@ -1150,9 +1414,12 @@ def run_matrix(
         )
     wall["drift_score_s"] = time.perf_counter() - t0
 
-    all_cells = list(cells) + list(offload_cells) + list(cotenant_cells)
+    all_cells = (
+        list(cells) + list(offload_cells) + list(cotenant_cells)
+        + list(fault_cells)
+    )
     return {
-        "schema_version": 5,
+        "schema_version": 6,
         "regenerate": regenerate,
         "quick": quick,
         "engine": engine,
@@ -1166,13 +1433,16 @@ def run_matrix(
             "regimes": sorted({c.regime for c in cells}),
             "offload_regimes": sorted({c.regime for c in offload_cells}),
             "cotenant_regimes": sorted({c.regime for c in cotenant_cells}),
+            "fault_regimes": sorted({c.regime for c in fault_cells}),
         },
         "cells": records,
         "drift_cells": drift_records,
         "offload_cells": offload_records,
         "cotenant_cells": cotenant_records,
+        "fault_cells": fault_records,
         "summary": _summarize(
-            records, drift_records, offload_records, cotenant_records
+            records, drift_records, offload_records, cotenant_records,
+            fault_records,
         ),
     }
 
@@ -1182,6 +1452,7 @@ def _summarize(
     drift_records: List[dict] = (),
     offload_records: List[dict] = (),
     cotenant_records: List[dict] = (),
+    fault_records: List[dict] = (),
 ) -> dict:
     single = [
         r["coral"]["score"] for r in records if REGIMES[r["regime"]].single_target
@@ -1275,6 +1546,25 @@ def _summarize(
                 )
             )
         ),
+        "n_fault_cells": len(fault_records),
+        "min_fault_hardened_score": (
+            min(r["hardened"]["score"] for r in fault_records)
+            if fault_records
+            else None
+        ),
+        "fault_power_violations": int(
+            sum(r["hardened"]["power_violations"] for r in fault_records)
+        ),
+        # Count of non-hardened ablation (cell, seed) runs that ended
+        # feasible — the tentpole claim is that this stays 0: under the
+        # injected faults, only the hardened ingest/actuation path ends
+        # on a truly-feasible operating point.
+        "fault_feasible_ablations": int(
+            sum(
+                r["ablation"]["n_runs"] - r["ablation"]["failed_runs"]
+                for r in fault_records
+            )
+        ),
     }
     return summary
 
@@ -1300,4 +1590,7 @@ def score_floors(record: dict) -> Dict[Tuple[str, str, str, str], float]:
     for c in record.get("cotenant_cells", ()):
         key = (c["device"], c["model"], c["workload"], c["regime"])
         floors[key] = c["coral"]["score_floor"]
+    for c in record.get("fault_cells", ()):
+        key = (c["device"], c["model"], c["workload"], c["regime"])
+        floors[key] = c["hardened"]["score_floor"]
     return floors

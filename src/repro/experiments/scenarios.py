@@ -28,11 +28,20 @@ from repro.device.hw import (
     ThermalRamp,
     get_profile,
 )
+from repro.core.faults import (
+    ActuationFailure,
+    FaultSchedule,
+    FaultTables,
+    FirmwareReset,
+    SensorDropout,
+    TelemetrySpike,
+)
 from repro.device.cotenant import CotenantSimulator
 from repro.device.network import OffloadSimulator, get_network
 from repro.device.simulator import (
     DeviceSimulator,
     DriftingSimulator,
+    FaultySimulator,
     build_cell_simulator,
 )
 
@@ -494,6 +503,181 @@ def resolve_cotenant_targets(
     p_anchor = float(p_all[h_all >= 1.0].min())
     return RegimeTargets(
         mode="dual", tau_target=1.0, p_budget=round(p_anchor * regime.p_slack, 3)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRegime:
+    """One fault regime: a stationary base regime (whose constraint shape
+    and landscape the cell keeps — faults corrupt the *measurement and
+    actuation path*, never the device physics) plus a named ``FAULTS``
+    schedule injected into it (EXPERIMENTS.md §Fault tolerance)."""
+
+    name: str
+    base: str  # REGIMES key supplying the (τ target, power budget) shape
+    fault: str  # FAULTS schedule key
+
+    @property
+    def dual_constraint(self) -> bool:
+        return REGIMES[self.base].dual_constraint
+
+    @property
+    def mode(self) -> str:
+        return REGIMES[self.base].mode
+
+
+# Control-interval timeline shared by every fault cell: the 10-sample
+# static budget is too short to even see a blackout + recovery, so fault
+# episodes run 40 intervals (explore → fault window → recover).
+FAULT_INTERVALS = 40
+
+# Named fault schedules. Each was validated against the fault grid below:
+# hardened CORAL holds ≥ 0.85 of the fault-free oracle with zero budget
+# violations on every cell, while the non-hardened ablation — same twin,
+# same realization — ends infeasible or violating on every cell
+# (benchmarks/check_regression.py gates both directions).
+FAULTS: Dict[str, FaultSchedule] = {
+    # Garbage telemetry under load: heavy-tailed spikes on both channels
+    # plus lost samples. The τ channel wraps *upward* (counter-wrap /
+    # unit-mismatch reads huge) — the decisive poison for a blind
+    # ingester: one up-spiked τ on an in-budget row that truly misses
+    # the floor anoints it best-feasible forever. The p channel glitches
+    # both ways, prohibiting good rows. The MAD gate rejects all of it.
+    "telemetry-storm": FaultSchedule(
+        "telemetry-storm",
+        (
+            # a stuck counter spews garbage for 6 straight exploration
+            # intervals (right after the gate's 5-sample calibration
+            # prefix — the probes measured there are mostly infeasible
+            # rows, which is what makes the poison fatal to the ablation)
+            TelemetrySpike(
+                start=6, stop=10, rate=1.0, magnitude=1000.0, axis="tau",
+                direction="up",
+            ),
+            TelemetrySpike(
+                start=10, rate=0.25, magnitude=1000.0, axis="power",
+                direction="up",
+            ),
+            SensorDropout(start=10, rate=0.2),
+        ),
+    ),
+    # The telemetry daemon dies for 8 straight intervals, then comes back
+    # glitchy: trips the watchdog (dark ≥ K) → degrade to the safe anchor
+    # → resume exploration when samples return.
+    "sensor-blackout": FaultSchedule(
+        "sensor-blackout",
+        (
+            SensorDropout(start=12, stop=20, rate=1.0),
+            # the daemon comes back glitchy: the blind ingester learned
+            # nothing from eight NaN intervals, so it is still probing
+            # infeasible rows when the garbage window opens
+            TelemetrySpike(
+                start=20, stop=25, rate=1.0, magnitude=1000.0, axis="tau",
+                direction="up",
+            ),
+            SensorDropout(start=26, rate=0.15),
+        ),
+    ),
+    # Sticky knobs + governor resets: commanded ≠ applied, so the blind
+    # writer attributes the max-power boot row's draw (or a stale
+    # config's τ) to whatever it commanded; readback + bounded retry
+    # keeps the hardened ledger attributed to the config in force.
+    "flaky-actuator": FaultSchedule(
+        "flaky-actuator",
+        (
+            ActuationFailure(start=3, rate=0.35, mean_tries=2.0),
+            FirmwareReset(at=(14, 26)),
+            TelemetrySpike(
+                start=6, stop=8, rate=1.0, magnitude=1000.0, axis="tau",
+                direction="up",
+            ),
+            SensorDropout(start=10, rate=0.15),
+        ),
+    ),
+}
+
+FAULT_REGIMES: Dict[str, FaultRegime] = {
+    r.name: r
+    for r in (
+        FaultRegime("fault-telemetry", base="strict_dual", fault="telemetry-storm"),
+        FaultRegime("fault-blackout", base="strict_dual", fault="sensor-blackout"),
+        FaultRegime("fault-actuator", base="strict_dual", fault="flaky-actuator"),
+    )
+}
+
+# Fault cells: every fault regime on both matrix devices — fault
+# injection corrupts the measurement/actuation path, so unlike drift
+# there is no device whose *landscape* shelters it.
+MATRIX_FAULT_CELLS: Tuple[Cell, ...] = (
+    Cell("edge-xavier-nx", "qwen2.5-3b", "decode_steady", "fault-telemetry"),
+    Cell("edge-orin-nano", "granite-8b", "decode_steady", "fault-telemetry"),
+    Cell("edge-xavier-nx", "granite-8b", "decode_steady", "fault-blackout"),
+    Cell("edge-orin-nano", "qwen2.5-3b", "decode_steady", "fault-blackout"),
+    Cell("edge-xavier-nx", "qwen2.5-3b", "decode_steady", "fault-actuator"),
+    Cell("edge-orin-nano", "granite-8b", "decode_steady", "fault-actuator"),
+)
+
+# QUICK (CI-smoke) subset: one telemetry-path and one actuation-path cell.
+QUICK_FAULT_CELLS: Tuple[Cell, ...] = (
+    MATRIX_FAULT_CELLS[0],
+    MATRIX_FAULT_CELLS[5],
+)
+
+
+def _fault_base_cell(cell: Cell) -> Cell:
+    """The stationary cell a fault cell corrupts (same device/model/
+    workload, the regime swapped for the fault regime's base)."""
+    return Cell(
+        cell.device, cell.model, cell.workload, FAULT_REGIMES[cell.regime].base
+    )
+
+
+def fault_tables(cell: Cell, seed: int, intervals: int = FAULT_INTERVALS) -> FaultTables:
+    """The cell's realized fault tables at one seed — deterministic, so
+    the scalar twin, the compiled engine and the scoring path all consume
+    byte-identical realizations without sharing objects."""
+    return FAULTS[FAULT_REGIMES[cell.regime].fault].realize(intervals, seed)
+
+
+def fault_cell_simulator(
+    cell: Cell, noise: Optional[float] = None, seed: int = 0
+) -> FaultySimulator:
+    """Build the cell's fault-injected twin: the base regime's stationary
+    simulator wrapped in the schedule's realization at this seed.
+    ``noise=0.0`` still injects faults — the ground-truth twin for fault
+    cells is the *base* cell's simulator (``build_twin`` on
+    ``_fault_base_cell``), because scoring asks what the chosen config
+    delivers once the glitch is gone."""
+    return FaultySimulator(
+        cell_simulator(_fault_base_cell(cell), noise=noise, seed=seed),
+        fault_tables(cell, seed),
+    )
+
+
+# Fault cells re-center the τ target at this fraction of the
+# budget-constrained frontier (the best τ any in-budget row achieves).
+# With the base regime's slack target, every in-budget row on the larger
+# devices already meets τ, so a corrupted pick can only waste power —
+# never violate. Fault tolerance is scored where it matters: near the
+# feasibility boundary, where one swallowed outlier is the difference
+# between a valid pick and a violating one.
+FAULT_TAU_TIGHTEN = 0.9
+
+
+def resolve_fault_targets(cell: Cell) -> RegimeTargets:
+    """Absolute targets for a fault cell: the base regime's power budget
+    (faults never move the power goalpost), with the τ target raised to
+    ``FAULT_TAU_TIGHTEN`` of the budget-constrained frontier so the
+    feasible set is a boundary sliver on every device class."""
+    import numpy as np
+
+    base = resolve_targets(_fault_base_cell(cell))
+    sim0 = cell_simulator(_fault_base_cell(cell), noise=0.0)
+    tau_all, p_all = (np.asarray(a) for a in sim0.exact_all())
+    frontier = float(tau_all[p_all <= base.p_budget].max())
+    tau_target = round(max(base.tau_target, FAULT_TAU_TIGHTEN * frontier), 3)
+    return RegimeTargets(
+        mode=base.mode, tau_target=tau_target, p_budget=base.p_budget
     )
 
 

@@ -354,10 +354,100 @@ _DRIFT_CELL = {
     },
 }
 
+# Fault-injection cell (schema v6): hardened CORAL vs the non-hardened
+# ablation through byte-identical fault realizations, both scored on the
+# fault-free twin against the fault-free oracle. ``failed_runs`` counts
+# per-seed runs that ended infeasible or violating — the committed gate
+# is hardened score ≥ 0.85 with zero power violations while the ablation
+# has ``failed_runs == n_runs`` on every cell.
+_FAULT_VARIANT = {
+    "type": "object",
+    "required": [
+        "score",
+        "score_min",
+        "score_floor",
+        "violation_rate",
+        "power_violations",
+        "n_runs",
+        "failed_runs",
+        "fallback_intervals",
+        "rejected_samples",
+        "tau",
+        "power",
+        "config",
+    ],
+    "properties": {
+        "score": {"type": "number", "minimum": 0},
+        "score_min": {"type": "number", "minimum": 0},
+        "score_floor": {"type": "number", "minimum": 0},
+        "violation_rate": {"type": "number", "minimum": 0, "maximum": 1},
+        "power_violations": {"type": "integer", "minimum": 0},
+        "n_runs": {"type": "integer", "minimum": 1},
+        "failed_runs": {"type": "integer", "minimum": 0},
+        "fallback_intervals": {"type": "number", "minimum": 0},
+        "rejected_samples": {"type": "number", "minimum": 0},
+        "tau": {"type": "number", "minimum": 0},
+        "power": {"type": "number", "minimum": 0},
+        "config": {"type": ["array", "null"], "items": {"type": "number"}},
+    },
+}
+
+_FAULT_CELL = {
+    "type": "object",
+    "required": [
+        "device",
+        "model",
+        "workload",
+        "regime",
+        "mode",
+        "tau_target",
+        "p_budget",
+        "space_size",
+        "fault",
+        "oracle",
+        "hardened",
+        "ablation",
+    ],
+    "properties": {
+        "device": {"type": "string"},
+        "model": {"type": "string"},
+        "workload": {"type": "string"},
+        "regime": {"type": "string"},
+        "mode": {"type": "string", "enum": ["dual", "throughput"]},
+        "tau_target": {"type": "number", "minimum": 0},
+        "p_budget": {"type": ["number", "null"]},
+        "space_size": {"type": "integer", "minimum": 1},
+        "fault": {
+            "type": "object",
+            "required": ["schedule", "base_regime", "intervals"],
+            "properties": {
+                "schedule": {"type": "string"},
+                "base_regime": {"type": "string"},
+                "intervals": {"type": "integer", "minimum": 1},
+            },
+        },
+        "oracle": {
+            "type": "object",
+            "required": ["config", "tau", "power", "measurements"],
+            "properties": {
+                "config": {
+                    "type": ["array", "null"],
+                    "items": {"type": "number"},
+                },
+                "tau": {"type": "number", "minimum": 0},
+                "power": {"type": "number", "minimum": 0},
+                "measurements": {"type": "integer", "minimum": 0},
+            },
+        },
+        "hardened": _FAULT_VARIANT,
+        "ablation": _FAULT_VARIANT,
+    },
+}
+
 # Per-phase wall-clock accounting (since schema v3; offload phases added
-# in v4, cotenant in v5): where a matrix run spends its time. All fields
-# in seconds; the ``*_episodes_s`` entries are the episode *control
-# loops* — the part the compiled engine replaces.
+# in v4, cotenant in v5, fault in v6): where a matrix run spends its
+# time. All fields in seconds; the ``*_episodes_s`` entries are the
+# episode *control loops* — the part the compiled engine replaces.
 _WALL_CLOCK_KEYS = (
     "static_prep_s",
     "static_episodes_s",
@@ -368,6 +458,9 @@ _WALL_CLOCK_KEYS = (
     "cotenant_prep_s",
     "cotenant_episodes_s",
     "cotenant_score_s",
+    "fault_prep_s",
+    "fault_episodes_s",
+    "fault_score_s",
     "drift_prep_s",
     "drift_episodes_s",
     "drift_score_s",
@@ -428,10 +521,11 @@ MATRIX_SCHEMA = {
         "drift_cells",
         "offload_cells",
         "cotenant_cells",
+        "fault_cells",
         "summary",
     ],
     "properties": {
-        "schema_version": {"type": "integer", "enum": [5]},
+        "schema_version": {"type": "integer", "enum": [6]},
         "regenerate": {"type": "string"},
         "quick": {"type": "boolean"},
         "engine": {"type": "string", "enum": ["compiled", "scalar"]},
@@ -452,6 +546,7 @@ MATRIX_SCHEMA = {
                 "regimes",
                 "offload_regimes",
                 "cotenant_regimes",
+                "fault_regimes",
             ],
             "properties": {
                 **{
@@ -472,6 +567,11 @@ MATRIX_SCHEMA = {
                     "type": "array",
                     "items": {"type": "string"},
                 },
+                # empty when the run carries no fault-injection cells
+                "fault_regimes": {
+                    "type": "array",
+                    "items": {"type": "string"},
+                },
             },
         },
         "cells": {"type": "array", "items": _CELL, "minItems": 1},
@@ -481,6 +581,8 @@ MATRIX_SCHEMA = {
         "offload_cells": {"type": "array", "items": _OFFLOAD_CELL},
         # empty when the run carries no multi-tenant co-inference cells
         "cotenant_cells": {"type": "array", "items": _COTENANT_CELL},
+        # empty when the run carries no fault-injection cells
+        "fault_cells": {"type": "array", "items": _FAULT_CELL},
         "summary": {
             "type": "object",
             "required": [
@@ -501,6 +603,10 @@ MATRIX_SCHEMA = {
                 "min_cotenant_score",
                 "cotenant_power_violations",
                 "cotenant_feasible_baselines",
+                "n_fault_cells",
+                "min_fault_hardened_score",
+                "fault_power_violations",
+                "fault_feasible_ablations",
             ],
             "properties": {
                 "n_cells": {"type": "integer", "minimum": 1},
@@ -526,6 +632,13 @@ MATRIX_SCHEMA = {
                     "minimum": 0,
                 },
                 "cotenant_feasible_baselines": {
+                    "type": "integer",
+                    "minimum": 0,
+                },
+                "n_fault_cells": {"type": "integer", "minimum": 0},
+                "min_fault_hardened_score": {"type": ["number", "null"]},
+                "fault_power_violations": {"type": "integer", "minimum": 0},
+                "fault_feasible_ablations": {
                     "type": "integer",
                     "minimum": 0,
                 },

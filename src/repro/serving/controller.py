@@ -48,11 +48,14 @@ against ``tau_target=1.0`` plus the one shared power cap.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Tuple
+import json
+import time
+from typing import Callable, Iterable, List, Optional, Tuple
 
 from repro.core.baselines import Outcome
 from repro.core.coral import CORAL, joint_headroom
 from repro.core.drift import DriftConfig
+from repro.core.faults import RobustConfig
 from repro.core.space import (
     CONCURRENCY_DIM,
     OFFLOAD_DIM,
@@ -116,6 +119,8 @@ class ServingController:
         drift: Optional[DriftConfig] = None,
         network=None,  # NetworkProfile: attach the edge↔pod uplink
         pod_time_per_token: float = 2e-3,
+        robust: Optional[RobustConfig] = None,
+        sleeper: Optional[Callable[[float], None]] = None,
     ):
         # An injected device profile supplies both the knob grid and the
         # power-model constants — the serving loop tunes whatever target
@@ -143,6 +148,14 @@ class ServingController:
         self.drift_schedule = drift_schedule
         if drift is None and drift_schedule is not None:
             drift = DriftConfig()
+        # Hardened mode (EXPERIMENTS.md §Fault tolerance): the optimizer
+        # gets the robust ingest gate + telemetry watchdog, and the
+        # controller verifies every knob it enacts by readback with
+        # bounded retry + exponential backoff. ``sleeper`` is the backoff
+        # clock — injectable so tests run without wall-clock sleeps.
+        self.robust = robust
+        self._sleep = sleeper if sleeper is not None else time.sleep
+        self.actuation_failures = 0  # knobs still mismatched after retries
         self.opt = CORAL(
             space,
             tau_target,
@@ -151,6 +164,7 @@ class ServingController:
             seed=seed,
             mode=mode,
             drift=drift,
+            robust=robust,
         )
         self.records: List[IntervalRecord] = []
         self._pending: Optional[Request] = None
@@ -217,6 +231,30 @@ class ServingController:
             # multi-tenant traces pre-stamp each request's tenant; None
             # lands on the default ring (single-tenant traces unchanged)
             self.runtime.submit(r, r.tenant)
+
+    def _verified_apply(self, setter, getter, value, matches=None) -> bool:
+        """Enact one knob and verify it took, by readback.
+
+        Actuation on a real board can silently stick (a driver rejects
+        the write, firmware holds the old value); attributing the
+        interval's residual to the *commanded* config then poisons the
+        correlation window. Write → read back → compare; on mismatch
+        retry up to ``robust.act_retries`` times with exponential backoff
+        (base ``robust.backoff_s``). Non-robust controllers keep the old
+        fire-and-forget single write. Returns whether the readback
+        matched; exhausted retries are counted in
+        ``actuation_failures`` and the caller attributes to the readback.
+        """
+        ok = matches if matches is not None else (lambda got: got == value)
+        tries = 1 + (self.robust.act_retries if self.robust is not None else 0)
+        for attempt in range(tries):
+            setter(value)
+            if ok(getter()):
+                return True
+            if self.robust is not None and attempt + 1 < tries:
+                self._sleep(self.robust.backoff_s * (2.0 ** attempt))
+        self.actuation_failures += 1
+        return False
 
     def control_step(self) -> IntervalRecord:
         """One control interval: propose → apply (concurrency for real,
@@ -292,14 +330,37 @@ class ServingController:
             power = power + state.static_inflation * (
                 self.hw.p_idle_chip + self.hw.p_host_idle
             )
+        attr_cfg = cfg
         if self._slot_indices:
             # slot dim k drives tenant ring k, in registration order
-            self.runtime.set_slot_allocation(
-                dict(zip(self.runtime.tenants, slots))
+            alloc = dict(zip(self.runtime.tenants, slots))
+            self._verified_apply(
+                self.runtime.set_slot_allocation,
+                lambda: {
+                    n: r.slot_budget for n, r in self.runtime.tenants.items()
+                },
+                alloc,
             )
         elif self._c_index is not None:
-            self.runtime.set_concurrency(int(cfg[self._c_index]))
-        self.runtime.set_rate_scale(dev_rel)
+            want_c = max(1, int(cfg[self._c_index]))
+            applied = self._verified_apply(
+                self.runtime.set_concurrency,
+                lambda: self.runtime.concurrency,
+                want_c,
+            )
+            if self.robust is not None and not applied:
+                # the knob is stuck: attribute this interval's measurement
+                # to the config actually in force, not the commanded one
+                attr_cfg = list(cfg)
+                attr_cfg[self._c_index] = float(self.runtime.concurrency)
+                attr_cfg = tuple(attr_cfg)
+        want_scale = min(1.0, max(0.05, float(dev_rel)))
+        self._verified_apply(
+            self.runtime.set_rate_scale,
+            lambda: self.runtime.rate_scale,
+            dev_rel,
+            matches=lambda got: abs(got - want_scale) < 1e-9,
+        )
         self._submit_until(self.runtime.now() + self.interval_s)
         m = self.runtime.run_for(self.interval_s, idle_wait=True)
         tenant_taus = None
@@ -319,9 +380,9 @@ class ServingController:
             )
         else:
             tau = m["throughput_tok_s"]  # pacing already enacted DVFS
-        r = self.opt.record(cfg, tau, power)
+        r = self.opt.record(attr_cfg, tau, power)
         rec = IntervalRecord(
-            config=tuple(cfg),
+            config=tuple(attr_cfg),
             tau=tau,
             power=power,
             reward=r,
@@ -344,6 +405,51 @@ class ServingController:
         if res is None:
             return Outcome(None, 0.0, 0.0, iters), self.records
         return Outcome(res.config, res.tau, res.power, iters), self.records
+
+    # ------------------------------------------------------------------
+    # checkpoint / restore (crash recovery)
+    # ------------------------------------------------------------------
+    def checkpoint(self) -> dict:
+        """JSON-serializable controller state: the full optimizer
+        checkpoint (``CORAL.to_checkpoint`` — anchors, history, monitor,
+        RNG bit-state) plus the interval ledger. A restarted controller
+        built with the same constructor arguments resumes byte-identical
+        after ``restore`` (tests/test_faults.py pins the equivalence);
+        ``docs/ARCHITECTURE.md`` §Checkpoint format documents the layout.
+        """
+        return {
+            "version": 1,
+            "optimizer": self.opt.to_checkpoint(),
+            "records": [dataclasses.asdict(r) for r in self.records],
+            "actuation_failures": self.actuation_failures,
+        }
+
+    def restore(self, ckpt: dict) -> None:
+        """Resume from a ``checkpoint()`` dict (or its JSON round-trip)."""
+        if ckpt.get("version") != 1:
+            raise ValueError(
+                f"unknown controller checkpoint version {ckpt.get('version')!r}"
+            )
+        self.opt.restore(ckpt["optimizer"])
+        self.records = [
+            IntervalRecord(**{**r, "config": tuple(r["config"])})
+            for r in ckpt["records"]
+        ]
+        self.actuation_failures = int(ckpt["actuation_failures"])
+
+    def save_checkpoint(self, path) -> None:
+        """``checkpoint()`` to a file, written atomically (tmp + rename)
+        so a crash mid-write can never leave a torn checkpoint behind."""
+        import os
+
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.checkpoint(), f)
+        os.replace(tmp, path)
+
+    def restore_checkpoint(self, path) -> None:
+        with open(path) as f:
+            self.restore(json.load(f))
 
 
 def build_serving_record(

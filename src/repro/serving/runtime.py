@@ -288,11 +288,14 @@ class ServingRuntime:
         # ---- edge↔pod offload seam (attach_pod / set_offload) ----------
         self.pod_network = None  # repro.device.network.NetworkProfile
         self.pod_time_per_token = 0.0
+        self.pod_timeout_s = 30.0  # shipped-request deadline (attach_pod)
+        self.pod_outage = False  # link down: responses lost until cleared
         self.offload_frac = 0.0
         self._route_acc = 0.0  # deterministic fractional-routing carry
-        # (done_at, request, owning ring)
-        self._pod_inflight: List[Tuple[float, Request, _TenantRing]] = []
+        # (done_at, deadline, request, owning ring)
+        self._pod_inflight: List[Tuple[float, float, Request, _TenantRing]] = []
         self.pod_tokens_total = 0
+        self.pod_expired = 0  # shipped requests that hit the deadline
         self.network_energy_j = 0.0
 
     # ------------------------------------------------------------------
@@ -406,14 +409,31 @@ class ServingRuntime:
     # ------------------------------------------------------------------
     # edge↔pod offload seam
     # ------------------------------------------------------------------
-    def attach_pod(self, network, pod_time_per_token: float = 2e-3) -> None:
+    def attach_pod(
+        self,
+        network,
+        pod_time_per_token: float = 2e-3,
+        timeout_s: float = 30.0,
+    ) -> None:
         """Attach the uplink to the pod slice: ``network`` is a
         ``repro.device.network.NetworkProfile`` and ``pod_time_per_token``
         the slice's per-token decode service time. Until ``set_offload``
         raises the route fraction above 0, everything still runs locally.
+        ``timeout_s`` is the per-request response deadline: a shipped
+        request whose reply has not landed by then is re-admitted to its
+        owning ring and served locally (no silent leak).
         """
         self.pod_network = network
         self.pod_time_per_token = float(pod_time_per_token)
+        self.pod_timeout_s = float(timeout_s)
+
+    def set_pod_outage(self, active: bool) -> None:
+        """Live fault knob: while the link is down, no new request ships
+        (admissions run locally) and responses stop arriving — in-flight
+        shipped requests sit until their deadline and are then re-admitted
+        to the edge. Clearing the outage before a request's deadline lets
+        its response land normally."""
+        self.pod_outage = bool(active)
 
     def set_offload(self, frac: float) -> None:
         """Live placement knob: the fraction of *admitted* requests routed
@@ -442,7 +462,8 @@ class ServingRuntime:
         self.network_energy_j += n_tok * net.ship_energy_per_token_j
         self.pod_tokens_total += int(r.max_new_tokens)
         r.started = t
-        self._pod_inflight.append((done_at, r, ring))
+        deadline = t + max(self.pod_timeout_s, done_at - t)
+        self._pod_inflight.append((done_at, deadline, r, ring))
 
     def _route_admissible(self, t: float) -> bool:
         """Admission-time placement: walk every ring's pool once, decide
@@ -452,7 +473,10 @@ class ServingRuntime:
         later knob changes affect later arrivals only. One accumulator
         across tenants: the route fraction is a property of the shared
         uplink, not of any one ring."""
-        if self.pod_network is None:
+        if self.pod_network is None or self.pod_outage:
+            # link absent or down: requests stay route=None and the rings
+            # serve them locally; the accumulator holds so the route
+            # fraction resumes cleanly when the link returns
             return False
         now = self.now()
         progressed = False
@@ -481,22 +505,41 @@ class ServingRuntime:
 
     def _poll_pod(self, t: float) -> bool:
         """Retire pod-routed requests whose (network + remote service)
-        completion time has passed. Completion is token-accounted like a
-        local retire — on the owning tenant's ring — so windowed
-        throughput/latency metrics see pod traffic, including its network
-        latency, on equal terms."""
+        completion time has passed, and expire the ones whose deadline
+        has. Completion is token-accounted like a local retire — on the
+        owning tenant's ring — so windowed throughput/latency metrics see
+        pod traffic, including its network latency, on equal terms.
+        Expired requests (deadline passed with no response — a dead link
+        or a stalled pod) are re-admitted to their owning ring pinned to
+        the edge route, so nothing the runtime accepted is ever leaked."""
         if not self._pod_inflight:
             return False
-        due = [e for e in self._pod_inflight if e[0] <= t]
-        if not due:
+        keep: List[Tuple[float, float, Request, _TenantRing]] = []
+        due: List[Tuple[float, float, Request, _TenantRing]] = []
+        expired: List[Tuple[float, float, Request, _TenantRing]] = []
+        for e in self._pod_inflight:
+            if not self.pod_outage and e[0] <= t:
+                due.append(e)
+            elif e[1] <= t:
+                expired.append(e)
+            else:
+                keep.append(e)
+        if not due and not expired:
             return False
-        self._pod_inflight = [e for e in self._pod_inflight if e[0] > t]
-        for done_at, r, ring in sorted(due, key=lambda e: e[0]):
+        self._pod_inflight = keep
+        for done_at, _, r, ring in sorted(due, key=lambda e: e[0]):
             r.finished = done_at
             r.tokens = [0] * int(r.max_new_tokens)
             r.output = np.zeros(int(r.max_new_tokens), np.int32)
             ring.done.append(r)
             ring._record(done_at, int(r.max_new_tokens))
+        for _, _, r, ring in expired:
+            # pin to the edge so the retry cannot bounce back to a dead
+            # link — the local ring serves it on its next pass
+            r.route = "edge"
+            r.tokens = []
+            self.pod_expired += 1
+            ring.waiting.append(r)
         return True
 
     # ------------------------------------------------------------------
@@ -545,6 +588,7 @@ class ServingRuntime:
                 for ring in self.tenants.values()
             ),
             "pod_inflight": len(self._pod_inflight),
+            "pod_expired": self.pod_expired,
             "network_energy_j": self.network_energy_j,
             "interval_s": span,
         }

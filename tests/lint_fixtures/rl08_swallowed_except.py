@@ -1,0 +1,45 @@
+"""Golden RL08 fixture: a bare ``except:`` plus two typed handlers that
+silently swallow the failure, and one compliant handler that must NOT
+be flagged."""
+
+
+def poll_bare(devices):
+    out = []
+    for d in devices:
+        try:
+            out.append(d.read())
+        except:  # RL08: bare except hides faults from the ledger
+            out.append(None)
+    return out
+
+
+def poll_swallow_pass(devices):
+    out = []
+    for d in devices:
+        try:
+            out.append(d.read())
+        except TimeoutError:  # RL08: failure vanishes without a trace
+            pass
+    return out
+
+
+def poll_swallow_continue(devices):
+    out = []
+    for d in devices:
+        try:
+            out.append(d.read())
+        except (OSError, ValueError):  # RL08: same, via continue
+            continue
+    return out
+
+
+def poll_accounted(devices, counters):
+    # compliant: the failure is counted, so the watchdog can see it
+    out = []
+    for d in devices:
+        try:
+            out.append(d.read())
+        except TimeoutError:
+            counters["timeouts"] += 1
+            out.append(None)
+    return out

@@ -26,6 +26,7 @@ def _codes(violations):
         ("rl04_dtype.py", "RL04", 2),  # missing dtype + float64
         ("rl05_interpret.py", "RL05", 3),  # default, env read, backend
         ("rl07_docstring.py", "RL07", 2),  # missing doc + stale shape
+        ("rl08_swallowed_except.py", "RL08", 3),  # bare + pass + continue
     ],
 )
 def test_rule_fires_on_golden_fixture(fixture, code, min_hits):

@@ -17,6 +17,9 @@ without installing jax. Rule catalog:
   RL07  docstring contract — public format-zone functions without a
         docstring, and docstring shape specs that disagree with the
         *_CONTRACT tables in core/contracts.py
+  RL08  swallowed except — bare ``except:`` or handlers whose body is
+        only pass/.../continue in src/repro/serving/, which hide
+        faults from the degradation ledger
 
 Escape hatch: ``# repro-lint: disable=RLxx — reason`` on the flagged
 line (or the comment line directly above it). The reason is mandatory;

@@ -15,7 +15,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro-lint",
         description="JAX-aware static analysis for the repro engine "
-        "invariants (rules RL01-RL07; see EXPERIMENTS.md §Static analysis)",
+        "invariants (rules RL01-RL08; see EXPERIMENTS.md §Static analysis)",
     )
     ap.add_argument("paths", nargs="+", help="files or directories to lint")
     ap.add_argument(

@@ -828,6 +828,69 @@ class DocstringContractRule(Rule):
                     )
 
 
+# --------------------------------------------------------------- RL08
+class SwallowedExceptRule(Rule):
+    """Serving-layer fault paths must not swallow failures silently.
+
+    The fault-tolerance contract (docs/ARCHITECTURE.md §Fault seam)
+    routes every runtime/controller failure through an *accounted*
+    path: the MAD gate rejects it, the watchdog counts it, or the
+    actuation verifier retries it. A ``try`` that catches and discards
+    an exception removes the failure from all three ledgers — the
+    fleet then scores a faulted twin as healthy. Two shapes flagged:
+
+    - bare ``except:`` (also ``except BaseException:``) — catches
+      KeyboardInterrupt/SystemExit and hides programming errors;
+    - any handler whose body is only ``pass``/``...``/``continue`` —
+      typed or not, the failure vanishes without a log line, counter
+      bump, or re-raise.
+
+    Scoped to src/repro/serving/ where the degradation ledger lives.
+    """
+
+    code = "RL08"
+    name = "swallowed-except"
+
+    def in_scope(self, relpath: str) -> bool:
+        return relpath.startswith("src/repro/serving/")
+
+    @staticmethod
+    def _is_bare(handler: ast.ExceptHandler) -> bool:
+        if handler.type is None:
+            return True
+        return _dotted(handler.type) in ("BaseException", "builtins.BaseException")
+
+    @staticmethod
+    def _is_swallowed(handler: ast.ExceptHandler) -> bool:
+        for stmt in handler.body:
+            if isinstance(stmt, (ast.Pass, ast.Continue)):
+                continue
+            if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+                continue  # `...` or a stray string literal
+            return False
+        return True
+
+    def check(self, mod: Module, ctx: Context) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if self._is_bare(node):
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    "bare `except:` in the serving layer hides faults from "
+                    "the degradation ledger",
+                    "catch the specific exception and count/log/re-raise it",
+                )
+            elif self._is_swallowed(node):
+                yield Violation(
+                    mod.relpath, node.lineno, node.col_offset + 1, self.code,
+                    "exception handler silently swallows the failure "
+                    "(body is only pass/.../continue)",
+                    "bump a fault counter, log, or re-raise so the watchdog "
+                    "and actuation verifier can see it",
+                )
+
+
 ALL_RULES: Tuple[Rule, ...] = (
     TracedBranchRule(),
     DonatedUseRule(),
@@ -836,4 +899,5 @@ ALL_RULES: Tuple[Rule, ...] = (
     InterpretRoutingRule(),
     DeadModuleRule(),
     DocstringContractRule(),
+    SwallowedExceptRule(),
 )
